@@ -1,0 +1,164 @@
+"""Paper-table benchmarks: Tables 2/3/4 + Fig 2 + ablation.
+
+Each function returns rows of (name, value, derived) and prints CSV via
+run.py.  The 68-trial evaluation (17 x 4 classes, paper §3) is shared.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.baselines import make_baseline
+from repro.core.engine import EngineConfig
+from repro.core.taxonomy import CauseClass
+from repro.sim.scenario import (
+    accuracy_by_class, confusion_matrix, mean_accuracy, rca_time_by_class,
+    run_eval,
+)
+
+CLASSES = [CauseClass.IO, CauseClass.CPU, CauseClass.NIC, CauseClass.GPU]
+_CACHE: Dict[int, list] = {}
+
+
+def _records(seed: int = 0, n: int = 17):
+    key = (seed, n)
+    if key not in _CACHE:
+        dgs = [make_baseline(x) for x in ["ours", "b1", "b2", "b3"]]
+        _CACHE[key] = run_eval(dgs, n_per_class=n, seed=seed)
+    return _CACHE[key]
+
+
+def table3_diagnostic() -> List[Tuple[str, float, str]]:
+    """Paper Table 3: per-class accuracy (%) and Time-to-RCA (s)."""
+    recs = _records()
+    acc = accuracy_by_class(recs, "ours")
+    rca = rca_time_by_class(recs, "ours")
+    paper_acc = {CauseClass.IO: 86.2, CauseClass.CPU: 82.9,
+                 CauseClass.NIC: 88.1, CauseClass.GPU: 81.4}
+    paper_rca = {CauseClass.IO: 6.5, CauseClass.CPU: 6.2,
+                 CauseClass.NIC: 7.5, CauseClass.GPU: 8.1}
+    rows = []
+    for c in CLASSES:
+        rows.append((f"table3/acc_pct/{c.value}", 100 * acc.get(c, 0.0),
+                     f"paper={paper_acc[c]}"))
+        rows.append((f"table3/rca_s/{c.value}", rca.get(c, float('nan')),
+                     f"paper={paper_rca[c]}"))
+    rows.append(("table3/acc_pct/mean", 100 * mean_accuracy(recs, "ours"),
+                 "paper=84.7"))
+    return rows
+
+
+def table2_comparison() -> List[Tuple[str, float, str]]:
+    """Paper Table 2: accuracy / RCA-time / overhead per approach."""
+    recs = _records()
+    paper = {"ours": (84.7, "6-8s"), "B1-gpu-centric": (62.8, "45-60s"),
+             "B2-cluster": (68.3, "30-50s"),
+             "B3-deep-profiling": (82.1, "10-15s")}
+    rows = []
+    for dg in ("ours", "B1-gpu-centric", "B2-cluster", "B3-deep-profiling"):
+        acc = 100 * mean_accuracy(recs, dg)
+        rcas = [r.time_to_rca for r in recs
+                if r.diagnoser == dg and r.time_to_rca is not None
+                and r.pred == r.truth]
+        rows.append((f"table2/acc_pct/{dg}", acc, f"paper={paper[dg][0]}"))
+        rows.append((f"table2/rca_s/{dg}",
+                     float(np.mean(rcas)) if rcas else float("nan"),
+                     f"paper={paper[dg][1]}"))
+    # overheads: B1-B3 literature-reported; ours measured by fig2 benchmark
+    for dg, oh in (("B1-gpu-centric", 0.3), ("B2-cluster", 2.3),
+                   ("B3-deep-profiling", 1.1)):
+        rows.append((f"table2/overhead_pct/{dg}", oh, "literature"))
+    return rows
+
+
+def table4_confusion() -> List[Tuple[str, float, str]]:
+    """Paper Table 4: 4x4 confusion (+unknown) row-normalized."""
+    recs = _records()
+    classes, cm = confusion_matrix(recs, "ours")
+    paper = np.array([[86.2, 5.9, 4.4, 3.5], [7.1, 82.9, 6.2, 3.8],
+                      [3.5, 4.7, 88.1, 3.7], [7.6, 6.3, 4.7, 81.4]])
+    rows = []
+    names = [c.value for c in classes] + ["unknown"]
+    for i, ci in enumerate(classes):
+        for j in range(5):
+            ref = f"paper={paper[i][j]}" if j < 4 else "paper=0"
+            rows.append((f"table4/{ci.value}->{names[j]}",
+                         100 * cm[i, j], ref))
+    return rows
+
+
+def fig2_overhead(rates=(10.0, 25.0, 50.0, 100.0, 250.0),
+                  duration_s: float = 8.0) -> List[Tuple[str, float, str]]:
+    """Fig 2a: measured collector CPU overhead + detection latency vs rate.
+
+    Overhead is MEASURED live: a real ProcCollector sampled at each rate on
+    this host, busy-fraction accounted by the agent.  Detection latency is
+    the evaluation mean at that sampling rate (window mechanics dominate).
+    """
+    from repro.telemetry.agent import TelemetryAgent
+    from repro.telemetry.collectors import ProcCollector
+    rows = []
+    for hz in rates:
+        agent = TelemetryAgent([ProcCollector()], rate_hz=hz,
+                               history_s=duration_s + 1)
+        agent.run_background()
+        time.sleep(duration_s)
+        stats = agent.stop()
+        rows.append((f"fig2a/overhead_pct/{int(hz)}hz",
+                     100 * stats.overhead_frac,
+                     "paper=1.21@100hz (measured live)"))
+    # detection latency at 100 Hz: measured directly from the engine's
+    # detection events over strong confuser-free trials
+    from repro.core.engine import CorrelationEngine
+    from repro.sim.scenario import make_trial
+    lats = []
+    for i, cls in enumerate(("io", "cpu", "nic", "gpu") * 4):
+        t = make_trial(9000 + i, cls, intensity=1.5, confuser_prob=0.0)
+        ds = CorrelationEngine().process(t.ts, t.data, t.channels)
+        if ds:
+            lats.append(ds[0].event.t_detect - t.t_on)
+    rows.append(("fig2a/detect_latency_s/100hz",
+                 float(np.mean(lats)) if lats else float("nan"),
+                 "paper~5.1s (measured from injection to detection)"))
+    return rows
+
+
+def ablation_probes() -> List[Tuple[str, float, str]]:
+    """§4 ablation: remove a probe's channels, re-evaluate its class.
+
+    Our channel registry is denser than the paper's probe set (five NET
+    channels vs their NET_RX + queue length), so we ablate the channels a
+    given probe *produces* while keeping the group's other probes — the
+    same degradation semantics as the paper's "remove one probe group"
+    (their groups retained redundant evidence from adjacent probes).
+    """
+    from repro.core.baselines import OurDiagnoser
+    from repro.sim.scenario import run_eval as _run
+    from repro.telemetry.schema import METRIC_REGISTRY
+
+    probes = {
+        "net_rx": (["net_rx_softirq", "net_tx_softirq", "nic_rx_bytes",
+                    "nic_tx_bytes"],
+                   CauseClass.NIC, 7.0),
+        "net_group": (["net_rx_softirq", "net_tx_softirq", "nic_rx_bytes",
+                       "nic_tx_bytes", "nic_rx_drops"],
+                      CauseClass.NIC, 7.0),
+        "sched": (["cpu_util_other", "involuntary_ctx"],
+                  CauseClass.CPU, 5.0),
+        "blkio": (["blkio_write_bytes", "blkio_read_bytes", "iowait_frac"],
+                  CauseClass.IO, 5.0),
+    }
+    base = _records()
+    rows = []
+    for gname, (drop, cls, paper_delta) in probes.items():
+        allowed = [m for m in METRIC_REGISTRY if m not in drop]
+        dg = OurDiagnoser(evidence_channels=allowed)
+        dg.name = f"ours-minus-{gname}"
+        recs = _run([dg], n_per_class=17, seed=0)
+        a0 = accuracy_by_class(base, "ours")[cls]
+        a1 = accuracy_by_class(recs, dg.name).get(cls, 0.0)
+        rows.append((f"ablation/drop_{gname}/delta_{cls.value}_pts",
+                     100 * (a0 - a1), f"paper~-{paper_delta}pts"))
+    return rows

@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: wall time of the fleet-scale correlation math.
+
+CPU wall-times here are indicative only (TPU is the target); the benchmark
+exists to (a) exercise the jit'd wrappers end-to-end, (b) record the
+fleet-scale problem sizes from DESIGN.md §6, and (c) compare kernel
+(interpret) vs pure-jnp reference paths for parity.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spike.ops import spike_scores
+from repro.kernels.welford.ops import welford
+from repro.kernels.xcorr.ops import lagged_xcorr
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_microbench() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+    # fleet-scale: 256 hosts x 16 metrics x 512-sample windows
+    B, M, N, K = 256, 16, 512, 20
+    L = jnp.asarray(rng.standard_normal((B, N)), jnp.float32)
+    Mx = jnp.asarray(rng.standard_normal((B, M, N)), jnp.float32)
+    us_ref = _time(lambda a, b: lagged_xcorr(a, b, K, use_kernel=False), L, Mx)
+    rows.append((f"kernel/xcorr_ref_jnp/{B}x{M}x{N}", us_ref,
+                 f"{2 * B * M * (2 * K + 1) * N / 1e6:.1f}MFLOP"))
+    us_k = _time(lambda a, b: lagged_xcorr(a, b, K, use_kernel=True,
+                                           interpret=True), L, Mx)
+    rows.append((f"kernel/xcorr_pallas_interp/{B}x{M}x{N}", us_k,
+                 "interpret-mode (CPU correctness path)"))
+    W = jnp.asarray(rng.standard_normal((B, M, N)), jnp.float32)
+    Bs = jnp.asarray(rng.standard_normal((B, M, 4 * N)), jnp.float32)
+    rows.append((f"kernel/spike_ref_jnp/{B}x{M}", _time(
+        lambda a, b: spike_scores(a, b, use_kernel=False), W, Bs), ""))
+    rows.append((f"kernel/welford_ref_jnp/{B}x{M}", _time(
+        lambda a: welford(a, use_kernel=False), Bs), ""))
+    return rows

@@ -1,0 +1,181 @@
+"""Roofline analysis from recorded dry-run artifacts (EXPERIMENTS §Roofline).
+
+Terms per (arch x shape x mesh), all PER-DEVICE (the dry-run records the
+SPMD-partitioned program of one participant):
+
+  compute_s    = flops / 197e12          (bf16 peak per v5e chip)
+  memory_s     = hbm_bytes / 819e9       (HBM bandwidth)
+  collective_s = coll_bytes / 50e9       (per-link ICI; conservative 1 link)
+
+MODEL_FLOPS uses 6*N_active*D for training (D = global tokens) and
+2*N_active*D for prefill/decode; the ratio MODEL_FLOPS / (flops * chips)
+shows how much compiled compute is "useful" (remat recompute, attention
+quadratic terms and dispatch overhead push it below 1).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+SHAPE_MODE = {"train_4k": "train", "prefill_32k": "prefill",
+              "decode_32k": "decode", "long_500k": "decode"}
+
+
+def load_records() -> List[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def analytic_memory_bytes(rec: dict) -> float:
+    """Per-device HBM traffic model from the cell's buffer inventory.
+
+    The instruction-level traffic sum (hbm_bytes, recorded) is a 100-200x
+    overcount on this backend: CPU fusion boundaries materialize tensors a
+    TPU keeps in VMEM/registers.  The roofline memory term instead counts
+    the traffic a well-fused TPU program must do:
+
+      train  : 3 passes over gathered weights (fwd, remat recompute, bwd)
+               + grad write/read (fp32) + optimizer state read/write
+               + remat carry stack write+read + logits fp32
+      prefill: 1 pass over gathered weights + KV-cache write + activations
+      decode : 1 pass over gathered weights + KV-cache/state read+write
+    """
+    import sys
+    from pathlib import Path as _P
+    sys.path.insert(0, str(_P(__file__).parents[1] / "src"))
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec.get("n_chips", 256)
+    tp = 16
+    dp = chips // tp
+    n_total = rec.get("params", 0)
+    B, S = shape.global_batch, shape.seq_len
+    B_loc = max(B // dp, 1)
+
+    gathered = 2.0 * n_total / tp          # bf16 weights seen per device
+    if shape.kind == "train":
+        mb = max(cfg.train_microbatch, 1)
+        weights = 3.0 * gathered * mb      # fwd + remat + bwd, per microstep
+        opt = (4.0 + 8.0 + 8.0) * n_total / chips   # grad fp32 + m,v r/w
+        # remat carry stack (sequence-parallel residual stream)
+        e = cfg.d_model
+        act = 2.0 * cfg.n_layers * (B_loc / mb) * (S / tp) * e * 2.0 * mb
+        logits = 4.0 * (B_loc / mb) * S * cfg.vocab_padded / tp * 2.0 * mb
+        return weights + opt + act + logits
+    if shape.kind == "prefill":
+        kv = (2.0 * cfg.n_layers * B_loc
+              * min(S, cfg.window or S) * max(cfg.n_kv, 1) * cfg.head_dim
+              * 2.0)
+        act = 2.0 * cfg.n_layers * B_loc * (S / tp) * cfg.d_model * 2.0
+        return gathered + kv + act
+    # decode: one token step
+    if cfg.family == "ssm":
+        state = (cfg.n_layers * B_loc * cfg.ssm_nheads * cfg.ssm_headdim
+                 * cfg.ssm_state * 4.0) * 2.0
+    else:
+        s_eff = min(S, cfg.window) if cfg.window else S
+        state = (2.0 * cfg.n_layers * B_loc * s_eff / tp
+                 * max(cfg.n_kv, 1) * cfg.head_dim * 2.0) * 1.5
+        if cfg.family == "hybrid":
+            state = state * (1 / 8) + (cfg.n_layers * 7 / 8) * B_loc * \
+                cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4.0 * 2.0
+    return gathered + state
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec["flops"]
+    hbm = analytic_memory_bytes(rec)
+    coll = sum(rec["collective_bytes"].values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll / LINK_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])[0]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n_active = rec.get("params_active", rec.get("params", 0))
+    mult = 6 if SHAPE_MODE[rec["shape"]] == "train" else 2
+    model_flops = mult * n_active * tokens
+    chips = rec.get("n_chips", 256)
+    useful = model_flops / (flops * chips) if flops else 0.0
+    step_s = max(compute_s, memory_s, coll_s)
+    mfu = (model_flops / chips / step_s) / PEAK_FLOPS if step_s > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dom,
+        "model_flops": model_flops, "useful_ratio": useful,
+        "roofline_mfu": mfu,
+        "temp_gb": rec["mem"]["temp_bytes"] / 1e9,
+        "fits_16g": rec["mem"]["temp_bytes"] / 1e9 < 16.0,
+    }
+
+
+def roofline_rows() -> List[Tuple[str, float, str]]:
+    out = []
+    for rec in load_records():
+        if rec.get("tag"):
+            continue
+        r = roofline_row(rec)
+        key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        if r is None:
+            if rec.get("status") == "skip":
+                out.append((f"roofline/{key}/skip", 0.0,
+                            rec.get("reason", "")[:60]))
+            continue
+        out.append((f"roofline/{key}/dominant_{r['dominant']}",
+                    max(r["compute_s"], r["memory_s"], r["collective_s"]),
+                    f"mfu={r['roofline_mfu']:.3f}"))
+    return out
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table body."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | roofline-MFU | temp GB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records():
+        if rec["mesh"] != mesh or rec.get("tag"):
+            continue
+        if rec.get("status") == "skip":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skip | — | — | — | — |")
+            continue
+        r = roofline_row(rec)
+        if r is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | FAIL | | | | "
+                         f"| | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_mfu']:.3f} | {r['temp_gb']:.1f} | "
+            f"{'yes' if r['fits_16g'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))
+    print()
+    print(markdown_table("2x16x16"))

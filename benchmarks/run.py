@@ -1,0 +1,53 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table3,fig2a
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows):
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated section prefixes to run")
+    args = ap.parse_args()
+    want = [s for s in args.only.split(",") if s]
+
+    def on(name: str) -> bool:
+        return not want or any(name.startswith(w) for w in want)
+
+    t0 = time.time()
+    print("name,value,derived")
+
+    from benchmarks import diagnostics, kernelbench, roofline
+
+    if on("table3"):
+        _emit(diagnostics.table3_diagnostic())
+    if on("table2"):
+        _emit(diagnostics.table2_comparison())
+    if on("table4"):
+        _emit(diagnostics.table4_confusion())
+    if on("fig2a"):
+        _emit(diagnostics.fig2_overhead())
+    if on("ablation"):
+        _emit(diagnostics.ablation_probes())
+    if on("kernel"):
+        _emit(kernelbench.kernel_microbench())
+    if on("roofline"):
+        _emit(roofline.roofline_rows())
+
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

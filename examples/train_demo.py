@@ -1,0 +1,46 @@
+"""Train a ~100M-param model for a few hundred steps with the telemetry
+agent live, then print the loss curve and measured agent overhead.
+
+    PYTHONPATH=src python examples/train_demo.py --steps 300
+
+Fault-tolerance drill: add --fail-at 150, rerun the same command and watch
+it resume from the checkpoint.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import argparse
+
+from repro.checkpoint import FailureInjector
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig, SyntheticLMPipeline
+from repro.models.registry import build_model
+from repro.monitor.fleet import FleetMonitor
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import OptConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--fail-at", type=int, default=None)
+args = ap.parse_args()
+
+# ~100M params: mamba2-370m backbone narrowed
+cfg = get_config("mamba2-370m").replace(n_layers=12, d_model=768,
+                                        vocab=8192)
+model = build_model(cfg)
+print(f"model: {cfg.name} variant, {model.param_count()/1e6:.0f}M params")
+
+pipe = SyntheticLMPipeline(PipelineConfig(batch=8, seq_len=128,
+                                          vocab=cfg.vocab, seed=0))
+inj = FailureInjector(args.fail_at) if args.fail_at else None
+res = run_training(model, pipe, OptConfig(lr=3e-4, warmup_steps=50),
+                   LoopConfig(steps=args.steps, checkpoint_every=50,
+                              ckpt_dir="/tmp/repro_train_demo"),
+                   injector=inj, monitor=FleetMonitor())
+
+n = max(len(res.losses) // 10, 1)
+for i in range(0, len(res.losses), n):
+    chunk = res.losses[i:i + n]
+    print(f"step {res.final_step - len(res.losses) + i + 1:4d}  "
+          f"loss {sum(chunk)/len(chunk):.4f}")
+print(f"telemetry overhead: {res.telemetry_overhead_pct:.2f}% "
+      f"(paper: 1.21% @ 100 Hz)")

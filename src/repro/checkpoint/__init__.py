@@ -1,0 +1,5 @@
+"""Checkpointing + failure handling."""
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.fault import FailureInjector, resume_or_init
+
+__all__ = ["Checkpointer", "FailureInjector", "resume_or_init"]

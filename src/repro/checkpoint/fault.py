@@ -1,0 +1,45 @@
+"""Failure injection + restart logic (fault-tolerance drill machinery)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class FailureInjector:
+    """Deterministically injects a simulated process death at a given step.
+
+    Raising ``SystemExit``-like failure mid-training (after the step, before
+    or during the checkpoint write, per ``phase``) exercises the restart
+    path the way a preempted TPU host would.
+    """
+
+    def __init__(self, fail_at_step: Optional[int] = None,
+                 phase: str = "after_step"):
+        assert phase in ("after_step", "mid_checkpoint")
+        self.fail_at_step = fail_at_step
+        self.phase = phase
+        self.fired = False
+
+    def maybe_fail(self, step: int, phase: str) -> None:
+        if (self.fail_at_step is not None and step == self.fail_at_step
+                and phase == self.phase and not self.fired):
+            self.fired = True
+            raise RuntimeError(
+                f"[injected] simulated host failure at step {step} ({phase})")
+
+
+def resume_or_init(ckpt: Checkpointer, init_fn: Callable[[], Any],
+                   ) -> Tuple[Any, int]:
+    """Restore the latest checkpoint if one exists, else initialize.
+
+    Returns (state, start_step).  The training loop calls this on every
+    (re)start — the whole restart story is: run the same command again.
+    """
+    latest = ckpt.latest_step()
+    state = init_fn()
+    if latest is None:
+        return state, 0
+    restored = ckpt.restore(state, latest)
+    return restored, latest + 1

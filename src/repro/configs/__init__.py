@@ -1,0 +1,72 @@
+"""Architecture configs (exact assigned sizes) + input-shape sets.
+
+``get_config(name)`` -> full ArchConfig; ``get_config(name, smoke=True)``
+-> the reduced same-family variant used by CPU smoke tests.  ``SHAPES``
+defines the four assigned input-shape cells; ``cells_for(cfg)`` yields the
+eligible (arch x shape) combinations (long_500k only for sub-quadratic
+archs — see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.models.common import ArchConfig
+
+_MODULES = {
+    "grok-1-314b": "grok_1_314b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "starcoder2-7b": "starcoder2_7b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "yi-9b": "yi_9b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "whisper-base": "whisper_base",
+    "mamba2-370m": "mamba2_370m",
+    "paligemma-3b": "paligemma_3b",
+}
+
+ALL_CONFIGS: Dict[str, str] = dict(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def eligible(cfg: ArchConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+def cells_for(name: str) -> Iterator[Tuple[ArchConfig, ShapeCell, bool, str]]:
+    cfg = get_config(name)
+    for shape in SHAPES.values():
+        ok, why = eligible(cfg, shape)
+        yield cfg, shape, ok, why
+
+
+def all_cells() -> Iterator[Tuple[str, str, bool, str]]:
+    for name in ALL_CONFIGS:
+        for cfg, shape, ok, why in cells_for(name):
+            yield name, shape.name, ok, why

@@ -1,0 +1,12 @@
+"""grok-1 314B: 64L MoE 8e top-2, GQA 48H/kv8. [hf:xai-org/grok-1; unverified]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144,
+    n_heads=48, n_kv=8, d_ff=32768, vocab=131072, head_dim=128,
+    act="swiglu", n_experts=8, top_k=2, moe_every=1,
+    train_microbatch=4,
+    source="hf:xai-org/grok-1")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, n_heads=4, n_kv=2,
+                       d_ff=256, vocab=512, head_dim=32, n_experts=4)

@@ -1,0 +1,15 @@
+"""Jamba v0.1 52B: Mamba+attention 1:7 hybrid, MoE 16e top-2 every 2nd layer.
+[arXiv:2403.19887; hf].  SSM sublayer follows our Mamba-2/SSD formulation
+(DESIGN.md notes the Mamba-1 -> SSD substitution; sizes preserved)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=65536, head_dim=128,
+    act="swiglu", n_experts=16, top_k=2,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1, ssm_conv=4,
+    sub_quadratic=True, source="arXiv:2403.19887")
+
+SMOKE = CONFIG.replace(n_layers=8, d_model=128, n_heads=4, n_kv=2,
+                       d_ff=256, vocab=512, head_dim=32, n_experts=4,
+                       ssm_state=16, ssm_headdim=16)

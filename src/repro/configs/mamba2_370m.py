@@ -1,0 +1,11 @@
+"""Mamba2-370m: attention-free SSD. [arXiv:2405.21060]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", family="ssm", n_layers=48, d_model=1024,
+    n_heads=0, n_kv=0, d_ff=0, vocab=50280, head_dim=0,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1, ssm_conv=4,
+    sub_quadratic=True, source="arXiv:2405.21060")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, ssm_state=16,
+                       ssm_headdim=16, vocab=512)

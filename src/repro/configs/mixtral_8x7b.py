@@ -1,0 +1,14 @@
+"""Mixtral 8x7B: 32L MoE 8e top-2, GQA, sliding-window attn. [arXiv:2401.04088]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=32000, head_dim=128,
+    act="swiglu", n_experts=8, top_k=2, moe_every=1, window=4096,
+    sub_quadratic=True,  # SWA bounds the KV working set
+    train_microbatch=2,
+    source="arXiv:2401.04088")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, n_heads=4, n_kv=2,
+                       d_ff=256, vocab=512, head_dim=32, n_experts=4,
+                       window=64)

@@ -1,0 +1,10 @@
+"""Nemotron-4 340B: 96L dense GQA kv8, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b", family="dense", n_layers=96, d_model=18432,
+    n_heads=96, n_kv=8, d_ff=73728, vocab=256000, head_dim=192,
+    act="squared_relu", source="arXiv:2402.16819")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=192, n_heads=4, n_kv=2,
+                       d_ff=384, vocab=512, head_dim=48)

@@ -1,0 +1,11 @@
+"""PaliGemma-3B: SigLIP frontend (stub patch embeddings) + gemma decoder,
+MQA kv=1, prefix-LM attention over image tokens. [arXiv:2407.07726; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b", family="vlm", n_layers=18, d_model=2048,
+    n_heads=8, n_kv=1, d_ff=16384, vocab=257216, head_dim=256,
+    act="geglu", n_img_tokens=256, source="arXiv:2407.07726")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, n_heads=4, n_kv=1,
+                       d_ff=256, vocab=512, head_dim=32, n_img_tokens=16)

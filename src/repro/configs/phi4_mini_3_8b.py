@@ -1,0 +1,10 @@
+"""phi-4-mini 3.8B: dense GQA kv8, RoPE, SwiGLU. [arXiv:2412.08905; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b", family="dense", n_layers=32, d_model=3072,
+    n_heads=24, n_kv=8, d_ff=8192, vocab=200064, head_dim=128,
+    act="swiglu", source="arXiv:2412.08905")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, n_heads=4, n_kv=2,
+                       d_ff=256, vocab=512, head_dim=32)

@@ -1,0 +1,10 @@
+"""StarCoder2-7B: dense GQA kv4, RoPE. [arXiv:2402.19173; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense", n_layers=32, d_model=4608,
+    n_heads=36, n_kv=4, d_ff=18432, vocab=49152, head_dim=128,
+    act="gelu", source="arXiv:2402.19173")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=144, n_heads=4, n_kv=2,
+                       d_ff=288, vocab=512, head_dim=36)

@@ -1,0 +1,11 @@
+"""Whisper-base: enc-dec, conv frontend stubbed (input_specs supplies frame
+embeddings). [arXiv:2212.04356]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="encdec", n_layers=6, d_model=512,
+    n_heads=8, n_kv=8, d_ff=2048, vocab=51865, head_dim=64,
+    act="gelu", n_enc_layers=6, source="arXiv:2212.04356")
+
+SMOKE = CONFIG.replace(n_layers=2, n_enc_layers=2, d_model=128, n_heads=4,
+                       n_kv=4, d_ff=256, vocab=512, head_dim=32)

@@ -1,0 +1,10 @@
+"""Yi-9B: llama-arch dense GQA kv4. [arXiv:2403.04652; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b", family="dense", n_layers=48, d_model=4096,
+    n_heads=32, n_kv=4, d_ff=11008, vocab=64000, head_dim=128,
+    act="swiglu", source="arXiv:2403.04652")
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=128, n_heads=4, n_kv=2,
+                       d_ff=256, vocab=512, head_dim=32)

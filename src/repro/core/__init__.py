@@ -1,0 +1,28 @@
+"""The paper's primary contribution: host-side spike detection + lagged
+cross-correlation root-cause analysis, as a composable library.
+
+Four-layer pipeline (paper Fig 1):
+  L1 collection      -> repro.telemetry
+  L2 sync + 3-sigma  -> repro.core.spike (+ telemetry.sync)
+  L3 lagged xcorr    -> repro.core.xcorr, repro.core.confidence
+  L4 ranked causes   -> repro.core.engine
+"""
+from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent, RankedCause
+from repro.core.spike import baseline_stats, spike_score, spike_scores_matrix, detect
+from repro.core.xcorr import lagged_xcorr, max_abs_xcorr, lagged_xcorr_batch
+from repro.core.confidence import combine_confidence, rank_causes
+from repro.core.engine import CorrelationEngine, EngineConfig
+from repro.core.baselines import (
+    Diagnoser, GPUCentricDiagnoser, ClusterAnalysisDiagnoser,
+    DeepProfilingDiagnoser, make_baseline,
+)
+
+__all__ = [
+    "CauseClass", "Diagnosis", "SpikeEvent", "RankedCause",
+    "baseline_stats", "spike_score", "spike_scores_matrix", "detect",
+    "lagged_xcorr", "max_abs_xcorr", "lagged_xcorr_batch",
+    "combine_confidence", "rank_causes",
+    "CorrelationEngine", "EngineConfig",
+    "Diagnoser", "GPUCentricDiagnoser", "ClusterAnalysisDiagnoser",
+    "DeepProfilingDiagnoser", "make_baseline",
+]

@@ -1,0 +1,74 @@
+"""Confidence scoring and cause ranking (paper §2.2, Layer 3->4).
+
+    conf_i = alpha * S_{M_i} + (1 - alpha) * c_i ,  alpha = 0.5
+
+S_{M_i} is the metric's own spike score (unbounded, in sigmas) and c_i its
+max-|lagged-correlation| (in [0,1]).  Following the paper we combine them
+linearly; to keep the two addends commensurate the spike score is squashed
+through a saturating map S -> S/(S+3) (3 = the detection threshold: a
+metric spiking exactly at threshold contributes 0.5).  The squash is
+monotone, so *rankings* match the raw formula whenever correlations agree;
+it only matters when trading S against c — which is exactly where an
+unbounded S would otherwise drown the correlation term.
+
+Cause-level ranking takes, for each cause class, the best-confidence
+metric among the channels that are evidence for it (taxonomy mapping).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.taxonomy import CauseClass, RankedCause
+from repro.telemetry.schema import METRIC_REGISTRY
+
+DEFAULT_ALPHA = 0.5
+_SQUASH_SCALE = 3.0  # = detection threshold
+
+
+def squash_spike(s: np.ndarray | float) -> np.ndarray | float:
+    """Monotone map sigmas -> [0,1): s/(s+3), clamped at 0 below baseline."""
+    s = np.maximum(s, 0.0)
+    return s / (s + _SQUASH_SCALE)
+
+
+def combine_confidence(spike_scores: np.ndarray, correlations: np.ndarray,
+                       alpha: float = DEFAULT_ALPHA) -> np.ndarray:
+    """conf_i = alpha * squash(S_i) + (1-alpha) * c_i, elementwise."""
+    s = squash_spike(np.asarray(spike_scores, dtype=np.float64))
+    c = np.clip(np.asarray(correlations, dtype=np.float64), 0.0, 1.0)
+    return alpha * s + (1.0 - alpha) * c
+
+
+def rank_causes(metric_names: Sequence[str], spike_scores: np.ndarray,
+                correlations: np.ndarray, lags_s: np.ndarray,
+                alpha: float = DEFAULT_ALPHA,
+                ) -> Tuple[List[RankedCause], Dict[str, Dict[str, float]]]:
+    """Aggregate metric-level evidence into ranked cause classes.
+
+    Returns (ranked causes desc by confidence, per-metric detail dict).
+    Metrics without a cause mapping (the latency channel itself) are skipped.
+    """
+    conf = combine_confidence(spike_scores, correlations, alpha)
+    per_metric: Dict[str, Dict[str, float]] = {}
+    best: Dict[CauseClass, RankedCause] = {}
+    for i, name in enumerate(metric_names):
+        spec = METRIC_REGISTRY.get(name)
+        cause = spec.cause if spec is not None else None
+        per_metric[name] = {
+            "spike": float(spike_scores[i]),
+            "corr": float(correlations[i]),
+            "conf": float(conf[i]),
+            "lag_s": float(lags_s[i]),
+        }
+        if cause is None:
+            continue
+        cur = best.get(cause)
+        if cur is None or conf[i] > cur.confidence:
+            best[cause] = RankedCause(
+                cause=cause, confidence=float(conf[i]), top_metric=name,
+                spike_score=float(spike_scores[i]),
+                correlation=float(correlations[i]), lag_s=float(lags_s[i]))
+    ranked = sorted(best.values(), key=lambda rc: -rc.confidence)
+    return ranked, per_metric

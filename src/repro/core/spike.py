@@ -1,0 +1,92 @@
+"""3-sigma spike detection (paper §2.2, Layer 2).
+
+    S_L = max_{t in W} (L(t) - mu_L) / sigma_L ,   spike iff S_L > 3
+
+where (mu_L, sigma_L) come from a baseline window W_b preceding the
+observation window W.  All functions are numpy (the per-host engine runs on
+the host CPU, exactly as the paper's agent does); the batched fleet-scale
+versions live in :mod:`repro.kernels.spike`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+DEFAULT_THRESHOLD = 3.0
+#: floor on sigma, relative to |mu| — a perfectly flat baseline must not turn
+#: numerical dust into spikes (sigma=0 would make any deviation infinite).
+SIGMA_FLOOR_REL = 1e-3
+SIGMA_FLOOR_ABS = 1e-9
+
+
+def baseline_stats(baseline: np.ndarray) -> Tuple[float, float]:
+    """(mu, sigma) over the baseline window, with a sigma floor."""
+    x = np.asarray(baseline, dtype=np.float64)
+    if x.size == 0:
+        return 0.0, SIGMA_FLOOR_ABS
+    mu = float(np.mean(x))
+    sigma = float(np.std(x))
+    floor = max(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * abs(mu))
+    return mu, max(sigma, floor)
+
+
+def spike_score(window: np.ndarray, mu: float, sigma: float) -> float:
+    """S = max_t (x(t) - mu)/sigma.  One-sided: spikes are increases.
+
+    (For metrics where the anomaly is a *drop* — e.g. dev_clock under
+    power-cap throttling — callers pass the negated series; see
+    `engine._oriented`.)"""
+    x = np.asarray(window, dtype=np.float64)
+    if x.size == 0:
+        return 0.0
+    return float(np.max((x - mu) / sigma))
+
+
+def detect(window: np.ndarray, baseline: np.ndarray,
+           threshold: float = DEFAULT_THRESHOLD,
+           persistence: float = 0.0,
+           ) -> Tuple[bool, float, Optional[int]]:
+    """Full Layer-2 check.
+
+    ``persistence`` is the fraction of window samples that must exceed the
+    threshold before a spike is declared.  0 reproduces the bare max-score
+    rule; the production default (engine) uses 0.4 so a single noise sample
+    cannot fire the detector — this is also what gives the paper's ~5 s
+    detection latency with a 5 s window: the anomaly must *fill* a good part
+    of the window before the boundary evaluation trips.
+
+    Returns ``(is_spike, score, onset_index)`` where ``onset_index`` is the
+    first sample in ``window`` whose z-score exceeds the threshold (the
+    engine converts it to an onset timestamp).
+    """
+    mu, sigma = baseline_stats(baseline)
+    x = np.asarray(window, dtype=np.float64)
+    if x.size == 0:
+        return False, 0.0, None
+    z = (x - mu) / sigma
+    score = float(np.max(z))
+    hot = z > threshold
+    frac = float(np.mean(hot))
+    if score > threshold and frac >= persistence:
+        onset = int(np.argmax(hot))
+        return True, score, onset
+    return False, score, None
+
+
+def spike_scores_matrix(windows: np.ndarray, baselines: np.ndarray) -> np.ndarray:
+    """Per-row spike scores for a (M, N) window matrix vs (M, Nb) baselines.
+
+    Used by Layer 3 to score every host metric M_i alongside the latency
+    channel.  Vectorized numpy; the Pallas kernel in kernels/spike mirrors
+    this for (hosts x metrics) batches.
+    """
+    w = np.asarray(windows, dtype=np.float64)
+    b = np.asarray(baselines, dtype=np.float64)
+    if w.ndim != 2 or b.ndim != 2 or w.shape[0] != b.shape[0]:
+        raise ValueError(f"shape mismatch: windows {w.shape} baselines {b.shape}")
+    mu = b.mean(axis=1)
+    sigma = b.std(axis=1)
+    floor = np.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * np.abs(mu))
+    sigma = np.maximum(sigma, floor)
+    return ((w - mu[:, None]) / sigma[:, None]).max(axis=1)

@@ -1,0 +1,65 @@
+"""Cause taxonomy and diagnosis result types (paper §2.2, Layer 4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+# Re-export the canonical CauseClass so core/ is self-contained for callers.
+from repro.telemetry.schema import CauseClass, SignalGroup, GROUP_TO_CAUSE
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikeEvent:
+    """A detected latency spike (Layer 2 output)."""
+
+    t_onset: float       # engine's estimate of onset (first sample with z>thr)
+    t_detect: float      # when the sliding window first crossed the threshold
+    score: float         # S_L = max_t (L(t)-mu)/sigma over the window
+    metric: str          # the latency channel that spiked
+
+    @property
+    def detection_latency(self) -> float:
+        return self.t_detect - self.t_onset
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedCause:
+    cause: CauseClass
+    confidence: float                 # conf = alpha*S + (1-alpha)*c, in [0,~)
+    top_metric: str                   # strongest evidence channel
+    spike_score: float                # S_{M_i} of that channel
+    correlation: float                # c_i = max_k |rho(k)|
+    lag_s: float                      # arg-max lag in seconds (M leads L if >0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnosis:
+    """Layer-4 output: ranked root causes for one spike event."""
+
+    event: SpikeEvent
+    ranked: List[RankedCause]
+    per_metric: Dict[str, Dict[str, float]]  # name -> {spike,corr,conf,lag_s}
+    t_rca: float                             # when the diagnosis completed
+    analysis_seconds: float                  # pure compute cost of L3+L4
+
+    @property
+    def top_cause(self) -> CauseClass:
+        return self.ranked[0].cause if self.ranked else CauseClass.UNKNOWN
+
+    @property
+    def time_to_rca(self) -> float:
+        """Paper's Time-to-RCA: spike onset -> diagnosis complete."""
+        return self.t_rca - self.event.t_onset
+
+    def summary(self) -> str:
+        lines = [
+            f"spike on {self.event.metric}: S={self.event.score:.2f} "
+            f"onset={self.event.t_onset:.2f}s detect={self.event.t_detect:.2f}s "
+            f"rca={self.t_rca:.2f}s (time-to-RCA {self.time_to_rca:.2f}s)",
+        ]
+        for i, rc in enumerate(self.ranked):
+            lines.append(
+                f"  #{i + 1} {rc.cause.value:<16} conf={rc.confidence:.3f} "
+                f"(S={rc.spike_score:.2f}, c={rc.correlation:.2f}, "
+                f"lag={rc.lag_s * 1e3:+.0f}ms via {rc.top_metric})")
+        return "\n".join(lines)

@@ -1,0 +1,86 @@
+"""Lagged cross-correlation (paper §2.2, Layer 3).
+
+    rho_{L,M_i}(k) = sum_{t=1}^{N-k} (L(t)-mu_L)(M_i(t+k)-mu_{M_i})
+                     / ( sqrt(sum (L-mu_L)^2) * sqrt(sum (M_i-mu_{M_i})^2) )
+
+    c_i = max_{|k| <= K} |rho_{L,M_i}(k)| ,  K = 20 samples @ 100 Hz (200 ms)
+
+Sign convention: positive k means the *metric leads the latency* by k
+samples — L(t) is paired with M_i(t - k), the metric's value k samples
+earlier.  A root cause should lead or be simultaneous, so the arg-max lag
+is diagnostic output too.
+
+Numpy here (per-host engine); the batched fleet path is
+:func:`lagged_xcorr_batch` which dispatches to the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+DEFAULT_MAX_LAG = 20  # samples @ 100 Hz -> +/-200 ms (paper)
+_EPS = 1e-12
+
+
+def _center_norm(x: np.ndarray) -> Tuple[np.ndarray, float]:
+    xc = x - x.mean()
+    return xc, float(np.sqrt(np.sum(xc * xc)) + _EPS)
+
+
+def lagged_xcorr(latency: np.ndarray, metrics: np.ndarray,
+                 max_lag: int = DEFAULT_MAX_LAG) -> np.ndarray:
+    """Correlation matrix rho[(M), 2K+1] for lags k = -K..K.
+
+    ``latency``: (N,), ``metrics``: (M, N).  rho[:, K+k] pairs L(t) with
+    M(t-k) (positive k: metric leads).  Edge handling follows the paper:
+    the overlapping region only, normalized by the full-window energies (so
+    |rho| can be < 1 even for a perfect lagged copy — consistent, and
+    monotone in alignment quality).
+    """
+    L = np.asarray(latency, dtype=np.float64)
+    M = np.asarray(metrics, dtype=np.float64)
+    if M.ndim == 1:
+        M = M[None, :]
+    n = L.shape[0]
+    if M.shape[1] != n:
+        raise ValueError(f"latency N={n} but metrics {M.shape}")
+    K = int(max_lag)
+    if K >= n:
+        raise ValueError(f"max_lag {K} must be < window length {n}")
+    Lc, Ln = _center_norm(L)
+    Mc = M - M.mean(axis=1, keepdims=True)
+    Mn = np.sqrt(np.sum(Mc * Mc, axis=1)) + _EPS
+    out = np.zeros((M.shape[0], 2 * K + 1), dtype=np.float64)
+    for k in range(-K, K + 1):
+        if k >= 0:
+            num = Mc[:, 0:n - k] @ Lc[k:n]
+        else:
+            num = Mc[:, -k:n] @ Lc[0:n + k]
+        out[:, K + k] = num / (Mn * Ln)
+    return out
+
+
+def max_abs_xcorr(latency: np.ndarray, metrics: np.ndarray,
+                  max_lag: int = DEFAULT_MAX_LAG,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """c_i = max_k |rho_i(k)| and the arg-max lag (in samples)."""
+    rho = lagged_xcorr(latency, metrics, max_lag)
+    k_idx = np.argmax(np.abs(rho), axis=1)
+    c = np.abs(rho)[np.arange(rho.shape[0]), k_idx]
+    lags = k_idx - max_lag
+    return c, lags
+
+
+def lagged_xcorr_batch(latency, metrics, max_lag: int = DEFAULT_MAX_LAG,
+                       use_kernel: bool = True):
+    """Fleet-scale batched version: latency (B, N), metrics (B, M, N).
+
+    Returns rho (B, M, 2K+1).  Dispatches to the Pallas TPU kernel when
+    requested (validated in interpret mode on CPU); otherwise the pure-jnp
+    reference.  This is the §5.1 multi-node path: one correlation engine
+    ingesting B hosts' windows at once.
+    """
+    from repro.kernels.xcorr import ops as _ops
+    return _ops.lagged_xcorr(latency, metrics, max_lag=max_lag,
+                             use_kernel=use_kernel)

@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from repro.data.pipeline import SyntheticLMPipeline, PipelineConfig
+
+__all__ = ["SyntheticLMPipeline", "PipelineConfig"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for batched spike scores (paper Layer 2, batched)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SIGMA_FLOOR_REL = 1e-3
+SIGMA_FLOOR_ABS = 1e-9
+
+
+def spike_scores_ref(windows: jax.Array, baselines: jax.Array) -> jax.Array:
+    """windows (B, M, N), baselines (B, M, Nb) -> scores (B, M) f32.
+
+    S = max_t (w(t) - mu_b) / max(sigma_b, floor)   (one-sided rise).
+    """
+    w = windows.astype(jnp.float32)
+    b = baselines.astype(jnp.float32)
+    mu = b.mean(axis=-1)
+    sd = b.std(axis=-1)
+    floor = jnp.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * jnp.abs(mu))
+    sd = jnp.maximum(sd, floor)
+    return ((w - mu[..., None]) / sd[..., None]).max(axis=-1)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for chunked Welford statistics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def welford_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, M, N) -> (mean (B, M), var (B, M)), population variance, f64-
+    free but numerically careful reference (two-pass)."""
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1)
+    var = jnp.mean((x - mu[..., None]) ** 2, axis=-1)
+    return mu, var

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: chunk-parallel Welford merge for streaming baselines.
+
+Maintaining per-channel baseline (mean, var) over long horizons needs a
+single-pass, numerically stable reduction (naive sum-of-squares cancels
+catastrophically in fp32 when mean >> std, which is routine for byte
+counters).  The kernel walks lane-aligned chunks of the window with a
+``fori_loop``, carrying (count, mean, M2) in VMEM scratch and merging each
+chunk with Chan's parallel-Welford update:
+
+  delta = mean_c - mean;  mean += delta * n_c / n;  M2 += M2_c + delta^2 *
+  n * n_c / (n + n_c)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+
+
+def _welford_kernel(n_valid: int, x_ref, mean_ref, var_ref):
+    """x_ref (1, bm, N); mean/var (1, bm)."""
+    N = x_ref.shape[-1]
+    bm = x_ref.shape[1]
+    n_chunks = N // CHUNK
+
+    def body(c, carry):
+        cnt, mean, m2 = carry                         # (bm,) each
+        lo = c * CHUNK
+        idx = lo + jax.lax.iota(jnp.int32, CHUNK)
+        valid = (idx < n_valid).astype(jnp.float32)   # (CHUNK,)
+        xc = jax.lax.dynamic_slice(x_ref[0], (0, lo), (bm, CHUNK))
+        n_c = jnp.sum(valid)
+        # chunk stats (masked)
+        safe = jnp.maximum(n_c, 1.0)
+        mean_c = jnp.sum(xc * valid[None, :], axis=1) / safe
+        d = (xc - mean_c[:, None]) * valid[None, :]
+        m2_c = jnp.sum(d * d, axis=1)
+        # Chan merge
+        tot = cnt + n_c
+        tot_safe = jnp.maximum(tot, 1.0)
+        delta = mean_c - mean
+        mean_new = mean + delta * n_c / tot_safe
+        m2_new = m2 + m2_c + delta * delta * cnt * n_c / tot_safe
+        # skip empty chunks
+        mean_new = jnp.where(n_c > 0, mean_new, mean)
+        m2_new = jnp.where(n_c > 0, m2_new, m2)
+        cnt_new = jnp.where(n_c > 0, tot, cnt)
+        return cnt_new, mean_new, m2_new
+
+    cnt0 = jnp.zeros((bm,), jnp.float32)
+    init = (cnt0, jnp.zeros((bm,), jnp.float32), jnp.zeros((bm,), jnp.float32))
+    cnt, mean, m2 = jax.lax.fori_loop(0, n_chunks, body, init)
+    mean_ref[0] = mean
+    var_ref[0] = m2 / jnp.maximum(cnt, 1.0)
+
+
+def welford_pallas(x: jax.Array, n_valid: int | None = None,
+                   block_m: int = 8, interpret: bool = True):
+    """x (B, M, N) -> (mean, var) each (B, M) f32.  N % 128 == 0."""
+    B, M, N = x.shape
+    if N % 128 != 0:
+        raise ValueError("N must be lane-aligned")
+    n_valid = N if n_valid is None else int(n_valid)
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)))
+    Mp = M + pad_m
+    mean, var = pl.pallas_call(
+        functools.partial(_welford_kernel, n_valid),
+        grid=(B, Mp // block_m),
+        in_specs=[pl.BlockSpec((1, block_m, N), lambda b, j: (b, j, 0))],
+        out_specs=[pl.BlockSpec((1, block_m), lambda b, j: (b, j)),
+                   pl.BlockSpec((1, block_m), lambda b, j: (b, j))],
+        out_shape=[jax.ShapeDtypeStruct((B, Mp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Mp), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return mean[:, :M], var[:, :M]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for batched lagged cross-correlation.
+
+rho[b, m, K+k] = sum_t Lc[b,t] Mc[b,m,t-k] / (||Lc[b]|| * ||Mc[b,m]||)
+for k in [-K, K] (positive k: metric leads), overlap-only numerator,
+full-window norms (paper §2.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def lagged_xcorr_ref(latency: jax.Array, metrics: jax.Array,
+                     max_lag: int) -> jax.Array:
+    """latency: (B, N) f32; metrics: (B, M, N) f32 -> (B, M, 2K+1) f32."""
+    L = latency.astype(jnp.float32)
+    Mx = metrics.astype(jnp.float32)
+    B, N = L.shape
+    K = int(max_lag)
+    Lc = L - L.mean(axis=-1, keepdims=True)
+    Mc = Mx - Mx.mean(axis=-1, keepdims=True)
+    Ln = jnp.sqrt(jnp.sum(Lc * Lc, axis=-1)) + _EPS          # (B,)
+    Mn = jnp.sqrt(jnp.sum(Mc * Mc, axis=-1)) + _EPS          # (B, M)
+
+    def one_lag(k):
+        # pair L(t) with M(t-k): positive k = metric leads
+        def pos():
+            return jnp.einsum("bt,bmt->bm", Lc[:, k:], Mc[:, :, :N - k])
+        def neg():
+            return jnp.einsum("bt,bmt->bm", Lc[:, :N + k], Mc[:, :, -k:])
+        return pos() if k >= 0 else neg()
+
+    cols = [one_lag(k) for k in range(-K, K + 1)]
+    rho = jnp.stack(cols, axis=-1)                            # (B, M, 2K+1)
+    return rho / (Mn[..., None] * Ln[:, None, None])
+
+
+def max_abs_xcorr_ref(latency, metrics, max_lag):
+    rho = lagged_xcorr_ref(latency, metrics, max_lag)
+    idx = jnp.argmax(jnp.abs(rho), axis=-1)
+    c = jnp.take_along_axis(jnp.abs(rho), idx[..., None], axis=-1)[..., 0]
+    return c, idx - max_lag

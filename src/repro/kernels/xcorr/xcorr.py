@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: batched lagged cross-correlation.
+
+Fleet-scale Layer 3 (DESIGN.md §6): one correlation engine ingests windows
+from B hosts x M metrics and correlates each against that host's latency
+window over lags |k| <= K.
+
+TPU mapping: for one (host, metric-block) grid cell we materialize the
+lag-shifted latency matrix Lshift (2K+1, N) in VMEM once (static slices of
+a zero-padded row), then the whole lag sweep is a single MXU matmul:
+
+    rho_block = Mc (bm, N) @ Lshift^T (N, 2K+1)
+
+with fp32 accumulation; means/norms are VPU row reductions.  Block shapes
+keep the working set ((bm + 2K + 2) * N * 4 bytes ~ 0.3 MB for bm=8,
+N=512, K=20) far under VMEM, and N is lane-aligned (multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+LAG_PAD = 64   # output lag dim padded for lane alignment
+
+
+def _xcorr_kernel(n_valid: int, max_lag: int,
+                  lat_ref, met_ref, out_ref):
+    """lat_ref: (1, N); met_ref: (1, bm, N); out_ref: (1, bm, LAG_PAD)."""
+    N = lat_ref.shape[-1]
+    K = max_lag
+    bm = met_ref.shape[1]
+
+    valid = (jax.lax.iota(jnp.int32, N) < n_valid).astype(jnp.float32)
+    nv = jnp.float32(n_valid)
+
+    L = lat_ref[0, :] * valid
+    Lmean = jnp.sum(L) / nv
+    Lc = (L - Lmean) * valid
+    Ln = jnp.sqrt(jnp.sum(Lc * Lc)) + _EPS
+
+    M = met_ref[0] * valid[None, :]                    # (bm, N)
+    Mmean = jnp.sum(M, axis=1, keepdims=True) / nv
+    Mc = (M - Mmean) * valid[None, :]
+    Mn = jnp.sqrt(jnp.sum(Mc * Mc, axis=1)) + _EPS     # (bm,)
+
+    # lag-shifted latency matrix via static slices of a zero-padded row
+    Lpad = jnp.zeros((N + 2 * K,), jnp.float32)
+    Lpad = jax.lax.dynamic_update_slice(Lpad, Lc, (K,))
+    rows = [jax.lax.dynamic_slice(Lpad, (k,), (N,)) for k in range(2 * K + 1)]
+    # row j pairs L(t) with M(t - (j - K)):  Lshift[j, t] = Lc[t + (j - K)]
+    # (positive lag = metric leads, matching core.xcorr and ref.py)
+    Lshift = jnp.stack(rows, axis=0)                   # (2K+1, N)
+
+    rho = jax.lax.dot_general(
+        Mc, Lshift, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (bm, 2K+1)
+    rho = rho / (Mn[:, None] * Ln)
+    out = jnp.zeros((bm, LAG_PAD), jnp.float32)
+    out = jax.lax.dynamic_update_slice(out, rho, (0, 0))
+    out_ref[0] = out
+
+
+def lagged_xcorr_pallas(latency: jax.Array, metrics: jax.Array,
+                        max_lag: int, n_valid: int | None = None,
+                        block_m: int = 8, interpret: bool = True,
+                        ) -> jax.Array:
+    """latency (B, N), metrics (B, M, N) -> rho (B, M, 2K+1), fp32.
+
+    N must be a multiple of 128 (pad + pass ``n_valid``).  ``interpret``
+    runs the kernel body on CPU (bit-accurate validation path); on TPU pass
+    interpret=False.
+    """
+    B, Mm, N = metrics.shape
+    if N % 128 != 0:
+        raise ValueError(f"N={N} must be lane-aligned (multiple of 128)")
+    n_valid = N if n_valid is None else int(n_valid)
+    K = int(max_lag)
+    pad_m = (-Mm) % block_m
+    if pad_m:
+        metrics = jnp.pad(metrics, ((0, 0), (0, pad_m), (0, 0)))
+    Mp = Mm + pad_m
+
+    out = pl.pallas_call(
+        functools.partial(_xcorr_kernel, n_valid, K),
+        grid=(B, Mp // block_m),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, block_m, N), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, LAG_PAD), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Mp, LAG_PAD), jnp.float32),
+        interpret=interpret,
+    )(latency.astype(jnp.float32), metrics.astype(jnp.float32))
+    return out[:, :Mm, : 2 * K + 1]

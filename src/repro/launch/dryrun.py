@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  REPRO_DRYRUN_DEVICES overrides for CI-scale runs.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this jits the real step function (train_step / prefill /
+decode_step) with in/out shardings derived from the model's logical axes,
+compiles it against the production mesh, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the compiled HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes), split by mesh axis where derivable.
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json so
+the roofline table (benchmarks/roofline.py) and EXPERIMENTS.md are built
+from recorded artifacts, not re-compiles.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in an HLO module text.
+
+    Counts the *output* shape bytes of each collective instruction (operand
+    and output sizes match for all-reduce/permute; for all-gather the output
+    is the gathered size — the wire cost; for reduce-scatter the input is
+    the wire cost, approximated by output * shards from replica groups).
+    """
+    dtype_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+        "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+        "f8e5m2": 1, "s16": 2, "u16": 2,
+    }
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    # instruction lines look like:  %x = bf16[16,512]{1,0} all-gather(...)
+    pat = re.compile(
+        r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(")
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        if dt not in dtype_bytes:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * dtype_bytes[dt]
+    return out
+
+
+def _sharding_trees(model, opt_cfg, mesh, rules):
+    from repro.parallel.sharding import param_pspecs
+    from repro.train.step import TrainState, train_state_logical
+    logical = train_state_logical(model, opt_cfg)
+    return TrainState(
+        step=jax.sharding.PartitionSpec(),
+        params=param_pspecs(logical["params"], rules),
+        opt=param_pspecs(logical["opt"], rules))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, quiet: bool = False,
+             overrides: dict | None = None) -> dict:
+    """``overrides`` (perf-lab knobs, EXPERIMENTS.md §Perf):
+      rules: {logical_axis: mesh_axis|None} patches onto make_rules output
+      remat: "none"|"full"|"dots"
+      microbatch: int
+      causal_triangle: bool  (static triangular attention schedule)
+      tag: str suffix for the result file
+    """
+    from repro.configs import SHAPES, eligible, get_config
+    from repro.launch.inputs import (
+        decode_inputs, prefill_inputs, train_batch_logical,
+        train_batch_specs,
+    )
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import build_model
+    from repro.parallel.ctx import mesh_context
+    from repro.parallel.sharding import (
+        logical_to_pspec, make_rules, param_pspecs,
+    )
+    from repro.train.optimizer import OptConfig
+    from repro.train.remat import remat_policy
+    from repro.train.step import build_train_step, init_train_state
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = eligible(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "skip", "reason": why}
+    if not ok:
+        if not quiet:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {why}")
+        if save:
+            _save(rec)
+        return rec
+
+    overrides = overrides or {}
+    if overrides.get("tag"):
+        rec["tag"] = overrides["tag"]
+    if overrides.get("causal_triangle"):
+        from repro.models import layers as _L
+        _L.CAUSAL_TRIANGLE = True
+    remat_mode = overrides.get("remat", "full")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh)
+    if overrides.get("rules"):
+        rules = dict(rules, **overrides["rules"])
+    if overrides.get("microbatch") is not None:
+        cfg = cfg.replace(train_microbatch=overrides["microbatch"])
+    model = build_model(cfg)
+    n_chips = mesh.devices.size
+    B, S = shape.global_batch, shape.seq_len
+    # small-batch decode cells (long_500k has B=1) cannot shard batch over
+    # the data axis — serve them batch-replicated, KV sharded over model
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    if B % dp != 0:
+        rules = dict(rules, act_batch=None)
+    opt_cfg = OptConfig(kind="adafactor" if cfg.d_model >= 8192 else "adamw")
+
+    P = jax.sharding.PartitionSpec
+    NS = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+
+    with mesh_context(mesh, rules), remat_policy(remat_mode):
+        if shape.kind == "train":
+            step = build_train_step(model, opt_cfg,
+                                    microbatch=cfg.train_microbatch)
+            state_abs = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.key(0), opt_cfg))
+            state_ps = _sharding_trees(model, opt_cfg, mesh, rules)
+            batch_abs = train_batch_specs(cfg, B, S)
+            batch_ps = {k: logical_to_pspec(v, rules)
+                        for k, v in train_batch_logical(cfg).items()}
+            state_sh = jax.tree.map(NS, state_ps,
+                                    is_leaf=lambda x: isinstance(x, P))
+            batch_sh = jax.tree.map(NS, batch_ps,
+                                    is_leaf=lambda x: isinstance(x, P))
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,)).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            params_abs = model.abstract_params()
+            params_ps = param_pspecs(model.param_logical, rules)
+            params_sh = jax.tree.map(NS, params_ps,
+                                     is_leaf=lambda x: isinstance(x, P))
+            batch_abs = prefill_inputs(model, B, S)
+            tok_sh = NS(logical_to_pspec(("act_batch", "act_seq"), rules))
+            emb_sh = NS(logical_to_pspec(
+                ("act_batch", "act_seq", "act_embed"), rules))
+            batch_sh = {k: (emb_sh if v.ndim == 3 else tok_sh)
+                        for k, v in batch_abs.items()}
+            if model.prefill is not None:
+                fn = lambda p, b: model.prefill(p, b, S)
+            else:
+                # ssm/hybrid prefill: full forward (state capture pending)
+                fn = lambda p, b: model.loss(p, dict(
+                    b, labels=b["tokens"], mask=None))[0]
+            lowered = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                              ).lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs = model.abstract_params()
+            params_ps = param_pspecs(model.param_logical, rules)
+            params_sh = jax.tree.map(NS, params_ps,
+                                     is_leaf=lambda x: isinstance(x, P))
+            token_abs, cache_abs = decode_inputs(model, B, S)
+            cache_ps = param_pspecs(model.cache_logical(), rules) \
+                if model.cache_logical else jax.tree.map(
+                    lambda _: P(), cache_abs)
+            cache_sh = jax.tree.map(NS, cache_ps,
+                                    is_leaf=lambda x: isinstance(x, P))
+            tok_sh = NS(logical_to_pspec(("act_batch", None), rules))
+            lowered = jax.jit(
+                model.decode,
+                in_shardings=(params_sh, tok_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,)).lower(params_abs, token_abs, cache_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from repro.launch.hlo_analysis import analyze
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    corrected = analyze(hlo_text)       # trip-count-corrected (see module doc)
+    coll = {k: float(v) for k, v in corrected.coll_bytes.items()}
+    rec.update({
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(corrected.flops),
+        "hbm_bytes": float(corrected.hbm_bytes),
+        "flops_xla_uncorrected": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "mem": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "collective_bytes": coll,
+        "params": model.param_count(),
+        "params_active": model.param_count(active_only=True),
+    })
+    if not quiet:
+        print(f"[dryrun] OK {arch} x {shape_name} x {mesh_name} "
+              f"flops={rec['flops']:.3e} "
+              f"coll={sum(coll.values()):.3e}B "
+              f"temp/dev={rec['mem']['temp_bytes']/1e9:.2f}GB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {mem}")
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: dict) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    if rec.get("tag"):
+        name = name.replace(".json", f"__{rec['tag']}.json")
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1))
+
+
+def main() -> int:
+    from repro.configs import ALL_CONFIGS, SHAPES
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ALL_CONFIGS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if not (args.all or args.arch):
+        ap.error("pass --arch or --all")
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                out = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and out.exists():
+                    st = json.loads(out.read_text()).get("status")
+                    if st in ("ok", "skip"):
+                        continue
+                try:
+                    run_cell(arch, shape, mp)
+                except Exception as e:  # record failures, keep sweeping
+                    traceback.print_exc()
+                    _save({"arch": arch, "shape": shape,
+                           "mesh": mesh_name, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}"})
+                    failures.append((arch, shape, mesh_name))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        return 1
+    print("[dryrun] all requested cells compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Abstract input construction for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no device allocation) for the function the cell lowers:
+train_step / prefill_step / decode_step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeCell
+from repro.models.common import ArchConfig
+from repro.models.registry import Model, build_model
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    batch = {
+        "tokens": _sds((B, S), I32),
+        "labels": _sds((B, S), I32),
+        "mask": _sds((B, S), F32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, S, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        batch["img"] = _sds((B, cfg.n_img_tokens, cfg.d_model), BF16)
+    return batch
+
+
+def train_batch_logical(cfg: ArchConfig) -> Dict[str, Any]:
+    tok = ("act_batch", "act_seq")
+    out = {"tokens": tok, "labels": tok, "mask": tok}
+    if cfg.family == "encdec":
+        out["frames"] = ("act_batch", "act_seq", "act_embed")
+    if cfg.family == "vlm":
+        out["img"] = ("act_batch", "act_seq", "act_embed")
+    return out
+
+
+def decode_inputs(model: Model, B: int, S: int) -> Tuple[Any, Any]:
+    """(token_sds, cache_sds) for a decode cell with context length S."""
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    token = _sds((B, 1), I32)
+    return token, cache
+
+
+def prefill_inputs(model: Model, B: int, S: int) -> Dict[str, Any]:
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model), BF16),
+                "tokens": _sds((B, S), I32)}
+    batch = {"tokens": _sds((B, S), I32)}
+    if cfg.family == "vlm":
+        batch["img"] = _sds((B, cfg.n_img_tokens, cfg.d_model), BF16)
+    return batch
+
+
+def make_real_batch(cfg: ArchConfig, B: int, S: int, seed: int = 0,
+                    vocab_cap: int | None = None) -> Dict[str, jax.Array]:
+    """Concrete random batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    v = vocab_cap or cfg.vocab
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, v, (B, S)), I32),
+        "labels": jnp.asarray(rng.integers(0, v, (B, S)), I32),
+        "mask": jnp.ones((B, S), F32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)) * 0.02, BF16)
+    if cfg.family == "vlm":
+        batch["img"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_img_tokens, cfg.d_model)) * 0.02,
+            BF16)
+    return batch

@@ -1,0 +1,19 @@
+"""Model zoo: the 10 assigned architectures as pure-JAX pytree models.
+
+Design rules (MaxText-style, framework-grade):
+  * parameters are nested dicts of jnp arrays; no framework objects;
+  * repeated layers are STACKED along a leading axis and applied with
+    ``jax.lax.scan`` so compile time is depth-independent;
+  * every parameter carries a *logical axis* spec (a tuple of names like
+    ("embed", "mlp")); :mod:`repro.parallel.sharding` maps logical names to
+    mesh axes, so the same model code runs on any mesh;
+  * abstract instantiation (``jax.eval_shape`` over init) powers the
+    multi-pod dry-run without allocating a single real weight.
+"""
+from repro.models.common import ArchConfig, ParamSpec, family_of
+from repro.models.registry import (
+    build_model, Model, list_architectures,
+)
+
+__all__ = ["ArchConfig", "ParamSpec", "family_of", "build_model", "Model",
+           "list_architectures"]

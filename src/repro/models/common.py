@@ -1,0 +1,158 @@
+"""Shared config dataclass, parameter-spec machinery, init helpers."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                # query heads (0 for attn-free)
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    act: str = "swiglu"         # swiglu | geglu | gelu | squared_relu
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1          # MoE replaces MLP on layers where i % every == 0
+    capacity_factor: float = 1.25
+    # --- attention extras ---
+    window: int = 0             # sliding-window size; 0 = full attention
+    qk_norm: bool = False
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    # --- hybrid (jamba): attention on layers where i % attn_every == offset
+    attn_every: int = 0
+    attn_offset: int = 0
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    # --- vlm (paligemma) ---
+    n_img_tokens: int = 0
+    # --- dtype policy ---
+    dtype: str = "bfloat16"     # activations/weights compute dtype
+    # --- training memory policy: grad-accumulation microbatches (0 = off).
+    # Big models need it to fit v5e HBM: it divides every activation term
+    # (remat carry stacks, MoE dispatch buffers) by the microbatch count at
+    # the cost of an fp32 grad accumulator (params-sized, ZeRO-sharded).
+    train_microbatch: int = 0
+    # --- bookkeeping ---
+    source: str = ""            # citation tag
+    sub_quadratic: bool = False  # eligible for long_500k
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so it shards on any mesh
+        axis we use (documented in DESIGN.md; pad rows are never targets)."""
+        return int(math.ceil(self.vocab / 256) * 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def family_of(cfg: ArchConfig) -> str:
+    return cfg.family
+
+
+# ---------------------------------------------------------------------------
+# parameter specs: shape + logical axes, used for init AND sharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim
+    init: str = "normal"                 # normal | zeros | ones | small_normal
+    scale: float = 1.0                   # stddev multiplier for normal init
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical}")
+
+
+def init_param(key: jax.Array, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    # fan-in scaled normal
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if len(spec.shape) >= 3:
+        fan_in = int(np.prod(spec.shape[:-1]))
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, spec.shape)).astype(dtype)
+
+
+def init_tree(key: jax.Array, specs: Dict[str, Any], dtype) -> Dict[str, Any]:
+    """Initialize a nested dict of ParamSpec into a pytree of arrays.
+
+    Keys get independent fold_in streams, so adding a parameter never
+    perturbs the initialization of existing ones (checkpoint stability).
+    """
+    out: Dict[str, Any] = {}
+    for name in sorted(specs):
+        sub = specs[name]
+        sub_key = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if isinstance(sub, dict):
+            out[name] = init_tree(sub_key, sub, dtype)
+        else:
+            out[name] = init_param(sub_key, sub, dtype)
+    return out
+
+
+def spec_tree_logical(specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Parallel pytree of logical-axis tuples (for sharding rules)."""
+    out: Dict[str, Any] = {}
+    for name, sub in specs.items():
+        if isinstance(sub, dict):
+            out[name] = spec_tree_logical(sub)
+        else:
+            out[name] = sub.logical
+    return out
+
+
+def stacked(spec: ParamSpec, n: int, axis_name: str = "layer") -> ParamSpec:
+    """Stack a per-layer spec along a leading scan axis."""
+    return ParamSpec((n,) + spec.shape, (axis_name,) + spec.logical,
+                     spec.init, spec.scale)
+
+
+def stack_specs(specs: Dict[str, Any], n: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for name, sub in specs.items():
+        if isinstance(sub, dict):
+            out[name] = stack_specs(sub, n)
+        else:
+            out[name] = stacked(sub, n)
+    return out

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, T_frames, d_model).  The backbone
+is faithful: learned positional embeddings, bidirectional encoder,
+causal decoder with cross-attention, GELU MLPs.  (We use bias-free
+projections and RMSNorm uniformly across the zoo — noted in DESIGN.md as a
+deviation from Whisper's LayerNorm+bias; it does not change shapes or
+sharding.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ArchConfig, ParamSpec, stack_specs
+from repro.parallel.ctx import shard_act
+
+# Learned-pos table sizes: cover the largest assigned shape (32k decode /
+# prefill).  Whisper itself caps at 1500 frames/448 tokens — the assignment
+# exercises the BACKBONE at these shapes, so the tables are sized to match.
+MAX_FRAMES = 32768
+MAX_TOKENS = 32768
+
+
+def enc_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": L.attn_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ln3": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": L.attn_specs(cfg),
+        "xattn": L.attn_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_pos": ParamSpec((MAX_FRAMES, cfg.d_model), ("pos", "embed"),
+                             scale=0.02),
+        "dec_pos": ParamSpec((MAX_TOKENS, cfg.d_model), ("pos", "embed"),
+                             scale=0.02),
+        "enc_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "enc_layers": stack_specs(enc_layer_specs(cfg), n_enc),
+        "dec_layers": stack_specs(dec_layer_specs(cfg), cfg.n_layers),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, E) stub-frontend embeddings."""
+    T = frames.shape[1]
+    x = frames + params["enc_pos"][:T][None].astype(frames.dtype)
+    sax = L.res_seq_axis(x.shape[1])
+    x = shard_act(x, "act_batch", sax, "act_embed")
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + L.attn_apply(lp["attn"], h, cfg, mask_mode="none",
+                             use_rope=False)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return shard_act(x, "act_batch", sax, "act_embed"), None
+
+    from repro.train.remat import maybe_remat
+    x, _ = jax.lax.scan(maybe_remat(body), x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ArchConfig, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    S = tokens.shape[1]
+    x = L.embed_lookup(params["embed"], tokens)
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    sax = L.res_seq_axis(S)
+    x = shard_act(x, "act_batch", sax, "act_embed")
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + L.attn_apply(lp["attn"], h, cfg, mask_mode="causal",
+                             use_rope=False)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.attn_apply(lp["xattn"], h, cfg, mask_mode="none",
+                             kv_override=(enc_out,), use_rope=False)
+        h = L.rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return shard_act(x, "act_batch", sax, "act_embed"), None
+
+    from repro.train.remat import maybe_remat
+    x, _ = jax.lax.scan(maybe_remat(body), x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], x)
+
+
+def encdec_loss(params, cfg: ArchConfig, batch):
+    enc = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], enc)
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss, {"xent": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill computes encoder output + cross-KV; decode streams tokens
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int, dtype=jnp.bfloat16):
+    Ld = cfg.n_layers
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "xk": jnp.zeros((Ld, batch, enc_len, cfg.n_kv, cfg.head_dim), dtype),
+        "xv": jnp.zeros((Ld, batch, enc_len, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_cache_logical():
+    kv = (None, "act_batch", "act_seq_mp", "act_kv_heads", "act_head_dim")
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}
+
+
+def encdec_prefill(params, cfg: ArchConfig, frames: jax.Array,
+                   batch: int, max_len: int):
+    """Encode audio; fill cross-KV; empty self cache."""
+    enc = encode(params, cfg, frames)
+
+    def xkv(lp):
+        k = jnp.einsum("bse,ehd->bshd", enc, lp["xattn"]["wk"])
+        v = jnp.einsum("bse,ehd->bshd", enc, lp["xattn"]["wv"])
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    xks, xvs = jax.vmap(xkv)(params["dec_layers"])
+    cache = encdec_init_cache(cfg, batch, max_len, enc.shape[1])
+    cache["xk"], cache["xv"] = xks, xvs
+    return enc, cache
+
+
+def encdec_decode_step(params, cfg: ArchConfig, token: jax.Array, cache):
+    x = L.embed_lookup(params["embed"], token)
+    pos = cache["pos"]
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], jnp.minimum(pos, MAX_TOKENS - 1), 1, 0
+    )[None].astype(x.dtype)[:, 0][:, None]
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, ck, cv = L.attn_decode(lp["attn"], h, ck, cv, pos, cfg,
+                                  use_rope=False)
+        x = x + y
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        q = jnp.einsum("bse,ehd->bshd", h, lp["xattn"]["wq"])
+        o = L.plain_attention(q, xk, xv, mask_mode="none")
+        x = x + jnp.einsum("bshd,hde->bse", o, lp["xattn"]["wo"])
+        h = L.rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return logits, new_cache

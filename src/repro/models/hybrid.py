@@ -1,0 +1,217 @@
+"""Jamba-style hybrid: Mamba + attention interleaved 1:7, MoE every 2nd layer.
+
+Layout (per Jamba paper): period-8 blocks, attention at in-block index 4,
+MoE replacing the dense MLP on odd in-block indices.  32 layers = 4 blocks;
+the 4 blocks are scanned (each block's 8 heterogeneous layers are unrolled
+inside the scan body — HLO grows with the block pattern, not with depth).
+No explicit positional embedding: the Mamba layers carry position.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import ssm as S_mod
+from repro.models.common import ArchConfig, ParamSpec, stack_specs
+from repro.parallel.ctx import shard_act
+
+PERIOD = 8
+ATTN_POS = 4
+
+
+def _is_attn(i: int, cfg: ArchConfig) -> bool:
+    return i % PERIOD == ATTN_POS
+
+
+def _is_moe(i: int, cfg: ArchConfig) -> bool:
+    return cfg.n_experts > 0 and (i % 2 == 1)
+
+
+def block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """One period-8 block; stacked n_layers//8 times."""
+    out: Dict[str, Any] = {}
+    for i in range(PERIOD):
+        s: Dict[str, Any] = {
+            "ln1": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+            "ln2": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        }
+        s["attn" if _is_attn(i, cfg) else "ssm"] = (
+            L.attn_specs(cfg) if _is_attn(i, cfg) else S.ssm_specs(cfg))
+        s["moe" if _is_moe(i, cfg) else "mlp"] = (
+            M.moe_specs(cfg) if _is_moe(i, cfg) else L.mlp_specs(cfg))
+        out[f"l{i}"] = s
+    return out
+
+
+def hybrid_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    assert cfg.n_layers % PERIOD == 0, "hybrid depth must be a multiple of 8"
+    return {
+        "embed": L.embed_specs(cfg),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "blocks": stack_specs(block_specs(cfg), cfg.n_layers // PERIOD),
+    }
+
+
+def _ffn(lp: Dict[str, Any], h: jax.Array, cfg: ArchConfig):
+    if "moe" in lp:
+        return M.moe_apply(lp["moe"], h, cfg)
+    return L.mlp_apply(lp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+def hybrid_forward(params: Dict[str, Any], cfg: ArchConfig,
+                   tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_lookup(params["embed"], tokens)
+    sax = L.res_seq_axis(x.shape[1])
+    x = shard_act(x, "act_batch", sax, "act_embed")
+
+    from repro.train.remat import maybe_remat
+
+    def one_layer(x, lp):
+        # nested remat: each of the 8 unrolled block layers recomputes
+        # independently on backward (MoE dispatch buffers are large)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if "attn" in lp:
+            x = x + L.attn_apply(lp["attn"], h, cfg, mask_mode="causal",
+                                 use_rope=False)
+        else:
+            x = x + S.ssm_apply(lp["ssm"], h, cfg)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, a = _ffn(lp, h, cfg)
+        x = shard_act(x + y, "act_batch", sax, "act_embed")
+        return x, a
+
+    def body(carry, bp):
+        x, aux = carry
+        for i in range(PERIOD):
+            x, a = maybe_remat(one_layer)(x, bp[f"l{i}"])
+            aux = aux + a
+        return (x, aux), None
+
+    from repro.train.remat import maybe_remat
+    (x, aux), _ = jax.lax.scan(maybe_remat(body),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, aux / max(cfg.n_layers, 1)
+
+
+def hybrid_loss(params, cfg: ArchConfig, batch):
+    logits, aux = hybrid_forward(params, cfg, batch["tokens"])
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    nb = cfg.n_layers // PERIOD
+    n_ssm = PERIOD - 1
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "k": jnp.zeros((nb, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((nb, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "conv": jnp.zeros((nb, n_ssm, batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((nb, n_ssm, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_cache_logical() -> Dict[str, Tuple]:
+    kv = (None, "act_batch", "act_seq_mp", "act_kv_heads", "act_head_dim")
+    return {
+        "k": kv, "v": kv,
+        "conv": (None, None, "act_batch", None, "act_ff"),
+        "ssm": (None, None, "act_batch", "act_ssm_heads", None, "act_state"),
+        "pos": (),
+    }
+
+
+def hybrid_prefill(params, cfg: ArchConfig, tokens: jax.Array,
+                   max_len: int):
+    """Prompt -> last logits + decode cache (attn KV capture + SSM states)."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens)
+    sax = L.res_seq_axis(S)
+    x = shard_act(x, "act_batch", sax, "act_embed")
+    cache_len = max(max_len, S)
+
+    def body(x, bp):
+        convs, hs = [], []
+        kc = vc = None
+        for i in range(PERIOD):
+            lp = bp[f"l{i}"]
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if "attn" in lp:
+                k = jnp.einsum("bse,ehd->bshd", h, lp["attn"]["wk"])
+                v = jnp.einsum("bse,ehd->bshd", h, lp["attn"]["wv"])
+                pad = cache_len - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))
+                             ).astype(jnp.bfloat16)
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))
+                             ).astype(jnp.bfloat16)
+                x = x + L.attn_apply(lp["attn"], h, cfg, mask_mode="causal",
+                                     use_rope=False)
+            else:
+                y, (conv, hstate) = S_mod.ssm_apply(lp["ssm"], h, cfg,
+                                                    return_state=True)
+                convs.append(conv.astype(jnp.bfloat16))
+                hs.append(hstate)
+                x = x + y
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, _ = _ffn(lp, h, cfg)
+            x = shard_act(x + y, "act_batch", sax, "act_embed")
+        return x, (kc, vc, jnp.stack(convs), jnp.stack(hs))
+
+    x, (ks, vs, convs, hs) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:])
+    cache = {"k": ks, "v": vs, "conv": convs, "ssm": hs,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, token: jax.Array,
+                       cache: Dict[str, jax.Array]):
+    x = L.embed_lookup(params["embed"], token)
+    pos = cache["pos"]
+
+    def body(x, xs):
+        bp, ck, cv, conv, ssm_st = xs
+        new_conv, new_ssm = [], []
+        si = 0
+        for i in range(PERIOD):
+            lp = bp[f"l{i}"]
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if "attn" in lp:
+                y, ck, cv = L.attn_decode(lp["attn"], h, ck, cv, pos, cfg,
+                                          use_rope=False)
+            else:
+                y, c_new, s_new = S.ssm_decode(lp["ssm"], h, conv[si],
+                                               ssm_st[si], cfg)
+                new_conv.append(c_new)
+                new_ssm.append(s_new)
+                si += 1
+            x = x + y
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, _ = _ffn(lp, h, cfg)
+            x = x + y
+        return x, (ck, cv, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+    x, (ks, vs, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
+                  cache["ssm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"k": ks, "v": vs, "conv": convs, "ssm": ssms,
+                    "pos": pos + 1}

@@ -1,0 +1,425 @@
+"""Core layers: norms, RoPE, attention (train/prefill/decode), MLPs.
+
+Attention is *chunked* (online-softmax over KV blocks, scanned over Q
+blocks) — the pure-JAX equivalent of flash attention.  Nothing ever
+materializes an (S, S) score matrix, which is what makes the 32k-prefill
+and 4k-train dry-runs fit in HBM without a custom kernel.  Masks (causal /
+sliding-window / prefix-LM) are evaluated per block pair from iota, never
+as a full matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ParamSpec
+from repro.parallel.ctx import shard_act
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 *statistics* but no full-size fp32 tensor.
+
+    The variance is accumulated in fp32 via einsum; only the (B, S, 1)
+    scale is fp32, cast to bf16 before the product.  Keeping every
+    (B, S, E) tensor bf16 matters beyond precision: XLA places resharding
+    collectives on whichever tensor in the elementwise chain it likes, and
+    a materialized fp32 x32 doubles the all-gather/all-reduce wire bytes
+    of the sequence-parallel residual stream (measured 2x on yi-9b train;
+    EXPERIMENTS.md §Perf iteration A3).
+    """
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    scale = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * scale * (1.0 + w)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w + b
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    ang = ang[..., None, :]                                    # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention parameter specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    E, H, KV, D = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((E, H, D), ("embed", "heads", None)),
+        "wk": ParamSpec((E, KV, D), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((E, KV, D), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, D, E), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((D,), (None,), init="zeros")
+        s["k_norm"] = ParamSpec((D,), (None,), init="zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# chunked attention core (online softmax)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+#: sequences at least this long use the sequence-parallel residual layout
+SEQ_PARALLEL_MIN = 1024
+
+
+def res_seq_axis(S: int) -> str:
+    """Logical axis for the residual stream's sequence dim."""
+    return "act_seq_res" if S >= SEQ_PARALLEL_MIN else "act_seq"
+
+
+def _block_mask(q_idx: jax.Array, k_idx: jax.Array, mask_mode: str,
+                window: int, prefix_len: int) -> jax.Array:
+    """(Qb, Kb) bool mask from absolute indices; True = attend."""
+    q = q_idx[:, None]
+    k = k_idx[None, :]
+    if mask_mode == "none":           # bidirectional (encoder / cross)
+        return jnp.ones((q_idx.shape[0], k_idx.shape[0]), dtype=bool)
+    allowed = k <= q                  # causal
+    if mask_mode == "window" and window > 0:
+        allowed &= (q - k) < window
+    if mask_mode == "prefix" and prefix_len > 0:
+        allowed |= (q < prefix_len) & (k < prefix_len)
+    return allowed
+
+
+#: perf knob (see EXPERIMENTS.md §Perf): static triangular schedule for
+#: causal attention — each Q chunk only scans its own prefix of KV chunks,
+#: halving attention FLOPs vs the rectangular schedule.
+CAUSAL_TRIANGLE = False
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask_mode: str = "causal", window: int = 0,
+                      prefix_len: int = 0, q_chunk: int = 1024,
+                      k_chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, D), k/v: (B, Sk, KV, D) with H a multiple of KV.
+
+    Online-softmax over KV chunks inside a scan over Q chunks; fp32
+    accumulators.  ``q_offset`` is the absolute position of q[0] (used at
+    decode/prefill-continuation time).  With ``CAUSAL_TRIANGLE`` the causal
+    path unrolls Q chunks and gives each a statically-shorter KV scan.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + k_chunk - 1) // k_chunk
+    # pad to multiples
+    pad_q = nq * q_chunk - Sq
+    pad_k = nk * k_chunk - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # (B, nq, qc, H, D) -> scan over nq
+    qs = q.reshape(B, nq, q_chunk, H, D)
+    ks = k.reshape(B, nk, k_chunk, KV, D)
+    vs = v.reshape(B, nk, k_chunk, KV, D)
+
+    k_valid = jnp.arange(nk * k_chunk) < Sk
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_body(carry, qi):
+        # rematerialized on backward: probability blocks are recomputed,
+        # never stored across chunks — the flash-attention memory contract
+        del carry
+        qb, q_index = qi           # (B, qc, H, D), scalar chunk id
+        q_abs = q_offset + q_index * q_chunk + jnp.arange(q_chunk)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_body(acc, ki):
+            m, l, o = acc          # (B,H,qc), (B,H,qc), (B,H,qc,D) fp32
+            kb, vb, k_index = ki
+            k_abs = k_index * k_chunk + jnp.arange(k_chunk)
+            mask = _block_mask(q_abs, k_abs, mask_mode, window, prefix_len)
+            mask &= k_valid[k_index * k_chunk + jnp.arange(k_chunk)][None, :]
+            # scores: (B, H, qc, kc)
+            kb_r = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+            vb_r = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb_r,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb_r.dtype), vb_r,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_body, (m0, l0, o0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-20)
+        out = (o / l[..., None]).swapaxes(1, 2)      # (B, qc, H, D)
+        return None, out.astype(qb.dtype)
+
+    if CAUSAL_TRIANGLE and mask_mode == "causal" and q_offset == 0 \
+            and Sq == Sk and window == 0:
+        # static triangular schedule: q chunk i attends to kv chunks 0..i,
+        # so total score-block work is nq(nq+1)/2 instead of nq*nk.
+        chunks = []
+        for i in range(nq):
+            def tri_body(carry, qi, _hi=i + 1):
+                qb, q_index = qi
+
+                @functools.partial(jax.checkpoint, prevent_cse=False)
+                def kv_body(acc, ki):
+                    m, l, o = acc
+                    kb, vb, k_index = ki
+                    k_abs = k_index * k_chunk + jnp.arange(k_chunk)
+                    q_abs = q_offset + q_index * q_chunk + jnp.arange(q_chunk)
+                    mask = _block_mask(q_abs, k_abs, "causal", 0, 0)
+                    mask &= k_valid[k_index * k_chunk
+                                    + jnp.arange(k_chunk)][None, :]
+                    kb_r = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+                    vb_r = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+                    s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb_r,
+                                   preferred_element_type=jnp.float32) * scale
+                    s = jnp.where(mask[None, None], s, NEG_INF)
+                    m_new = jnp.maximum(m, s.max(axis=-1))
+                    p = jnp.exp(s - m_new[..., None])
+                    corr = jnp.exp(m - m_new)
+                    l_new = l * corr + p.sum(axis=-1)
+                    pv = jnp.einsum("bhqk,bkhd->bhqd",
+                                    p.astype(vb_r.dtype), vb_r,
+                                    preferred_element_type=jnp.float32)
+                    return (m_new, l_new, o * corr[..., None] + pv), None
+
+                m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+                l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+                o0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+                (m, l, o), _ = jax.lax.scan(
+                    kv_body, (m0, l0, o0),
+                    (ks.swapaxes(0, 1)[:_hi], vs.swapaxes(0, 1)[:_hi],
+                     jnp.arange(_hi)))
+                l = jnp.maximum(l, 1e-20)
+                return None, (o / l[..., None]).swapaxes(1, 2).astype(qb.dtype)
+
+            _, oc = tri_body(None, (qs[:, i], jnp.asarray(i)))
+            chunks.append(oc)
+        out = jnp.concatenate(chunks, axis=1)
+        return out[:, :Sq]
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (qs.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.swapaxes(0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def plain_attention(q, k, v, mask_mode="causal", window=0, prefix_len=0,
+                    q_offset=0, kv_valid_len=None):
+    """Unchunked reference path (small seq / decode).  kv_valid_len masks
+    cache slots beyond the write frontier (scalar or (B,))."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    q_abs = q_offset + jnp.arange(Sq)
+    k_abs = jnp.arange(Sk)
+    mask = _block_mask(q_abs, k_abs, mask_mode, window, prefix_len)
+    if kv_valid_len is not None:
+        valid = k_abs[None, :] < jnp.reshape(kv_valid_len, (-1, 1))
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + core)
+# ---------------------------------------------------------------------------
+
+def attn_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+               mask_mode: str = "causal", prefix_len: int = 0,
+               positions: Optional[jax.Array] = None,
+               kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+               use_rope: bool = True) -> jax.Array:
+    """Self (or cross, via kv_override=(xk_src)) attention over a full
+    sequence — the training / prefill path."""
+    B, S, E = x.shape
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"])
+    src = x if kv_override is None else kv_override[0]
+    k = jnp.einsum("bse,ehd->bshd", src, p["wk"])
+    v = jnp.einsum("bse,ehd->bshd", src, p["wv"])
+    q = shard_act(q, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    k = shard_act(k, "act_batch", "act_seq", "act_kv_heads", "act_head_dim")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        q = rope(q, jnp.broadcast_to(pos, (B, q.shape[1])), cfg.rope_theta)
+        kpos = jnp.arange(k.shape[1]) if kv_override is not None else pos
+        k = rope(k, jnp.broadcast_to(kpos, (B, k.shape[1])), cfg.rope_theta)
+    if S > 1024 or k.shape[1] > 1024:
+        o = chunked_attention(q, k, v, mask_mode, cfg.window, prefix_len)
+    else:
+        o = plain_attention(q, k, v, mask_mode, cfg.window, prefix_len)
+    o = shard_act(o, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    return jnp.einsum("bshd,hde->bse", o, p["wo"])
+
+
+# -- decode with cache -------------------------------------------------------
+
+def attn_decode(p: Dict[str, jax.Array], x: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, pos: jax.Array, cfg: ArchConfig,
+                use_rope: bool = True,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x: (B, 1, E); caches (B, Smax, KV, D); ``pos`` is
+    the absolute position (scalar).  Sliding-window archs use a ring buffer
+    (Smax == window) — keys are stored post-RoPE so ring order is
+    irrelevant to the attention math.
+    """
+    B, _, E = x.shape
+    Smax = cache_k.shape[1]
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"])
+    k = jnp.einsum("bse,ehd->bshd", x, p["wk"])
+    v = jnp.einsum("bse,ehd->bshd", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        posb = jnp.broadcast_to(pos[None], (B, 1))
+        q = rope(q, posb, cfg.rope_theta)
+        k = rope(k, posb, cfg.rope_theta)
+    slot = (pos % Smax) if cfg.window > 0 else jnp.minimum(pos, Smax - 1)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    cache_k = shard_act(cache_k, "act_batch", "act_seq_mp", "act_kv_heads",
+                        "act_head_dim")
+    cache_v = shard_act(cache_v, "act_batch", "act_seq_mp", "act_kv_heads",
+                        "act_head_dim")
+    valid = jnp.minimum(pos + 1, Smax)
+    o = plain_attention(q, cache_k, cache_v, mask_mode="none",
+                        kv_valid_len=valid)
+    y = jnp.einsum("bshd,hde->bse", o, p["wo"])
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E, F = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi0": ParamSpec((E, F), ("embed", "mlp")),
+            "wi1": ParamSpec((E, F), ("embed", "mlp")),
+            "wo": ParamSpec((F, E), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((E, F), ("embed", "mlp")),
+        "wo": ParamSpec((F, E), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+              ) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wi0"]) * (x @ p["wi1"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["wi0"]) * (x @ p["wi1"])
+    elif cfg.act == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"])
+    h = shard_act(h, "act_batch", "act_seq", "act_ff")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    return {
+        "embedding": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                               ("vocab", "embed"), scale=1.0),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab_padded),
+                             ("embed", "vocab")),
+    }
+
+
+def embed_lookup(p: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return shard_act(x, "act_batch", "act_seq", "act_embed")
+
+
+def unembed(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    # bf16 matmul output: keeping the einsum in bf16 keeps the *cotangent*
+    # chain bf16 (a preferred_element_type=f32 here makes every upstream
+    # activation gradient f32 — 2x memory and collective bytes).  The loss
+    # upcasts elementwise, whose backward casts back down.
+    logits = jnp.einsum("bse,ev->bsv", x, p["unembed"].astype(x.dtype))
+    return shard_act(logits, "act_batch", "act_seq", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy over valid positions; logits fp32 (B,S,V)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+TPU adaptation notes (DESIGN.md §2): GPU MoE kernels use ragged grouped
+GEMMs; the TPU-native formulation keeps everything dense and static-shaped.
+We use *grouped sort dispatch*: tokens are routed within their batch group
+(which is data-sharded), so dispatch gathers never cross shards:
+
+  router logits -> top-k -> flat (token,slot) list -> stable argsort by
+  expert -> rank-within-expert via running offsets -> capacity drop ->
+  gather into (E, C, d) -> per-expert GEMMs -> weighted segment-sum combine.
+
+This avoids the (T, E, C) one-hot of classic GShard dispatch (O(T*E*C)
+memory) at the cost of an argsort — O(T k log(Tk)) on the VPU, negligible
+against the expert GEMMs.  Aux load-balancing loss follows Switch/GShard.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ParamSpec
+from repro.parallel.ctx import shard_act
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E, F, X = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((E, X), ("embed", None)),
+        "wi0": ParamSpec((X, E, F), ("expert", "embed", "mlp")),
+        "wi1": ParamSpec((X, E, F), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((X, F, E), ("expert", "mlp", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / max(cfg.n_experts, 1))
+    return max(c, cfg.top_k)
+
+
+#: perf knob (EXPERIMENTS.md §Perf, grok iteration C): constrain expert
+#: weights to their compute layout (gathered over the FSDP axis) before the
+#: expert GEMMs, so the contraction over d_model has no data-axis partial
+#: sums — one weight all-gather replaces per-token activation all-reduces.
+FORCE_WEIGHT_GATHER = False
+
+
+def moe_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, E) -> (y, aux_loss).  Groups = batch rows (data-sharded)."""
+    from repro.parallel.ctx import current_ctx
+    if FORCE_WEIGHT_GATHER and current_ctx() is not None:
+        import jax.numpy as _jnp
+        from jax.sharding import NamedSharding, PartitionSpec as _P
+        ctx = current_ctx()
+        gat = lambda w, spec: jax.lax.with_sharding_constraint(
+            w, NamedSharding(ctx.mesh, spec))
+        p = dict(p,
+                 wi0=gat(p["wi0"], _P(None, None, "model")),
+                 wi1=gat(p["wi1"], _P(None, None, "model")),
+                 wo=gat(p["wo"], _P(None, "model", None)))
+    B, S, E = x.shape
+    X, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+
+    logits = jnp.einsum("bse,ex->bsx", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (B, S, X)
+    top_w, top_e = jax.lax.top_k(probs, K)               # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balance loss (Switch eq. 4-6) over the whole batch
+    me = probs.mean(axis=(0, 1))                          # (X,)
+    ce = jnp.zeros((X,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (B * S * K))
+    aux = X * jnp.sum(me * ce)
+
+    # --- per-group sort dispatch
+    Tk = S * K
+    flat_e = top_e.reshape(B, Tk)                         # expert ids
+    flat_w = top_w.reshape(B, Tk).astype(x.dtype)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(S), K)[None], (B, 1))
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)     # (B, Tk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # rank within expert: position in sorted list minus expert start offset
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=X))(flat_e)  # (B, X)
+    starts = jnp.cumsum(counts, axis=-1) - counts                   # (B, X)
+    rank = jnp.arange(Tk)[None] - jnp.take_along_axis(starts, sorted_e, -1)
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, X * C)    # overflow slot
+
+    # token index per (E*C) slot; dropped slots point at a zero row
+    inv = jnp.full((B, X * C + 1), S, jnp.int32)
+    inv = jax.vmap(lambda iv, sl, tk: iv.at[sl].set(tk, mode="drop"))(
+        inv, slot, sorted_tok)
+    slot_tok = inv[:, : X * C]                            # (B, X*C)
+    slot_w = jnp.zeros((B, X * C + 1), x.dtype)
+    slot_w = jax.vmap(lambda sv, sl, w: sv.at[sl].set(w, mode="drop"))(
+        slot_w, slot, sorted_w)[:, : X * C]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, E), x.dtype)], axis=1)
+    disp = jnp.take_along_axis(
+        x_pad, slot_tok[..., None], axis=1)               # (B, X*C, E)
+    disp = disp.reshape(B, X, C, E)
+    disp = shard_act(disp, "act_batch", "act_expert", None, "act_embed")
+
+    # --- expert FFN (SwiGLU), batched over experts
+    h = jax.nn.silu(jnp.einsum("bxce,xef->bxcf", disp, p["wi0"])) \
+        * jnp.einsum("bxce,xef->bxcf", disp, p["wi1"])
+    h = shard_act(h, "act_batch", "act_expert", None, "act_ff")
+    out = jnp.einsum("bxcf,xfe->bxce", h, p["wo"])        # (B, X, C, E)
+
+    # --- weighted combine back to tokens
+    out_flat = out.reshape(B, X * C, E) * slot_w[..., None]
+    y = jax.vmap(
+        lambda o, t: jnp.zeros((S, E), o.dtype).at[t].add(o, mode="drop"))(
+        out_flat, slot_tok)
+    y = shard_act(y, "act_batch", "act_seq", "act_embed")
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,191 @@
+"""Architecture registry: one `Model` facade per family.
+
+`build_model(cfg)` returns a `Model` whose members are plain functions
+(closures over the frozen config) — ready for `jax.jit`, `jax.eval_shape`,
+and the dry-run's abstract lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm as SM
+from repro.models import transformer as TF
+from repro.models.common import (
+    ArchConfig, init_tree, spec_tree_logical,
+)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    specs: Dict[str, Any]
+    # init(rng) -> params
+    init: Callable[[jax.Array], Dict[str, Any]]
+    # loss(params, batch) -> (scalar, metrics)
+    loss: Callable[[Dict[str, Any], Dict[str, jax.Array]], Tuple]
+    # decode(params, token, cache) -> (logits, cache)
+    decode: Optional[Callable] = None
+    # init_cache(batch, max_len) -> cache pytree
+    init_cache: Optional[Callable] = None
+    cache_logical: Optional[Callable] = None
+    # prefill(params, batch, max_len) -> (logits, cache)
+    prefill: Optional[Callable] = None
+
+    @property
+    def param_logical(self) -> Dict[str, Any]:
+        return spec_tree_logical(self.specs)
+
+    def abstract_params(self) -> Dict[str, Any]:
+        """Shape/dtype tree without allocation (dry-run path)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or MoE-active) parameter count from specs."""
+        import numpy as np
+        total = 0
+        def walk(tree, in_expert):
+            nonlocal total
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    walk(v, in_expert or k == "moe")
+                else:
+                    n = int(np.prod(v.shape))
+                    if active_only and in_expert and v.shape and \
+                            self.cfg.n_experts > 1 and \
+                            v.shape[-1] != self.cfg.n_experts and \
+                            self.cfg.n_experts in v.shape:
+                        # expert-stacked weight: count top_k/n_experts share
+                        n = n * self.cfg.top_k // self.cfg.n_experts
+                    total += n
+        walk(self.specs, False)
+        return total
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    dt = cfg.compute_dtype
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs = TF.decoder_specs(cfg)
+        return Model(
+            cfg=cfg, specs=specs,
+            init=lambda rng: init_tree(rng, specs, dt),
+            loss=functools.partial(_tf_loss, cfg),
+            decode=functools.partial(_tf_decode, cfg),
+            init_cache=functools.partial(_tf_init_cache, cfg),
+            cache_logical=TF.cache_logical,
+            prefill=functools.partial(_tf_prefill, cfg),
+        )
+    if cfg.family == "ssm":
+        specs = SM.mamba_specs(cfg)
+        return Model(
+            cfg=cfg, specs=specs,
+            init=lambda rng: init_tree(rng, specs, dt),
+            loss=functools.partial(_ssm_loss, cfg),
+            decode=functools.partial(_ssm_decode, cfg),
+            init_cache=functools.partial(_ssm_init_cache, cfg),
+            cache_logical=SM.mamba_cache_logical,
+            prefill=functools.partial(_ssm_prefill, cfg),
+        )
+    if cfg.family == "hybrid":
+        specs = HY.hybrid_specs(cfg)
+        return Model(
+            cfg=cfg, specs=specs,
+            init=lambda rng: init_tree(rng, specs, dt),
+            loss=functools.partial(_hy_loss, cfg),
+            decode=functools.partial(_hy_decode, cfg),
+            init_cache=functools.partial(_hy_init_cache, cfg),
+            cache_logical=HY.hybrid_cache_logical,
+            prefill=functools.partial(_hy_prefill, cfg),
+        )
+    if cfg.family == "encdec":
+        specs = ED.encdec_specs(cfg)
+        return Model(
+            cfg=cfg, specs=specs,
+            init=lambda rng: init_tree(rng, specs, dt),
+            loss=functools.partial(_ed_loss, cfg),
+            decode=functools.partial(_ed_decode, cfg),
+            init_cache=functools.partial(_ed_init_cache, cfg),
+            cache_logical=ED.encdec_cache_logical,
+            prefill=functools.partial(_ed_prefill, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# --- partial targets (named functions pickle/jit better than lambdas) ------
+
+def _tf_loss(cfg, params, batch):
+    return TF.lm_loss(params, cfg, batch)
+
+
+def _tf_decode(cfg, params, token, cache):
+    return TF.decode_step(params, cfg, token, cache)
+
+
+def _tf_init_cache(cfg, batch, max_len):
+    return TF.init_cache(cfg, batch, max_len)
+
+
+def _tf_prefill(cfg, params, batch, max_len):
+    return TF.prefill(params, cfg, batch["tokens"], max_len,
+                      prefix_embeds=batch.get("img"))
+
+
+def _ssm_loss(cfg, params, batch):
+    return SM.mamba_loss(params, cfg, batch)
+
+
+def _ssm_decode(cfg, params, token, cache):
+    return SM.mamba_decode_step(params, cfg, token, cache)
+
+
+def _ssm_init_cache(cfg, batch, max_len):
+    return SM.mamba_init_cache(cfg, batch, max_len)
+
+
+def _ssm_prefill(cfg, params, batch, max_len):
+    return SM.mamba_prefill(params, cfg, batch["tokens"], max_len)
+
+
+def _hy_loss(cfg, params, batch):
+    return HY.hybrid_loss(params, cfg, batch)
+
+
+def _hy_decode(cfg, params, token, cache):
+    return HY.hybrid_decode_step(params, cfg, token, cache)
+
+
+def _hy_init_cache(cfg, batch, max_len):
+    return HY.hybrid_init_cache(cfg, batch, max_len)
+
+
+def _hy_prefill(cfg, params, batch, max_len):
+    return HY.hybrid_prefill(params, cfg, batch["tokens"], max_len)
+
+
+def _ed_loss(cfg, params, batch):
+    return ED.encdec_loss(params, cfg, batch)
+
+
+def _ed_decode(cfg, params, token, cache):
+    return ED.encdec_decode_step(params, cfg, token, cache)
+
+
+def _ed_init_cache(cfg, batch, max_len):
+    # encoder length for the shape set: frames = seq_len (stub embeddings)
+    return ED.encdec_init_cache(cfg, batch, max_len, enc_len=max_len)
+
+
+def _ed_prefill(cfg, params, batch, max_len):
+    return ED.encdec_prefill(params, cfg, batch["frames"],
+                             batch["frames"].shape[0], max_len)
+
+
+def list_architectures():
+    from repro.configs import ALL_CONFIGS
+    return sorted(ALL_CONFIGS)

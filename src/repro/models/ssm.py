@@ -1,0 +1,321 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked matmul formulation.
+
+TPU adaptation (DESIGN.md §2): the SSD chunked algorithm is already the
+MXU-friendly form — intra-chunk terms are dense (Q x Q) einsums, inter-chunk
+terms a short ``lax.scan`` over chunk states.  No selective-scan CUDA kernel
+to port; the dual form IS the TPU algorithm (chunk size tuned for the MXU
+instead of SM shared memory).
+
+Shapes: x (B, S, H, P) heads x headdim; B/C (B, S, G, N) groups x state;
+dt (B, S, H); A (H,) negative reals (stored as log magnitude).
+State: (B, H, P, N).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ParamSpec
+from repro.parallel.ctx import shard_act
+
+
+def ssm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E = cfg.d_model
+    DI = cfg.d_inner
+    H = cfg.ssm_nheads
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = DI + 2 * G * N
+    return {
+        # order in proj: [z (DI), x (DI), B (G*N), C (G*N), dt (H)]
+        "in_proj": ParamSpec((E, 2 * DI + 2 * G * N + H), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((H,), ("dt",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("dt",), init="zeros"),
+        "d_skip": ParamSpec((H,), ("dt",), init="ones"),
+        "norm_w": ParamSpec((DI,), ("mlp",), init="zeros"),
+        "out_proj": ParamSpec((DI, E), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    DI, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :DI]
+    xc = zxbcdt[..., DI:2 * DI]
+    Bm = zxbcdt[..., 2 * DI:2 * DI + G * N]
+    Cm = zxbcdt[..., 2 * DI + G * N:2 * DI + 2 * G * N]
+    dt = zxbcdt[..., 2 * DI + 2 * G * N:]
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S.  xbc: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):  # K is 4 — unrolled taps fuse into one kernel
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int = 128,
+                h0: jax.Array | None = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) negative,
+    Bm/Cm: (B,S,G,N).  Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = (S + chunk - 1) // chunk
+    padn = nc * chunk - S
+    if padn:
+        x = jnp.pad(x, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padn), (0, 0), (0, 0)))
+    Sp = nc * chunk
+
+    xw = (x * dt[..., None].astype(x.dtype)
+          ).reshape(Bsz, nc, chunk, H, P)                    # dt-weighted input
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = jnp.repeat(Bm, rep, axis=2).reshape(Bsz, nc, chunk, H, N)
+    Cc = jnp.repeat(Cm, rep, axis=2).reshape(Bsz, nc, chunk, H, N)
+
+    # log decay per step: log a_t = dt_t * A  (A negative)
+    la = dtc * A[None, None, None, :]                 # (B,nc,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    # One scan over chunks computes intra-chunk (quadratic, chunk-local),
+    # the inter-chunk contribution against the carried state, and the state
+    # update — so only ONE chunk's (Q,Q,H) tensors are ever live, and the
+    # checkpoint keeps the backward at the same footprint.
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        xw_c, la_c, B_c, C_c = inp        # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2
+        lcum = jnp.cumsum(la_c, axis=1)                   # (B,Q,H)
+        ltot = lcum[:, -1]                                # (B,H)
+        # intra: decay(t,s) = exp(lcum[t]-lcum[s]), s <= t.  The mask goes
+        # INSIDE the exp: exp(diff) at masked (t<s) positions overflows to
+        # +inf, and 0*inf in the where-VJP poisons the whole backward.
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,Q,Q,H)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        scores = jnp.einsum("bthn,bshn->btsh", C_c, B_c) * decay
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores.astype(xw_c.dtype),
+                             xw_c)
+        # inter: C_t . (exp(lcum[t]) * h_prev)
+        y_inter = jnp.einsum("bthn,bhpn->bthp", C_c, h) \
+            * jnp.exp(lcum)[..., None].astype(xw_c.dtype)
+        # state update: h' = exp(ltot) h + sum_s exp(ltot - lcum[s]) B_s xw_s
+        sdec = jnp.exp(ltot[:, None, :] - lcum)           # (B,Q,H)
+        st = jnp.einsum("bshn,bshp,bsh->bhpn", B_c, xw_c,
+                        sdec.astype(xw_c.dtype))
+        h_new = h * jnp.exp(ltot)[:, :, None, None].astype(h.dtype) \
+            + st.astype(h.dtype)
+        return h_new, y_intra + y_inter
+
+    h_init = (jnp.zeros((Bsz, H, P, N), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    h_last, ys = jax.lax.scan(
+        chunk_body, h_init,
+        (xw.swapaxes(0, 1), la.swapaxes(0, 1),
+         Bc.swapaxes(0, 1), Cc.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, h_last
+
+
+def ssm_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+              return_state: bool = False):
+    """Full mamba2 mixer over a sequence (train / prefill).
+
+    ``return_state=True`` additionally returns (conv_tail, h_last) — the
+    decode-cache state after consuming the sequence (prefill path).
+    """
+    B, S, E = x.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xc, Bm, Cm = (xbc[..., :cfg.d_inner],
+                  xbc[..., cfg.d_inner:cfg.d_inner + G * N],
+                  xbc[..., cfg.d_inner + G * N:])
+    xh = xc.reshape(B, S, H, P)
+    xh = shard_act(xh, "act_batch", "act_seq", "act_ssm_heads", "act_head_dim")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_last = ssd_chunked(xh, dt, A, Bm.reshape(B, S, G, N),
+                            Cm.reshape(B, S, G, N))
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm_gated(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        tail = xbc_raw[:, -(K - 1):]                 # pre-conv window
+        if S < K - 1:
+            tail = jnp.pad(xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, (tail, h_last.astype(jnp.float32))
+    return out
+
+
+def rms_norm_gated(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float) -> jax.Array:
+    # same bf16-tensor / fp32-stats discipline as layers.rms_norm
+    y = y * jax.nn.silu(z)
+    var = jnp.einsum("...d,...d->...", y, y,
+                     preferred_element_type=jnp.float32) / y.shape[-1]
+    scale = jax.lax.rsqrt(var + eps)[..., None].astype(y.dtype)
+    return y * scale * (1.0 + w)
+
+
+# ---------------------------------------------------------------------------
+# decode: single-token state update
+# ---------------------------------------------------------------------------
+
+def ssm_decode(p: Dict[str, jax.Array], x: jax.Array,
+               conv_state: jax.Array, ssm_state: jax.Array,
+               cfg: ArchConfig,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, 1, E); conv_state: (B, K-1, conv_dim); ssm_state (B,H,P,N)."""
+    B = x.shape[0]
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]                          # (B,1,*)
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xc, Bm, Cm], axis=-1)   # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,K,conv)
+    out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(out)[:, None, :]                 # (B,1,conv)
+    conv_state_new = window[:, 1:]
+    xc = xbc[..., :cfg.d_inner]
+    Bm = xbc[..., cfg.d_inner:cfg.d_inner + G * N].reshape(B, G, N)
+    Cm = xbc[..., cfg.d_inner + G * N:].reshape(B, G, N)
+    xh = xc.reshape(B, H, P)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A)                               # (B,H)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    upd = jnp.einsum("bhp,bhn->bhpn", xh * dt1[..., None].astype(xh.dtype), Bh)
+    h_new = ssm_state * a[:, :, None, None].astype(ssm_state.dtype) + upd
+    y = (jnp.einsum("bhpn,bhn->bhp", h_new, Ch).astype(xh.dtype)
+         + xh * p["d_skip"][None, :, None].astype(xh.dtype))
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = rms_norm_gated(y, z, p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), conv_state_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# pure-SSM LM assembly (mamba2-*): x += ssm(norm(x)) per layer, no MLP
+# ---------------------------------------------------------------------------
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, "ParamSpec"]:
+    from repro.models import layers as L
+    from repro.models.common import stack_specs
+    layer = {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ssm": ssm_specs(cfg),
+    }
+    return {
+        "embed": L.embed_specs(cfg),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "layers": stack_specs(layer, cfg.n_layers),
+    }
+
+
+def mamba_forward(params, cfg: ArchConfig, tokens):
+    from repro.models import layers as L
+    x = L.embed_lookup(params["embed"], tokens)
+    sax = L.res_seq_axis(x.shape[1])
+    x = shard_act(x, "act_batch", sax, "act_embed")
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        x = x + ssm_apply(lp["ssm"], h, cfg)
+        return shard_act(x, "act_batch", sax, "act_embed"), None
+
+    from repro.train.remat import maybe_remat
+    x, _ = jax.lax.scan(maybe_remat(body), x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def mamba_loss(params, cfg: ArchConfig, batch):
+    from repro.models import layers as L
+    logits, _ = mamba_forward(params, cfg, batch["tokens"])
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss, {"xent": loss}
+
+
+def mamba_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    del max_len  # constant-size state: the whole point of an SSM
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                          cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_cache_logical():
+    return {
+        "conv": (None, "act_batch", None, "act_ff"),
+        "ssm": (None, "act_batch", "act_ssm_heads", None, "act_state"),
+        "pos": (),
+    }
+
+
+def mamba_prefill(params, cfg: ArchConfig, tokens, max_len: int):
+    """Consume a prompt, returning last-position logits + decode cache.
+
+    The SSD chunked scan already carries the running state; prefill is the
+    forward pass with per-layer state capture — O(S) work, O(1) cache (the
+    whole point of an SSM serving stack).
+    """
+    from repro.models import layers as L
+    del max_len  # state size is constant
+    x = L.embed_lookup(params["embed"], tokens)
+    sax = L.res_seq_axis(x.shape[1])
+    x = shard_act(x, "act_batch", sax, "act_embed")
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, (conv, hstate) = ssm_apply(lp["ssm"], h, cfg, return_state=True)
+        x = shard_act(x + y, "act_batch", sax, "act_embed")
+        return x, (conv.astype(jnp.bfloat16), hstate)
+
+    x, (convs, hs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:])
+    cache = {"conv": convs, "ssm": hs,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def mamba_decode_step(params, cfg: ArchConfig, token, cache):
+    from repro.models import layers as L
+    x = L.embed_lookup(params["embed"], token)
+
+    def body(x, xs):
+        lp, conv, sst = xs
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, conv, sst = ssm_decode(lp["ssm"], h, conv, sst, cfg)
+        return x + y, (conv, sst)
+
+    x, (convs, ssts) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"conv": convs, "ssm": ssts, "pos": cache["pos"] + 1}

@@ -1,0 +1,5 @@
+"""Telemetry <-> training integration: per-step hooks, fleet-level RCA."""
+from repro.monitor.hooks import StepTelemetry
+from repro.monitor.fleet import FleetMonitor, FleetDiagnosis, Mitigation
+
+__all__ = ["StepTelemetry", "FleetMonitor", "FleetDiagnosis", "Mitigation"]

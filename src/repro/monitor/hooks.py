@@ -1,0 +1,70 @@
+"""Per-step telemetry hook for training/serving loops.
+
+Wraps a step function: stamps wall time per step and per-phase marks (the
+NCCL-phase analogue), pushes them into a :class:`DeviceMetricSource`, and
+runs a background :class:`TelemetryAgent` sampling host probes at 100 Hz —
+the deployment wiring of the paper's agent inside a training job.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+from repro.telemetry.agent import TelemetryAgent
+from repro.telemetry.collectors import DeviceMetricSource, ProcCollector
+
+
+class StepTelemetry:
+    def __init__(self, rate_hz: float = 100.0, history_s: float = 300.0,
+                 use_proc: bool = True, background: bool = True):
+        self.device_src = DeviceMetricSource()
+        collectors = [self.device_src]
+        if use_proc:
+            collectors.append(ProcCollector())
+        self.agent = TelemetryAgent(collectors, rate_hz=rate_hz,
+                                    history_s=history_s)
+        self._background = background
+        self._running = False
+        self._step_t0: Optional[float] = None
+
+    def start(self) -> None:
+        if self._background and not self._running:
+            self.agent.run_background()
+            self._running = True
+
+    def stop(self):
+        if self._running:
+            self.agent.stop()
+            self._running = False
+        return self.agent.stats
+
+    # -- step instrumentation ------------------------------------------------
+    def step_begin(self) -> None:
+        self._step_t0 = time.perf_counter()
+
+    def step_end(self, **phase_ms: float) -> float:
+        """Record step completion; returns step latency in ms.
+
+        ``phase_ms`` carries phase marks, e.g. ``coll_allreduce_ms=...``
+        when the collective phase is measured separately.
+        """
+        if self._step_t0 is None:
+            return 0.0
+        ms = (time.perf_counter() - self._step_t0) * 1e3
+        self.device_src.push(step_latency_ms=ms,
+                             coll_allreduce_ms=phase_ms.get(
+                                 "coll_allreduce_ms", ms))
+        for k, v in phase_ms.items():
+            if k != "coll_allreduce_ms":
+                self.device_src.push(**{k: v})
+        if not self._background:
+            self.agent.step()
+        return ms
+
+    def wrap(self, step_fn: Callable) -> Callable:
+        def wrapped(*a, **kw):
+            self.step_begin()
+            out = step_fn(*a, **kw)
+            self.step_end()
+            return out
+        return wrapped

@@ -1,0 +1,19 @@
+"""Distribution layer: mesh construction, logical-axis sharding rules,
+activation constraints.
+
+The model code annotates tensors with *logical* axis names; this package
+owns the mapping to physical mesh axes, so the same model runs on a single
+CPU device (everything maps to None), one pod (16x16 "data" x "model"), or
+multi-pod (2 x 16 x 16 "pod" x "data" x "model").
+"""
+from repro.parallel.sharding import (
+    LOGICAL_RULES, make_rules, logical_to_pspec, param_pspecs,
+)
+from repro.parallel.ctx import (
+    MeshCtx, mesh_context, current_ctx, shard_act, with_logical,
+)
+
+__all__ = [
+    "LOGICAL_RULES", "make_rules", "logical_to_pspec", "param_pspecs",
+    "MeshCtx", "mesh_context", "current_ctx", "shard_act", "with_logical",
+]

@@ -1,0 +1,69 @@
+"""Mesh context: how model code applies activation sharding constraints
+without threading mesh/rules through every function signature.
+
+Inside ``mesh_context(mesh, rules)``, ``shard_act(x, "act_batch",
+"act_seq", "act_embed")`` lowers to ``jax.lax.with_sharding_constraint``;
+outside any context it is the identity, so models run unmodified on a
+single device and in unit tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import Rules, logical_to_pspec
+
+
+@dataclasses.dataclass
+class MeshCtx:
+    mesh: Mesh
+    rules: Rules
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.stack: list = []
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Rules):
+    _STATE.stack.append(MeshCtx(mesh, rules))
+    try:
+        with mesh:
+            yield _STATE.stack[-1]
+    finally:
+        _STATE.stack.pop()
+
+
+def current_ctx() -> Optional[MeshCtx]:
+    return _STATE.stack[-1] if _STATE.stack else None
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op
+    without an active mesh context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    spec = logical_to_pspec(logical, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def with_logical(pspec_logical: Sequence[Optional[str]]) -> P:
+    """Resolve a logical tuple to a PartitionSpec under the active context
+    (P() everywhere when no context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return P()
+    return logical_to_pspec(pspec_logical, ctx.rules)

@@ -1,0 +1,160 @@
+"""Logical axis -> mesh axis rules and PartitionSpec construction.
+
+Weights and activations use DISJOINT logical vocabularies (a weight "embed"
+is FSDP-sharded over the data axis; an activation's embed dim is unsharded)
+— mixing them is the classic source of accidental all-gathers.
+
+Weight axes:
+  embed   -> data      (FSDP / ZeRO shard; gathered per layer by XLA)
+  mlp     -> model     (tensor parallel)
+  heads   -> model     (tensor parallel, only when divisible)
+  vocab   -> model     (output projection TP)
+  layer/expert/kv_heads/conv/state/... -> unsharded
+
+Activation axes:
+  act_batch    -> (pod, data)
+  act_heads    -> model   (when heads divide the axis; else None)
+  act_seq_mp   -> model   (sequence sharding - the fallback attention
+                           strategy for archs whose head count does not
+                           divide the model axis, and the KV-cache layout
+                           for long-context decode = flash-decoding split)
+  act_ff/act_vocab -> model
+  everything else -> unsharded
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from typing import TYPE_CHECKING
+if TYPE_CHECKING:  # avoid circular import (models import parallel.ctx)
+    from repro.models.common import ArchConfig
+
+Rules = Dict[str, Any]   # logical name -> mesh axis | tuple | None
+
+#: static defaults; make_rules() specializes per (config, mesh)
+LOGICAL_RULES: Rules = {
+    # weights
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "vocab": "model",
+    "layer": None,
+    "expert": None,
+    "conv": None,
+    "state": None,
+    "dt": None,
+    "pos": None,
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_seq_mp": "model",
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": None,
+    "act_head_dim": None,
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_expert": None,
+    "act_cap": "data",
+    "act_state": None,
+    "act_ssm_heads": "model",
+    # Megatron-style sequence parallelism for the residual stream: the
+    # between-layer carry (and hence the remat-saved activation stack) is
+    # sharded over the model axis on the sequence dim; XLA inserts the
+    # all-gather at QKV/FFN entry and reduce-scatter at exit.
+    "act_seq_res": "model",
+}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def make_rules(cfg: Optional["ArchConfig"], mesh: Mesh) -> Rules:
+    """Specialize the rule table for a config + mesh.
+
+    - drops mesh axes that don't exist (single-pod mesh has no "pod");
+    - if the arch's head count does not divide the model axis, attention
+      falls back to sequence sharding: heads unshard, act_seq_mp stays.
+    """
+    rules = dict(LOGICAL_RULES)
+
+    def filter_axes(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            keep = tuple(a for a in v if a in mesh.axis_names)
+            return keep if keep else None
+        return v if v in mesh.axis_names else None
+
+    rules = {k: filter_axes(v) for k, v in rules.items()}
+
+    tp = _axis_size(mesh, "model")
+    if cfg is not None and tp > 1:
+        if cfg.n_heads == 0 or cfg.n_heads % tp != 0:
+            rules["heads"] = None
+            rules["act_heads"] = None
+        # kv heads shard only if they divide (they rarely do; grouped KV is
+        # replicated on the model axis and that is cheap - it is small)
+        if cfg.n_kv and cfg.n_kv % tp == 0:
+            rules["kv_heads"] = "model"
+            rules["act_kv_heads"] = "model"
+        if cfg.n_experts and cfg.n_experts % tp == 0:
+            # expert-parallel layout is available; default keeps mlp TP
+            pass
+        if cfg.vocab_padded % tp != 0:
+            rules["vocab"] = None
+            rules["act_vocab"] = None
+        if cfg.ssm_state == 0 or (cfg.ssm_nheads % tp != 0):
+            rules["act_ssm_heads"] = None
+        if cfg.d_ff and cfg.d_ff % tp != 0:
+            rules["mlp"] = None
+            rules["act_ff"] = None
+    dp = _axis_size(mesh, "data")
+    if cfg is not None and dp > 1 and cfg.d_model % dp != 0:
+        rules["embed"] = None
+    return rules
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], rules: Rules) -> P:
+    axes = []
+    used: set = set()
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        # a mesh axis may appear at most once per spec
+        if ax is not None:
+            flat = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+        axes.append(ax)
+    return P(*axes)
+
+
+def param_pspecs(logical_tree: Dict[str, Any], rules: Rules) -> Dict[str, Any]:
+    """Map a pytree of logical tuples to a pytree of PartitionSpec."""
+    out: Dict[str, Any] = {}
+    for k, v in logical_tree.items():
+        if isinstance(v, dict):
+            out[k] = param_pspecs(v, rules)
+        else:
+            out[k] = logical_to_pspec(v, rules)
+    return out
+
+
+def named_shardings(pspec_tree: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+"""Serving stack: batched generation over prefill/decode."""
+from repro.serve.engine import ServeEngine, GenerateResult
+
+__all__ = ["ServeEngine", "GenerateResult"]

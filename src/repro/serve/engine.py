@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill -> greedy/temperature decode loop.
+
+Two jit programs (the standard split): ``prefill`` is compute-bound over
+the prompt, ``decode_step`` is memory-bound per token with a donated cache.
+Telemetry hooks stamp per-token latency into the device channel, so the
+paper's engine monitors serving exactly like training.
+
+Archs without a fused prefill (pure-SSM / hybrid) prefill by stepping the
+decode function over prompt tokens — correct, if slower; EXPERIMENTS.md
+notes it as the fallback path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+from repro.monitor.hooks import StepTelemetry
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray              # (B, n_new)
+    prefill_ms: float
+    per_token_ms: List[float]
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_len: int = 2048,
+                 telemetry: Optional[StepTelemetry] = None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.tele = telemetry
+        self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        self._prefill = (jax.jit(lambda p, b: model.prefill(p, b, max_len))
+                         if model.prefill is not None else None)
+
+    def _prefill_by_stepping(self, prompts: jax.Array):
+        B, S = prompts.shape
+        cache = self.model.init_cache(B, self.max_len)
+        logits = None
+        for i in range(S):
+            logits, cache = self._decode(self.params, prompts[:, i:i + 1],
+                                         cache)
+        return logits, cache
+
+    def generate(self, prompts: np.ndarray, n_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 extra_batch: Optional[Dict[str, jax.Array]] = None,
+                 ) -> GenerateResult:
+        """prompts: (B, S) int32 -> greedy (or sampled) continuation."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B = prompts.shape[0]
+        t0 = time.perf_counter()
+        if self._prefill is not None:
+            batch = {"tokens": prompts}
+            if extra_batch:
+                batch.update(extra_batch)
+            logits, cache = self._prefill(self.params, batch)
+        else:
+            logits, cache = self._prefill_by_stepping(prompts)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        rng = jax.random.key(seed)
+        out: List[np.ndarray] = []
+        per_token: List[float] = []
+        last = logits[:, -1, : self.model.cfg.vocab]
+        for i in range(n_new):
+            if temperature > 0:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, last / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(last, axis=-1)
+            tok = tok.astype(jnp.int32).reshape(B, 1)
+            out.append(np.asarray(tok))
+            t1 = time.perf_counter()
+            if self.tele:
+                self.tele.step_begin()
+            logits, cache = self._decode(self.params, tok, cache)
+            logits.block_until_ready()
+            ms = (time.perf_counter() - t1) * 1e3
+            if self.tele:
+                self.tele.step_end()
+            per_token.append(ms)
+            last = logits[:, -1, : self.model.cfg.vocab]
+        return GenerateResult(tokens=np.concatenate(out, axis=1),
+                              prefill_ms=prefill_ms,
+                              per_token_ms=per_token)

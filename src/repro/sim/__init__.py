@@ -1,0 +1,22 @@
+"""Controlled-injection evaluation substrate (paper §3).
+
+The paper evaluates on a real 4xA100 node by injecting fio / cpu-pin / tc /
+power-cap disturbances.  This container has neither GPUs nor a disposable
+NIC, so injection happens one layer down: a calibrated host-signal model
+generates the same telemetry channels with the same cross-layer couplings,
+and the *estimators* (our engine + baselines B1-B3) are identical to what
+would run against real probes.  Ground truth is exact by construction.
+"""
+from repro.sim.workload import AllReduceWorkload, MESSAGE_SIZES
+from repro.sim.hostmodel import HostSignalModel, ChannelModel
+from repro.sim.disturbances import (
+    Disturbance, DISTURBANCES, make_disturbance, apply_disturbance,
+)
+from repro.sim.scenario import Trial, make_trial, run_eval, EvalRecord
+
+__all__ = [
+    "AllReduceWorkload", "MESSAGE_SIZES",
+    "HostSignalModel", "ChannelModel",
+    "Disturbance", "DISTURBANCES", "make_disturbance", "apply_disturbance",
+    "Trial", "make_trial", "run_eval", "EvalRecord",
+]

@@ -1,0 +1,270 @@
+"""D1-D4 disturbance injectors (paper §3.1) with cross-layer couplings.
+
+Each disturbance drives (a) its *primary* host channels, (b) *leakage*
+into neighbouring subsystems (a NIC burst costs CPU in ksoftirqd; heavy fio
+raises iowait and runqueue), and (c) the all-reduce latency multiplier,
+delayed by a short transfer lag (host cause leads device effect — this is
+the lag the paper's +/-200 ms cross-correlation window exists to catch).
+
+Amplitudes scale with a per-trial ``intensity`` so the evaluation sees a
+range from marginal to blatant events, like the paper's 17-run spread
+(Fig 2b box plots).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.taxonomy import CauseClass
+
+
+# ---------------------------------------------------------------------------
+# envelopes
+# ---------------------------------------------------------------------------
+
+def _smoothstep(x: np.ndarray) -> np.ndarray:
+    x = np.clip(x, 0.0, 1.0)
+    return x * x * (3 - 2 * x)
+
+
+def env_sustained(rng, T, rate, t_on, dur, rise_s=0.6):
+    t = np.arange(T) / rate
+    up = _smoothstep((t - t_on) / rise_s)
+    down = _smoothstep((t_on + dur - t) / rise_s)
+    return np.minimum(up, down)
+
+
+def env_ramp(rng, T, rate, t_on, dur, ramp_s=4.5):
+    t = np.arange(T) / rate
+    up = _smoothstep((t - t_on) / ramp_s)
+    down = _smoothstep((t_on + dur - t) / 0.8)
+    return np.minimum(up, down)
+
+
+def env_bursty(rng, T, rate, t_on, dur, period_s=None, duty=None):
+    """On/off bursts inside the active window (tc-style traffic bursts).
+
+    Period and duty vary per trial — real traffic generators are not
+    metronomes, and the spread is what makes burst-shaped events land at
+    different detection latencies across the 17 runs.
+    """
+    if period_s is None:
+        period_s = float(rng.uniform(1.2, 2.6))
+    if duty is None:
+        duty = float(rng.uniform(0.32, 0.55))
+    base = env_sustained(rng, T, rate, t_on, dur, rise_s=0.3)
+    t = np.arange(T) / rate
+    phase = rng.uniform(0, period_s)
+    # jitter the period a little per cycle via phase noise
+    cyc = ((t + phase) % period_s) / period_s
+    gate = (cyc < duty).astype(np.float64)
+    # smooth gate edges (~50 ms)
+    k = max(1, int(0.05 * rate))
+    kernel = np.ones(k) / k
+    gate = np.convolve(gate, kernel, mode="same")
+    return base * gate
+
+
+ENVELOPES: Dict[str, Callable] = {
+    "sustained": env_sustained,
+    "ramp": env_ramp,
+    "bursty": env_bursty,
+}
+
+
+# ---------------------------------------------------------------------------
+# effect tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChannelEffect:
+    channel: str
+    amp: float            # additive, in channel units (at intensity 1)
+    mode: str = "add"     # "add" | "set_drop" (drop toward amp) | "jitter"
+    lag_s: float = 0.0    # channel-specific extra lag vs the envelope
+
+
+@dataclasses.dataclass(frozen=True)
+class Disturbance:
+    kind: CauseClass
+    name: str
+    envelope: str
+    effects: Tuple[ChannelEffect, ...]
+    latency_amp: float          # L multiplier = 1 + amp * env (intensity 1)
+    latency_lag_s: float        # host envelope leads latency by this much
+    dur_s: Tuple[float, float]  # duration range
+    intensity_sigma: float = 0.35   # lognormal sigma for per-trial intensity
+
+
+DISTURBANCES: Dict[str, Disturbance] = {
+    # D1 — fio high-throughput disk I/O -> PCIe/root-complex contention
+    "io": Disturbance(
+        kind=CauseClass.IO, name="D1-io-pressure", envelope="sustained",
+        effects=(
+            ChannelEffect("blkio_read_bytes", 1.1e9),
+            ChannelEffect("blkio_write_bytes", 1.4e9),
+            ChannelEffect("blkio_inflight", 48.0),
+            ChannelEffect("iowait_frac", 0.35),
+            # DMA contention: input feed throughput sags (two-sided channel)
+            ChannelEffect("pcie_h2d_bytes", -2.5e9, lag_s=0.03),
+            ChannelEffect("pcie_d2h_bytes", -2.0e8, lag_s=0.03),
+            # leakage: completion storms cost some CPU
+            ChannelEffect("sched_switch_rate", 2500.0),
+            ChannelEffect("runqueue_len", 1.0),
+            ChannelEffect("cpu_util_other", 0.06),
+            ChannelEffect("dev_util", -0.08, lag_s=0.08),
+        ),
+        latency_amp=0.55, latency_lag_s=0.08, dur_s=(18.0, 30.0)),
+    # D2 — CPU-bound process pinned to the workload's cores
+    "cpu": Disturbance(
+        kind=CauseClass.CPU, name="D2-cpu-contention", envelope="sustained",
+        effects=(
+            ChannelEffect("cpu_util_other", 0.72),
+            ChannelEffect("runqueue_len", 9.0),
+            ChannelEffect("involuntary_ctx", 1800.0),
+            ChannelEffect("sched_switch_rate", 14000.0),
+            # leakage: softirq processing squeezed -> small net effect
+            ChannelEffect("net_rx_softirq", 500.0, lag_s=0.05),
+            ChannelEffect("dev_util", -0.12, lag_s=0.06),
+        ),
+        latency_amp=0.65, latency_lag_s=0.05, dur_s=(18.0, 30.0)),
+    # D3 — tc-generated NIC saturation bursts
+    "nic": Disturbance(
+        kind=CauseClass.NIC, name="D3-nic-burst", envelope="bursty",
+        effects=(
+            ChannelEffect("net_rx_softirq", 55000.0),
+            ChannelEffect("net_tx_softirq", 9000.0),
+            ChannelEffect("nic_rx_bytes", 1.15e9),
+            ChannelEffect("nic_tx_bytes", 2.5e8),
+            ChannelEffect("nic_rx_drops", 900.0, lag_s=0.04),
+            # leakage: ksoftirqd burns CPU during bursts
+            ChannelEffect("sched_switch_rate", 6000.0, lag_s=0.02),
+            ChannelEffect("cpu_util_other", 0.12, lag_s=0.02),
+            ChannelEffect("runqueue_len", 1.5, lag_s=0.02),
+            ChannelEffect("dev_util", -0.07, lag_s=0.08),
+        ),
+        latency_amp=1.1, latency_lag_s=0.06, dur_s=(15.0, 25.0)),
+    # D4 — power-cap-induced throttling
+    "gpu": Disturbance(
+        kind=CauseClass.GPU, name="D4-gpu-throttle", envelope="ramp",
+        effects=(
+            ChannelEffect("dev_power", -140.0, mode="add"),
+            ChannelEffect("dev_clock", -430.0, mode="add"),
+            ChannelEffect("dev_temp", -6.0, lag_s=2.0),
+            ChannelEffect("dev_util", 0.04),   # busier at lower clock
+        ),
+        latency_amp=0.5, latency_lag_s=0.10, dur_s=(20.0, 32.0)),
+}
+
+CLASS_ORDER: Sequence[str] = ("io", "cpu", "nic", "gpu")
+
+
+def make_disturbance(key: str) -> Disturbance:
+    return DISTURBANCES[key]
+
+
+# ---------------------------------------------------------------------------
+# application
+# ---------------------------------------------------------------------------
+
+def _shift(env: np.ndarray, lag_s: float, rate: float) -> np.ndarray:
+    """Delay the envelope by lag_s (cause first, effect later)."""
+    k = int(round(lag_s * rate))
+    if k == 0:
+        return env
+    out = np.zeros_like(env)
+    if k > 0:
+        out[k:] = env[:-k]
+    else:
+        out[:k] = env[-k:]
+    return out
+
+
+def apply_disturbance(rng: np.random.Generator, channels: List[str],
+                      data: np.ndarray, dist: Disturbance, rate: float,
+                      t_on: float, dur: float, intensity: float,
+                      ) -> np.ndarray:
+    """Mutates ``data`` in place; returns the latency multiplier series."""
+    T = data.shape[1]
+    env_fn = ENVELOPES[dist.envelope]
+    env = env_fn(rng, T, rate, t_on, dur)
+    # Precursor: injection tools have a setup phase (fio lays out files, tc
+    # primes qdiscs, the cpu hog forks workers) that stirs the same channels
+    # *before* the measured effect — contaminating the baseline window the
+    # spike scores are normalised against.
+    chan_env = env
+    if rng.uniform() < 0.30:
+        pre_t = t_on - float(rng.uniform(8.0, 16.0))
+        pre_dur = float(rng.uniform(3.0, 6.0))
+        pre = env_sustained(rng, T, rate, pre_t, pre_dur, rise_s=0.5)
+        chan_env = np.maximum(env, float(rng.uniform(0.15, 0.30)) * pre)
+    idx = {c: i for i, c in enumerate(channels)}
+    for eff in dist.effects:
+        i = idx.get(eff.channel)
+        if i is None:
+            continue
+        e = _shift(chan_env, eff.lag_s + rng.normal(0.0, 0.01), rate)
+        # per-channel amplitude wobble so channels aren't perfect copies
+        wobble = float(rng.lognormal(0.0, 0.25))
+        data[i] += eff.amp * intensity * wobble * e
+        np.maximum(data[i], 0.0, out=data[i])
+    # Latency response: the transfer from host cause to device latency is
+    # not a clean fixed-lag copy — the lag drifts with queue depths and the
+    # response amplitude fluctuates within the event.  Model as a two-lag
+    # mixture with a slow multiplicative wobble; this caps the achievable
+    # cross-correlation below 1 exactly like real traces do.
+    lag = dist.latency_lag_s + rng.normal(0.0, 0.02)
+    lag2 = lag + float(rng.uniform(0.25, 0.6))
+    lenv = 0.65 * _shift(env, lag, rate) + 0.35 * _shift(env, lag2, rate)
+    wob = np.convolve(rng.standard_normal(T), np.ones(int(rate)) / rate,
+                      mode="same")
+    sd = float(np.std(wob)) + 1e-12
+    lenv = lenv * np.clip(1.0 + 0.25 * wob / sd, 0.3, 1.9)
+    return 1.0 + dist.latency_amp * intensity * lenv
+
+
+#: Channels considered "primary" evidence per class — used by the confuser
+#: injector (it mimics the *footprint* of an unrelated tenant action).
+PRIMARY_CHANNELS: Dict[str, Tuple[str, ...]] = {
+    "io": ("blkio_read_bytes", "blkio_write_bytes", "blkio_inflight",
+           "iowait_frac"),
+    "cpu": ("cpu_util_other", "runqueue_len", "involuntary_ctx",
+            "sched_switch_rate"),
+    "nic": ("net_rx_softirq", "net_tx_softirq", "nic_rx_bytes",
+            "nic_tx_bytes"),
+    "gpu": ("dev_power", "dev_clock"),
+}
+
+
+def inject_confuser(rng: np.random.Generator, channels: List[str],
+                    data: np.ndarray, cls: str, rate: float,
+                    t_near: float, scale: float) -> None:
+    """A temporally coincident, *causally unrelated* burst in class ``cls``.
+
+    Multi-tenant hosts cluster activity in time (one tenant action touches
+    disk and network together; cron fires on the minute), so real spike
+    windows often contain innocent-bystander bursts in other subsystems.
+    This is the principled generator of the confusion matrix's off-diagonal
+    mass — the estimator must use lag structure and magnitude to beat it.
+    """
+    dist = DISTURBANCES[cls]
+    T = data.shape[1]
+    dur = float(rng.uniform(8.0, 18.0))
+    t0 = t_near + float(rng.uniform(-1.0, 1.5))
+    # half the time the bystander has the same temporal texture as the real
+    # cause's latency response — the adversarial case for correlation
+    env_fn = ENVELOPES["bursty"] if rng.uniform() < 0.35 else env_sustained
+    env = env_fn(rng, T, rate, t0, dur)
+    idx = {c: i for i, c in enumerate(channels)}
+    primaries = PRIMARY_CHANNELS[cls]
+    for eff in dist.effects:
+        if eff.channel not in primaries:
+            continue
+        i = idx.get(eff.channel)
+        if i is None:
+            continue
+        e = _shift(env, rng.normal(0.0, 0.03), rate)
+        data[i] += eff.amp * scale * float(rng.lognormal(0.0, 0.3)) * e
+        np.maximum(data[i], 0.0, out=data[i])

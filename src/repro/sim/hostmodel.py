@@ -1,0 +1,110 @@
+"""Ambient host-signal model: every telemetry channel's quiet behaviour.
+
+Each channel is ``base + sd * AR(1)`` plus a sparse *nuisance-burst* process
+— cron jobs, stray `apt` runs, unrelated network chatter — which is what
+makes diagnosis non-trivial: a nuisance burst overlapping a latency spike in
+the wrong group is exactly how the paper's confusion matrix gets its
+off-diagonal mass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.telemetry.schema import metric_names
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    base: float
+    sd: float
+    ar_rho: float = 0.9
+    nonneg: bool = True
+    # nuisance bursts: Poisson arrivals, lognormal amplitude (x base), exp dur
+    burst_rate_hz: float = 0.0       # arrivals per second
+    burst_amp: float = 0.0           # mean amplitude as multiple of `sd`
+    burst_dur_s: float = 1.0
+
+
+#: calibrated quiet-host values (4-GPU training node, 10 GbE, NVMe)
+DEFAULT_CHANNELS: Dict[str, ChannelModel] = {
+    # NET group
+    "net_rx_softirq":   ChannelModel(2000.0, 300.0, 0.9, True, 1 / 40.0, 7.0, 0.8),
+    "net_tx_softirq":   ChannelModel(1500.0, 250.0, 0.9, True, 1 / 50.0, 6.0, 0.8),
+    "nic_rx_bytes":     ChannelModel(5e6, 1.5e6, 0.92, True, 1 / 40.0, 8.0, 1.0),
+    "nic_tx_bytes":     ChannelModel(4e6, 1.2e6, 0.92, True, 1 / 50.0, 8.0, 1.0),
+    "nic_rx_drops":     ChannelModel(0.5, 0.4, 0.5, True, 1 / 120.0, 6.0, 0.5),
+    # SCHED group
+    "sched_switch_rate": ChannelModel(9000.0, 900.0, 0.9, True, 1 / 45.0, 6.0, 1.2),
+    "runqueue_len":      ChannelModel(2.0, 0.7, 0.85, True, 1 / 60.0, 5.0, 1.5),
+    "involuntary_ctx":   ChannelModel(60.0, 20.0, 0.8, True, 1 / 60.0, 6.0, 1.0),
+    "cpu_util_other":    ChannelModel(0.12, 0.03, 0.93, True, 1 / 50.0, 5.0, 2.0),
+    # BLOCK_IO group
+    "blkio_read_bytes":  ChannelModel(2e6, 8e5, 0.88, True, 1 / 35.0, 9.0, 1.0),
+    "blkio_write_bytes": ChannelModel(3e6, 1e6, 0.88, True, 1 / 30.0, 9.0, 1.2),
+    "blkio_inflight":    ChannelModel(1.0, 0.5, 0.8, True, 1 / 40.0, 6.0, 1.0),
+    "iowait_frac":       ChannelModel(0.01, 0.004, 0.9, True, 1 / 45.0, 6.0, 1.0),
+    # PCIE / DMA group (training input feed keeps these busy)
+    "pcie_h2d_bytes":    ChannelModel(8e9, 6e8, 0.9, True, 1 / 70.0, 4.0, 1.0),
+    "pcie_d2h_bytes":    ChannelModel(1e9, 1e8, 0.9, True, 1 / 70.0, 4.0, 1.0),
+    # DEVICE group (quiet: pinned clocks, steady load)
+    "dev_util":      ChannelModel(0.93, 0.015, 0.95, True, 0.0, 0.0, 0.0),
+    "dev_mem_used":  ChannelModel(62e9, 2e8, 0.98, True, 0.0, 0.0, 0.0),
+    "dev_power":     ChannelModel(385.0, 6.0, 0.95, True, 1 / 90.0, 3.0, 1.5),
+    "dev_temp":      ChannelModel(64.0, 0.6, 0.99, True, 0.0, 0.0, 0.0),
+    "dev_clock":     ChannelModel(1410.0, 8.0, 0.9, True, 1 / 90.0, 3.0, 1.0),
+}
+
+
+class HostSignalModel:
+    def __init__(self, channels: Optional[Dict[str, ChannelModel]] = None,
+                 rate_hz: float = 100.0):
+        self.models = dict(channels or DEFAULT_CHANNELS)
+        self.rate_hz = float(rate_hz)
+
+    @property
+    def channel_names(self) -> List[str]:
+        return list(self.models)
+
+    def _ar1(self, rng: np.random.Generator, T: int, rho: float) -> np.ndarray:
+        eps = rng.standard_normal(T)
+        out = np.empty(T)
+        acc = 0.0
+        c = np.sqrt(max(1.0 - rho * rho, 1e-12))
+        for t in range(T):
+            acc = rho * acc + c * eps[t]
+            out[t] = acc
+        return out
+
+    def _bursts(self, rng: np.random.Generator, T: int,
+                m: ChannelModel) -> np.ndarray:
+        """Sparse nuisance bursts as an additive series in channel units."""
+        out = np.zeros(T)
+        if m.burst_rate_hz <= 0 or m.burst_amp <= 0:
+            return out
+        n_expected = m.burst_rate_hz * T / self.rate_hz
+        n = rng.poisson(n_expected)
+        for _ in range(n):
+            t0 = rng.integers(0, T)
+            dur = max(1, int(rng.exponential(m.burst_dur_s) * self.rate_hz))
+            amp = m.sd * m.burst_amp * rng.lognormal(0.0, 0.5)
+            t1 = min(T, t0 + dur)
+            # half-sine envelope — bursts ramp, they don't step
+            env = np.sin(np.linspace(0, np.pi, t1 - t0))
+            out[t0:t1] += amp * env
+        return out
+
+    def generate(self, rng: np.random.Generator, T: int,
+                 ) -> Tuple[List[str], np.ndarray]:
+        """(channel_names, data (C, T)) of ambient signals."""
+        names = self.channel_names
+        data = np.empty((len(names), T), dtype=np.float64)
+        for i, name in enumerate(names):
+            m = self.models[name]
+            x = m.base + m.sd * self._ar1(rng, T, m.ar_rho) + self._bursts(rng, T, m)
+            if m.nonneg:
+                np.maximum(x, 0.0, out=x)
+            data[i] = x
+        return names, data

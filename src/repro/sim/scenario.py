@@ -1,0 +1,177 @@
+"""Trial construction and the 68-trial evaluation harness (paper §3-4).
+
+``make_trial`` builds one injected-disturbance trial: ambient host signals,
+the W1 all-reduce latency series, and exact ground truth.  ``run_eval``
+replays the paper's protocol — 17 trials per disturbance class — through any
+set of diagnosers and aggregates accuracy / confusion / Time-to-RCA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.baselines import Diagnoser, DiagnoserResult, make_baseline
+from repro.core.taxonomy import CauseClass
+from repro.sim.disturbances import (
+    CLASS_ORDER, DISTURBANCES, Disturbance, apply_disturbance,
+    inject_confuser,
+)
+from repro.sim.hostmodel import HostSignalModel
+from repro.sim.workload import MESSAGE_SIZES, AllReduceWorkload
+
+LATENCY_CH = "coll_allreduce_ms"
+STEP_CH = "step_latency_ms"
+
+
+@dataclasses.dataclass
+class Trial:
+    ts: np.ndarray                  # (T,) seconds, uniform grid
+    data: np.ndarray                # (C, T)
+    channels: List[str]
+    truth: CauseClass
+    t_on: float                     # injection time
+    dur_s: float
+    intensity: float
+    msg_bytes: int
+
+    @property
+    def rate_hz(self) -> float:
+        return 1.0 / float(self.ts[1] - self.ts[0])
+
+
+def make_trial(seed: int, disturbance: str, *, duration_s: float = 90.0,
+               rate_hz: float = 100.0, t_on: Optional[float] = None,
+               intensity: Optional[float] = None,
+               msg_bytes: Optional[int] = None,
+               confuser_prob: float = 0.6,
+               host_model: Optional[HostSignalModel] = None) -> Trial:
+    rng = np.random.default_rng(seed)
+    dist: Disturbance = DISTURBANCES[disturbance]
+    T = int(duration_s * rate_hz)
+    ts = np.arange(T) / rate_hz
+
+    hm = host_model or HostSignalModel(rate_hz=rate_hz)
+    channels, data = hm.generate(rng, T)
+
+    if t_on is None:
+        t_on = float(rng.uniform(32.0, 48.0))
+    dur = float(rng.uniform(*dist.dur_s))
+    if intensity is None:
+        intensity = float(np.clip(rng.lognormal(-0.1, 0.5), 0.33, 3.0))
+    mult = apply_disturbance(rng, channels, data, dist, rate_hz,
+                             t_on, dur, intensity)
+    # temporally coincident innocent-bystander activity in other subsystems
+    if rng.uniform() < confuser_prob:
+        others = [c for c in CLASS_ORDER if c != disturbance]
+        cls = others[int(rng.integers(0, len(others)))]
+        inject_confuser(rng, channels, data, cls, rate_hz, t_on,
+                        scale=float(rng.uniform(0.6, 1.4)))
+
+    # device channels are visible only at NVML cadence: 10 Hz zero-order hold
+    for i, name in enumerate(channels):
+        if name.startswith("dev_"):
+            k = int(rate_hz // 10)
+            data[i] = np.repeat(data[i][::k], k)[: data.shape[1]]
+
+    msg = int(msg_bytes if msg_bytes is not None
+              else MESSAGE_SIZES[rng.integers(8, len(MESSAGE_SIZES))])
+    wl = AllReduceWorkload(msg_bytes=msg)
+    L = wl.latency_series(rng, T, multiplier=mult)
+    # end-to-end step latency = collective + compute segment w/ its own noise
+    compute_ms = 18.0 * (1.0 + 0.03 * rng.standard_normal(T))
+    step = L + np.maximum(compute_ms, 0.0)
+
+    channels = channels + [LATENCY_CH, STEP_CH]
+    data = np.vstack([data, L[None, :], step[None, :]]).astype(np.float64)
+    return Trial(ts=ts, data=data, channels=channels, truth=dist.kind,
+                 t_on=t_on, dur_s=dur, intensity=intensity, msg_bytes=msg)
+
+
+# ---------------------------------------------------------------------------
+# evaluation protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EvalRecord:
+    trial_seed: int
+    truth: CauseClass
+    t_on: float
+    intensity: float
+    diagnoser: str
+    pred: CauseClass
+    time_to_rca: Optional[float]    # vs true injection time
+    wall_seconds: float
+
+
+def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = 17,
+             seed: int = 0, duration_s: float = 90.0,
+             rate_hz: float = 100.0,
+             classes: Sequence[str] = CLASS_ORDER) -> List[EvalRecord]:
+    records: List[EvalRecord] = []
+    for ci, cls in enumerate(classes):
+        for k in range(n_per_class):
+            trial_seed = seed * 100003 + ci * 1009 + k
+            trial = make_trial(trial_seed, cls, duration_s=duration_s,
+                               rate_hz=rate_hz)
+            for dg in diagnosers:
+                w0 = time.perf_counter()
+                res: DiagnoserResult = dg.diagnose_trial(
+                    trial.ts, trial.data.copy(), trial.channels)
+                wall = time.perf_counter() - w0
+                ttr = (res.t_rca - trial.t_on) if res.t_rca is not None else None
+                records.append(EvalRecord(
+                    trial_seed=trial_seed, truth=trial.truth, t_on=trial.t_on,
+                    intensity=trial.intensity, diagnoser=dg.name,
+                    pred=res.pred, time_to_rca=ttr, wall_seconds=wall))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# aggregation (Tables 2/3/4)
+# ---------------------------------------------------------------------------
+
+def accuracy_by_class(records: Sequence[EvalRecord], diagnoser: str,
+                      ) -> Dict[CauseClass, float]:
+    out: Dict[CauseClass, float] = {}
+    for cls in (CauseClass.IO, CauseClass.CPU, CauseClass.NIC, CauseClass.GPU):
+        rs = [r for r in records if r.diagnoser == diagnoser and r.truth == cls]
+        if rs:
+            out[cls] = sum(r.pred == r.truth for r in rs) / len(rs)
+    return out
+
+
+def mean_accuracy(records: Sequence[EvalRecord], diagnoser: str) -> float:
+    acc = accuracy_by_class(records, diagnoser)
+    return float(np.mean(list(acc.values()))) if acc else 0.0
+
+
+def confusion_matrix(records: Sequence[EvalRecord], diagnoser: str,
+                     ) -> Tuple[List[CauseClass], np.ndarray]:
+    classes = [CauseClass.IO, CauseClass.CPU, CauseClass.NIC, CauseClass.GPU]
+    cm = np.zeros((4, 5))
+    cols = classes + [CauseClass.UNKNOWN]
+    for r in records:
+        if r.diagnoser != diagnoser:
+            continue
+        i = classes.index(r.truth)
+        j = cols.index(r.pred) if r.pred in cols else 4
+        cm[i, j] += 1
+    row = cm.sum(axis=1, keepdims=True)
+    row[row == 0] = 1
+    return classes, cm / row
+
+
+def rca_time_by_class(records: Sequence[EvalRecord], diagnoser: str,
+                      correct_only: bool = True) -> Dict[CauseClass, float]:
+    out: Dict[CauseClass, float] = {}
+    for cls in (CauseClass.IO, CauseClass.CPU, CauseClass.NIC, CauseClass.GPU):
+        vals = [r.time_to_rca for r in records
+                if r.diagnoser == diagnoser and r.truth == cls
+                and r.time_to_rca is not None
+                and (not correct_only or r.pred == r.truth)]
+        if vals:
+            out[cls] = float(np.mean(vals))
+    return out

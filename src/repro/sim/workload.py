@@ -1,0 +1,60 @@
+"""W1: all_reduce_perf latency model (paper §3.1).
+
+Ring all-reduce cost model over n devices with message size S:
+
+    L_base(S) = alpha * 2(n-1)  +  2(n-1)/n * S / B_eff
+
+(alpha = per-hop launch+sync latency, B_eff = per-link effective bandwidth).
+Per-iteration latency then carries multiplicative lognormal jitter with AR(1)
+temporal correlation — matching the heavy-ish right tail real NCCL iteration
+timings show — and is modulated by the disturbance multiplier series
+(:mod:`repro.sim.disturbances`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: all_reduce_perf sweep (paper: 1 KB .. 64 MB)
+MESSAGE_SIZES = [2 ** p for p in range(10, 27)]  # 1 KiB .. 64 MiB
+
+
+@dataclasses.dataclass
+class AllReduceWorkload:
+    n_devices: int = 4
+    msg_bytes: int = 16 * 2 ** 20          # representative default: 16 MiB
+    link_bw: float = 220e9                 # NVLink-ish per-link B/s
+    alpha_us: float = 6.0                  # per-hop latency
+    jitter_cv: float = 0.06                # lognormal coefficient of variation
+    ar_rho: float = 0.85                   # AR(1) at 100 Hz (~60 ms memory)
+
+    @property
+    def base_latency_ms(self) -> float:
+        n, s = self.n_devices, float(self.msg_bytes)
+        hops = 2 * (n - 1)
+        bw_term = hops / n * s / self.link_bw
+        return self.alpha_us * hops * 1e-3 + bw_term * 1e3
+
+    def busbw_gbs(self, latency_ms: float) -> float:
+        """all_reduce_perf's 'busbw' for reporting."""
+        n, s = self.n_devices, float(self.msg_bytes)
+        algbw = s / (latency_ms * 1e-3)
+        return algbw * 2 * (n - 1) / n / 1e9
+
+    def latency_series(self, rng: np.random.Generator, T: int,
+                       multiplier: np.ndarray | None = None) -> np.ndarray:
+        """(T,) per-iteration latency in ms at the telemetry grid rate."""
+        sigma = np.sqrt(np.log(1.0 + self.jitter_cv ** 2))
+        eps = rng.standard_normal(T)
+        ar = np.empty(T)
+        acc = 0.0
+        c = np.sqrt(1.0 - self.ar_rho ** 2)
+        for t in range(T):
+            acc = self.ar_rho * acc + c * eps[t]
+            ar[t] = acc
+        jitter = np.exp(sigma * ar - 0.5 * sigma ** 2)
+        L = self.base_latency_ms * jitter
+        if multiplier is not None:
+            L = L * np.asarray(multiplier, dtype=np.float64)
+        return L

@@ -1,0 +1,27 @@
+"""Telemetry substrate: ring buffers, collectors, sampling agent, clock sync.
+
+Layer 1 of the paper's four-layer pipeline: multi-source signal collection.
+Host signals are sampled at 100 Hz (paper: eBPF probes), device signals at
+10 Hz (paper: NVML).  All samples carry a monotonic-clock timestamp and are
+resampled onto a common 100 Hz timeline by :mod:`repro.telemetry.sync`.
+"""
+from repro.telemetry.schema import (
+    MetricSpec, SignalGroup, METRIC_REGISTRY, HOST_METRICS, DEVICE_METRICS,
+    metric_names, metrics_in_group,
+)
+from repro.telemetry.ringbuffer import RingBuffer, MultiChannelRing
+from repro.telemetry.collectors import (
+    Collector, ProcCollector, SimCollector, DeviceMetricSource, available_proc_sources,
+)
+from repro.telemetry.agent import TelemetryAgent, AgentStats
+from repro.telemetry.sync import resample_to_grid, align_windows
+
+__all__ = [
+    "MetricSpec", "SignalGroup", "METRIC_REGISTRY", "HOST_METRICS", "DEVICE_METRICS",
+    "metric_names", "metrics_in_group",
+    "RingBuffer", "MultiChannelRing",
+    "Collector", "ProcCollector", "SimCollector", "DeviceMetricSource",
+    "available_proc_sources",
+    "TelemetryAgent", "AgentStats",
+    "resample_to_grid", "align_windows",
+]

@@ -1,0 +1,127 @@
+"""Fixed-capacity ring buffers for telemetry samples.
+
+Production constraint (paper §2: "operates with 1.21% CPU overhead at 100
+Hz"): the hot path must be allocation-free.  ``RingBuffer`` writes into a
+preallocated numpy array; ``MultiChannelRing`` packs all channels of one host
+into a single (C, N) array so a window snapshot is one contiguous slice —
+that snapshot is exactly the (metrics × window) tile the correlation kernels
+consume.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class RingBuffer:
+    """Single-channel ring of (timestamp, value) with O(1) append."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._ts = np.zeros(self.capacity, dtype=np.float64)
+        self._val = np.zeros(self.capacity, dtype=np.float32)
+        self._head = 0          # next write slot
+        self._count = 0         # valid samples (<= capacity)
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def full(self) -> bool:
+        return self._count == self.capacity
+
+    def append(self, ts: float, value: float) -> None:
+        self._ts[self._head] = ts
+        self._val[self._head] = value
+        self._head = (self._head + 1) % self.capacity
+        if self._count < self.capacity:
+            self._count += 1
+
+    def extend(self, ts: np.ndarray, values: np.ndarray) -> None:
+        for t, v in zip(np.asarray(ts, dtype=np.float64).ravel(),
+                        np.asarray(values, dtype=np.float32).ravel()):
+            self.append(float(t), float(v))
+
+    def view(self, last_n: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Chronologically ordered copy of the newest ``last_n`` samples."""
+        n = self._count if last_n is None else min(last_n, self._count)
+        if n == 0:
+            return (np.empty(0, dtype=np.float64), np.empty(0, dtype=np.float32))
+        start = (self._head - n) % self.capacity
+        idx = (start + np.arange(n)) % self.capacity
+        return self._ts[idx].copy(), self._val[idx].copy()
+
+    def latest(self) -> Tuple[float, float]:
+        if self._count == 0:
+            raise IndexError("empty ring")
+        i = (self._head - 1) % self.capacity
+        return float(self._ts[i]), float(self._val[i])
+
+
+class MultiChannelRing:
+    """All channels of one host packed into a (C, N) ring.
+
+    Every ``push_row`` writes one column (one sample instant across all
+    channels).  ``window(n)`` returns a contiguous (C, n) snapshot plus the
+    timestamp vector — the unit of work handed to the correlation engine.
+    """
+
+    def __init__(self, channels: Sequence[str], capacity: int):
+        if not channels:
+            raise ValueError("need at least one channel")
+        self.channels: List[str] = list(channels)
+        self.index: Dict[str, int] = {c: i for i, c in enumerate(self.channels)}
+        if len(self.index) != len(self.channels):
+            raise ValueError("duplicate channel names")
+        self.capacity = int(capacity)
+        self._ts = np.zeros(self.capacity, dtype=np.float64)
+        self._data = np.full((len(self.channels), self.capacity), np.nan,
+                             dtype=np.float32)
+        self._head = 0
+        self._count = 0
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.channels)
+
+    def push_row(self, ts: float, values: Dict[str, float]) -> None:
+        col = self._head
+        self._ts[col] = ts
+        for name, v in values.items():
+            i = self.index.get(name)
+            if i is not None:
+                self._data[i, col] = np.float32(v)
+        # channels absent from this sample instant carry forward last value
+        missing = set(self.channels) - set(values)
+        if missing and self._count > 0:
+            prev = (col - 1) % self.capacity
+            for name in missing:
+                i = self.index[name]
+                self._data[i, col] = self._data[i, prev]
+        elif missing:
+            for name in missing:
+                self._data[self.index[name], col] = 0.0
+        self._head = (self._head + 1) % self.capacity
+        if self._count < self.capacity:
+            self._count += 1
+
+    def window(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Newest ``n`` columns, chronological: (ts[n], data[C, n])."""
+        n = min(int(n), self._count)
+        if n == 0:
+            return (np.empty(0, np.float64),
+                    np.empty((self.n_channels, 0), np.float32))
+        start = (self._head - n) % self.capacity
+        idx = (start + np.arange(n)) % self.capacity
+        return self._ts[idx].copy(), self._data[:, idx].copy()
+
+    def channel(self, name: str, n: Optional[int] = None) -> np.ndarray:
+        ts, data = self.window(self._count if n is None else n)
+        del ts
+        return data[self.index[name]]

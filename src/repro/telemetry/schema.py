@@ -1,0 +1,163 @@
+"""Metric registry: names, signal groups, cause mapping.
+
+The paper's taxonomy (§2.2) classifies interference into Host System
+Interference (CPU contention, I/O pressure), Network Interference (NIC
+contention) and Microarchitectural Interference (GPU throttling).  Every
+telemetry channel belongs to a :class:`SignalGroup`, and each group maps to
+the cause class it is evidence for.  The correlation engine is agnostic to
+the concrete channel list — it consumes whatever the registry declares — so
+deployments can register extra probes without touching engine code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+
+class SignalGroup(str, enum.Enum):
+    """Probe groups.  Mirrors the paper's probe families (§2.1)."""
+
+    NET = "net"            # NET_RX softirqs, NIC queue lengths, rx/tx bytes
+    SCHED = "sched"        # sched_switch rate, runqueue length, involuntary ctx
+    BLOCK_IO = "block_io"  # block I/O throughput, in-flight ios, io wait
+    PCIE = "pcie"          # host-device DMA counters (PCIe on GPU, infeed on TPU)
+    DEVICE = "device"      # NVML-like: util, mem, power, temperature, clock
+    COLLECTIVE = "collective"  # NCCL/JAX collective phase latency marks
+    STEP = "step"          # training/serving step latency (the diagnosed series)
+
+
+class CauseClass(str, enum.Enum):
+    """Root-cause classes (paper Table 3/4 rows)."""
+
+    IO = "io_pressure"
+    CPU = "cpu_contention"
+    NIC = "nic_contention"
+    GPU = "gpu_throttling"
+    UNKNOWN = "unknown"
+
+
+#: Which signal groups are *evidence for* which cause class.  The paper's
+#: rules: NET -> NIC contention, SCHED -> CPU contention, BLOCK_IO/PCIE -> I/O
+#: pressure, DEVICE (power/temp/clock) -> GPU throttling.  STEP/COLLECTIVE are
+#: the latency series being explained, not evidence.
+GROUP_TO_CAUSE: Dict[SignalGroup, CauseClass] = {
+    SignalGroup.NET: CauseClass.NIC,
+    SignalGroup.SCHED: CauseClass.CPU,
+    SignalGroup.BLOCK_IO: CauseClass.IO,
+    SignalGroup.PCIE: CauseClass.IO,
+    SignalGroup.DEVICE: CauseClass.GPU,
+}
+
+#: Device channels that are *symptoms*, not causes: utilisation and memory
+#: track load under every interference type, so treating them as
+#: GPU-throttling evidence would let the GPU class absorb all diagnoses.
+#: The paper's taxonomy uses throttle indicators (power/temp/clock) only.
+NON_EVIDENCE: frozenset = frozenset({"dev_util", "dev_mem_used"})
+
+#: Anomaly orientation per channel: +1 a rise is anomalous (default),
+#: -1 a drop is anomalous (clock/power collapse under a power cap),
+#:  0 two-sided (|deviation|; DMA rates can contend either way).
+ORIENTATION: Dict[str, float] = {
+    "dev_clock": -1.0,
+    "dev_power": -1.0,
+    "dev_temp": 1.0,
+    "pcie_h2d_bytes": 0.0,
+    "pcie_d2h_bytes": 0.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One telemetry channel."""
+
+    name: str
+    group: SignalGroup
+    unit: str
+    rate_hz: float            # nominal sampling rate (100 host / 10 device)
+    monotonic_counter: bool   # True if raw reads are cumulative counters
+    description: str = ""
+
+    @property
+    def cause(self) -> Optional[CauseClass]:
+        if self.name in NON_EVIDENCE:
+            return None
+        return GROUP_TO_CAUSE.get(self.group)
+
+
+def _m(name, group, unit, rate, counter, desc) -> MetricSpec:
+    return MetricSpec(name, group, unit, rate, counter, desc)
+
+
+# ---------------------------------------------------------------------------
+# Host-side channels (paper: eBPF @100 Hz).  Our ProcCollector reads the same
+# kernel subsystems via /proc; SimCollector synthesizes them.
+# ---------------------------------------------------------------------------
+HOST_METRICS: List[MetricSpec] = [
+    # NET group  (paper: NET_RX softirq counts, NIC queue lengths)
+    _m("net_rx_softirq", SignalGroup.NET, "events/s", 100.0, True,
+       "NET_RX softirq fire rate (per-CPU sum)"),
+    _m("net_tx_softirq", SignalGroup.NET, "events/s", 100.0, True,
+       "NET_TX softirq fire rate"),
+    _m("nic_rx_bytes", SignalGroup.NET, "B/s", 100.0, True, "NIC rx throughput"),
+    _m("nic_tx_bytes", SignalGroup.NET, "B/s", 100.0, True, "NIC tx throughput"),
+    _m("nic_rx_drops", SignalGroup.NET, "pkts/s", 100.0, True, "rx drops (queue overflow)"),
+    # SCHED group  (paper: sched_switch tracing)
+    _m("sched_switch_rate", SignalGroup.SCHED, "switch/s", 100.0, True,
+       "context-switch rate"),
+    _m("runqueue_len", SignalGroup.SCHED, "tasks", 100.0, False,
+       "runnable tasks (loadavg-granular proxy)"),
+    _m("involuntary_ctx", SignalGroup.SCHED, "switch/s", 100.0, True,
+       "involuntary preemptions of the workload process"),
+    _m("cpu_util_other", SignalGroup.SCHED, "frac", 100.0, False,
+       "CPU utilisation by co-located processes"),
+    # BLOCK_IO group
+    _m("blkio_read_bytes", SignalGroup.BLOCK_IO, "B/s", 100.0, True, "disk read throughput"),
+    _m("blkio_write_bytes", SignalGroup.BLOCK_IO, "B/s", 100.0, True, "disk write throughput"),
+    _m("blkio_inflight", SignalGroup.BLOCK_IO, "ios", 100.0, False, "in-flight block requests"),
+    _m("iowait_frac", SignalGroup.BLOCK_IO, "frac", 100.0, False, "CPU iowait fraction"),
+    # PCIE / host-device DMA group
+    _m("pcie_h2d_bytes", SignalGroup.PCIE, "B/s", 100.0, True,
+       "host-to-device DMA throughput (TPU infeed)"),
+    _m("pcie_d2h_bytes", SignalGroup.PCIE, "B/s", 100.0, True,
+       "device-to-host DMA throughput (outfeed)"),
+]
+
+# ---------------------------------------------------------------------------
+# Device channels (paper: NVML @10 Hz + NCCL phase marks)
+# ---------------------------------------------------------------------------
+DEVICE_METRICS: List[MetricSpec] = [
+    _m("dev_util", SignalGroup.DEVICE, "frac", 10.0, False, "device busy fraction"),
+    _m("dev_mem_used", SignalGroup.DEVICE, "B", 10.0, False, "device memory used"),
+    _m("dev_power", SignalGroup.DEVICE, "W", 10.0, False, "device power draw"),
+    _m("dev_temp", SignalGroup.DEVICE, "C", 10.0, False, "device temperature"),
+    _m("dev_clock", SignalGroup.DEVICE, "MHz", 10.0, False,
+       "SM/core clock (drops under power-cap throttling)"),
+    _m("coll_allreduce_ms", SignalGroup.COLLECTIVE, "ms", 100.0, False,
+       "per-iteration all-reduce phase latency (NCCL/JAX mark)"),
+    _m("step_latency_ms", SignalGroup.STEP, "ms", 100.0, False,
+       "end-to-end step latency — the diagnosed series L(t)"),
+]
+
+METRIC_REGISTRY: Dict[str, MetricSpec] = {
+    m.name: m for m in HOST_METRICS + DEVICE_METRICS
+}
+
+#: The series the engine diagnoses (paper: GPU latency L(t)).
+LATENCY_METRIC = "coll_allreduce_ms"
+
+
+def metric_names(include_device: bool = True) -> List[str]:
+    out = [m.name for m in HOST_METRICS]
+    if include_device:
+        out += [m.name for m in DEVICE_METRICS]
+    return out
+
+
+def metrics_in_group(group: SignalGroup) -> List[MetricSpec]:
+    return [m for m in METRIC_REGISTRY.values() if m.group == group]
+
+
+def evidence_metrics() -> List[MetricSpec]:
+    """Channels usable as RCA evidence (everything with a cause mapping)."""
+    return [m for m in METRIC_REGISTRY.values() if m.cause is not None]

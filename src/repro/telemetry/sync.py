@@ -1,0 +1,95 @@
+"""Temporal synchronization (paper Layer 2, first half).
+
+Signals arrive at heterogeneous rates (100 Hz host, 10 Hz device, per-step
+latency marks).  The correlation math needs them on one uniform grid with a
+shared monotonic clock.  ``resample_to_grid`` does zero-order-hold
+resampling (the right choice for counters-turned-rates and gauges alike:
+linear interpolation would smear spike edges, weakening lagged correlation).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def resample_to_grid(ts: np.ndarray, values: np.ndarray,
+                     grid: np.ndarray) -> np.ndarray:
+    """Zero-order-hold resample of (ts, values) onto ``grid``.
+
+    Grid points before the first sample get the first value (cold-start);
+    NaNs are forward-filled first so a late-joining channel doesn't poison
+    the correlation window.
+    """
+    ts = np.asarray(ts, dtype=np.float64)
+    values = np.asarray(values, dtype=np.float64)
+    if ts.size == 0:
+        return np.zeros_like(grid, dtype=np.float64)
+    # forward-fill NaNs
+    if np.isnan(values).any():
+        filled = values.copy()
+        last = 0.0
+        for i in range(filled.size):
+            if np.isnan(filled[i]):
+                filled[i] = last
+            else:
+                last = filled[i]
+        values = filled
+    idx = np.searchsorted(ts, grid, side="right") - 1
+    idx = np.clip(idx, 0, ts.size - 1)
+    return values[idx]
+
+
+def make_grid(t_start: float, t_end: float, rate_hz: float) -> np.ndarray:
+    n = max(1, int(round((t_end - t_start) * rate_hz)))
+    return t_start + np.arange(n, dtype=np.float64) / rate_hz
+
+
+def align_windows(series: Dict[str, Tuple[np.ndarray, np.ndarray]],
+                  rate_hz: float = 100.0,
+                  duration_s: float | None = None,
+                  ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    """Align a dict of ``name -> (ts, values)`` onto one shared grid.
+
+    The grid covers the *intersection* of all channels' time spans (clipped
+    to the trailing ``duration_s`` if given) so no channel is extrapolated
+    across its whole window.  Returns ``(grid, {name: resampled})``.
+    """
+    starts: List[float] = []
+    ends: List[float] = []
+    for name, (ts, _) in series.items():
+        if ts.size == 0:
+            continue
+        starts.append(float(ts[0]))
+        ends.append(float(ts[-1]))
+    if not starts:
+        raise ValueError("all channels empty")
+    t0, t1 = max(starts), min(ends)
+    if t1 <= t0:
+        # Degenerate overlap (e.g. one channel only just started): fall back
+        # to the widest span; ZOH handles the edges.
+        t0, t1 = min(starts), max(ends)
+    if duration_s is not None:
+        t0 = max(t0, t1 - duration_s)
+    grid = make_grid(t0, t1, rate_hz)
+    out = {name: resample_to_grid(ts, v, grid) for name, (ts, v) in series.items()}
+    return grid, out
+
+
+def counters_to_rates(ts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Convert a cumulative counter series to per-second rates.
+
+    Kernel counters (softirq fires, nic bytes, blkio sectors) are cumulative;
+    the correlation engine wants instantaneous rates.  Handles counter resets
+    (negative deltas -> 0).
+    """
+    ts = np.asarray(ts, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.float64)
+    if counts.size < 2:
+        return np.zeros_like(counts)
+    dt = np.diff(ts)
+    dt[dt <= 0] = np.finfo(np.float64).eps
+    dv = np.diff(counts)
+    dv[dv < 0] = 0.0
+    rates = dv / dt
+    return np.concatenate([[rates[0]], rates])

@@ -1,0 +1,14 @@
+"""Training stack: optimizers, train-step builder, remat policy, loop."""
+from repro.train.optimizer import (
+    OptConfig, adamw_init, adamw_update, adafactor_init, adafactor_update,
+    make_optimizer,
+)
+from repro.train.step import TrainState, build_train_step, train_state_logical
+from repro.train.remat import remat_policy, current_remat
+
+__all__ = [
+    "OptConfig", "adamw_init", "adamw_update", "adafactor_init",
+    "adafactor_update", "make_optimizer",
+    "TrainState", "build_train_step", "train_state_logical",
+    "remat_policy", "current_remat",
+]

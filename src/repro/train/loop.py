@@ -1,0 +1,122 @@
+"""Training loop: data pipeline + jit'd step + telemetry + checkpoint/restart.
+
+This is the deployment wiring of the paper's system: the loop runs the
+TelemetryAgent beside the step function, pushes step/collective latency
+marks into the device channel, periodically asks the FleetMonitor for a
+diagnosis, logs mitigation hints, and survives injected failures through
+atomic checkpoints + resume_or_init (restart = run the same command).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, FailureInjector, resume_or_init
+from repro.core.engine import EngineConfig
+from repro.data.pipeline import PipelineConfig, SyntheticLMPipeline
+from repro.models.registry import Model
+from repro.monitor.fleet import FleetMonitor, Mitigation
+from repro.monitor.hooks import StepTelemetry
+from repro.train.optimizer import OptConfig
+from repro.train.remat import remat_policy
+from repro.train.step import build_train_step, init_train_state
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    checkpoint_every: int = 20
+    diagnose_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    remat: str = "none"
+    telemetry: bool = True
+    telemetry_rate_hz: float = 100.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    losses: List[float]
+    step_ms: List[float]
+    diagnoses: List[Any]
+    telemetry_overhead_pct: Optional[float]
+
+
+def run_training(model: Model, pipeline: SyntheticLMPipeline,
+                 opt_cfg: OptConfig, loop_cfg: LoopConfig,
+                 injector: Optional[FailureInjector] = None,
+                 monitor: Optional[FleetMonitor] = None) -> LoopResult:
+    ckpt = Checkpointer(loop_cfg.ckpt_dir)
+    with remat_policy(loop_cfg.remat):
+        step_fn = jax.jit(build_train_step(model, opt_cfg,
+                                           microbatch=0),
+                          donate_argnums=(0,))
+
+        def init():
+            return init_train_state(model, jax.random.key(loop_cfg.seed),
+                                    opt_cfg)
+
+        state, start = resume_or_init(ckpt, init)
+        if start > 0:
+            log.info("resumed from checkpoint at step %d", start)
+
+        tele = StepTelemetry(rate_hz=loop_cfg.telemetry_rate_hz) \
+            if loop_cfg.telemetry else None
+        if tele:
+            tele.start()
+        pipeline.start(start_step=start)
+        it = iter(pipeline)
+
+        losses: List[float] = []
+        step_ms: List[float] = []
+        diagnoses: List[Any] = []
+        step = start
+        try:
+            for step in range(start, loop_cfg.steps):
+                batch_np = next(it)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                if tele:
+                    tele.step_begin()
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                if tele:
+                    ms = tele.step_end()
+                    step_ms.append(ms)
+                losses.append(loss)
+                if injector:
+                    injector.maybe_fail(step, "after_step")
+                if (step + 1) % loop_cfg.checkpoint_every == 0:
+                    if injector:
+                        injector.maybe_fail(step, "mid_checkpoint")
+                    ckpt.save(step, state)
+                # fleet diagnosis pass over the trailing telemetry window
+                if (monitor is not None and tele is not None
+                        and (step + 1) % loop_cfg.diagnose_every == 0):
+                    ts, data = tele.agent.window(30.0)
+                    if ts.size > int(10 * loop_cfg.telemetry_rate_hz):
+                        fd = monitor.diagnose_fleet(
+                            ts, data[None], tele.agent.channels)
+                        diagnoses.append(fd)
+                        if fd.mitigation != Mitigation.NONE:
+                            log.warning(
+                                "step %d: straggler host %d (S=%.1f) -> %s",
+                                step, fd.straggler_host, fd.straggler_score,
+                                fd.mitigation.value)
+        finally:
+            pipeline.stop()
+            overhead = None
+            if tele:
+                stats = tele.stop()
+                overhead = 100.0 * stats.overhead_frac
+        return LoopResult(final_step=step, losses=losses, step_ms=step_ms,
+                          diagnoses=diagnoses,
+                          telemetry_overhead_pct=overhead)

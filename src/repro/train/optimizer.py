@@ -1,0 +1,170 @@
+"""Optimizers: AdamW and Adafactor, pure-pytree, sharding-inheriting.
+
+ZeRO posture: every optimizer state tensor inherits its parameter's
+PartitionSpec — and since params are FSDP-sharded over ("data", "model"),
+the m/v (or factored) moments are fully sharded with zero extra plumbing.
+No fp32 master copy by default (bf16 params + fp32 moments = 10 bytes per
+param); flip ``master_fp32`` for the classic 14-byte layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    master_fp32: bool = False
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum((step.astype(jnp.float32) + 1.0)
+                       / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params)}
+
+
+def adamw_update(cfg: OptConfig, params, grads, state, step):
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    p_leaves, tdef = jax.tree.flatten(params)
+    g_leaves = tdef.flatten_up_to(grads)
+    m_leaves = tdef.flatten_up_to(state["m"])
+    v_leaves = tdef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        delta = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+        new_m.append(m_new)
+        new_v.append(v_new)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"m": jax.tree.unflatten(tdef, new_m),
+             "v": jax.tree.unflatten(tdef, new_v)})
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — the giant-model option)
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptConfig) -> Dict[str, Any]:
+    def init_one(p):
+        if _factored(p.shape, cfg.min_dim_factored):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(init_one, params)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state, step):
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    p_leaves, tdef = jax.tree.flatten(params)
+    g_leaves = tdef.flatten_up_to(grads)
+    s_leaves = tdef.flatten_up_to(state["f"])
+    new_p, new_s = [], []
+    for p, g, s in zip(p_leaves, g_leaves, s_leaves):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (vr[..., None]
+                     / jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                   1e-30)[..., None]) * vc[..., None, :]
+            upd = g32 / jnp.sqrt(denom + 1e-30)
+            s_new = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            upd = g32 / jnp.sqrt(v + 1e-30)
+            s_new = {"v": v}
+        rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)     # Adafactor RMS clip
+        upd = upd / jnp.maximum(1.0, rms)
+        new_p.append((p.astype(jnp.float32) - lr * upd
+                      - lr * cfg.weight_decay * p.astype(jnp.float32)
+                      ).astype(p.dtype))
+        new_s.append(s_new)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"f": jax.tree.unflatten(tdef, new_s)})
+
+
+def make_optimizer(cfg: OptConfig):
+    """(init_fn, update_fn) closures over the config."""
+    if cfg.kind == "adamw":
+        return (adamw_init,
+                lambda p, g, s, t: adamw_update(cfg, p, g, s, t))
+    if cfg.kind == "adafactor":
+        return (lambda p: adafactor_init(p, cfg),
+                lambda p, g, s, t: adafactor_update(cfg, p, g, s, t))
+    raise ValueError(f"unknown optimizer {cfg.kind!r}")
+
+
+def opt_state_logical(param_logical, opt_cfg: OptConfig,
+                      abstract_params=None):
+    """Logical-axis tree for the optimizer state (inherits param axes).
+
+    For Adafactor the factored moments drop one axis; we reproduce the
+    same structural transform on the logical tree (needs abstract params
+    to know which leaves factored).
+    """
+    if opt_cfg.kind == "adamw":
+        return {"m": param_logical, "v": param_logical}
+    assert abstract_params is not None
+
+    def one(logical, p):
+        if _factored(p.shape, opt_cfg.min_dim_factored):
+            return {"vr": tuple(logical[:-1]),
+                    "vc": tuple(logical[:-2]) + tuple(logical[-1:])}
+        return {"v": tuple(logical)}
+
+    p_leaves, tdef = jax.tree.flatten(abstract_params)
+    l_leaves = tdef.flatten_up_to(param_logical)
+    out = [one(l, p) for l, p in zip(l_leaves, p_leaves)]
+    return {"f": jax.tree.unflatten(tdef, out)}

@@ -1,0 +1,50 @@
+"""Remat (activation checkpointing) policy context.
+
+Model assemblies call ``maybe_remat(body)`` around their scan bodies; the
+active policy decides what gets saved:
+
+  none    - save everything (fastest, most memory)
+  full    - save only layer boundaries (recompute whole layer on bwd)
+  dots    - save matmul outputs, recompute elementwise (middle ground)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable
+
+import jax
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.policy = "none"
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def remat_policy(policy: str):
+    if policy not in ("none", "full", "dots"):
+        raise ValueError(f"unknown remat policy {policy!r}")
+    prev = _STATE.policy
+    _STATE.policy = policy
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def current_remat() -> str:
+    return _STATE.policy
+
+
+def maybe_remat(fn: Callable) -> Callable:
+    p = _STATE.policy
+    if p == "none":
+        return fn
+    if p == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)

@@ -1,0 +1,113 @@
+"""Train-step builder: grad + clip + optimizer, microbatch accumulation,
+telemetry phase marks.
+
+The returned ``step(state, batch)`` is a single jit-able function whose
+in/out shardings are derived from the model's logical axes — the dry-run
+lowers exactly this function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.train.optimizer import (
+    OptConfig, clip_by_global_norm, make_optimizer, opt_state_logical,
+)
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.opt), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.step, s.params, s.opt), None),
+    lambda aux, c: TrainState(*c))
+
+
+def init_train_state(model: Model, rng: jax.Array,
+                     opt_cfg: OptConfig) -> TrainState:
+    params = model.init(rng)
+    opt_init, _ = make_optimizer(opt_cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=opt_init(params))
+
+
+def train_state_logical(model: Model, opt_cfg: OptConfig) -> Dict[str, Any]:
+    """Logical-axis pytree matching TrainState (for sharding derivation)."""
+    pl = model.param_logical
+    abstract = model.abstract_params()
+    return {
+        "step": (),
+        "params": pl,
+        "opt": opt_state_logical(pl, opt_cfg, abstract),
+    }
+
+
+def build_train_step(model: Model, opt_cfg: OptConfig,
+                     microbatch: int = 0) -> Callable:
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``microbatch`` > 0 splits the batch into that many accumulation chunks
+    (sequential grad accumulation inside one jit — the standard trick when
+    the per-step batch exceeds activation memory).
+    """
+    _, opt_update = make_optimizer(opt_cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatch == 0, (b, microbatch)
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            g = jax.tree.map(lambda x: x / microbatch, g)
+            return loss_sum / microbatch, {}, g
+        (loss, metrics), g = grad_fn(params, batch)
+        return loss, metrics, g
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Any]]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_opt = opt_update(state.params, grads, state.opt,
+                                         state.step)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt=new_opt)
+        out = {"loss": loss, "grad_norm": gnorm}
+        out.update({k: v for k, v in metrics.items()
+                    if isinstance(v, jax.Array)})
+        return new_state, out
+
+    return step

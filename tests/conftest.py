@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run manages its own
+# placeholder devices in a separate process — never set XLA_FLAGS here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+from repro.core.baselines import make_baseline
+from repro.core.taxonomy import CauseClass
+from repro.sim.scenario import make_trial
+
+
+@pytest.mark.parametrize("name", ["ours", "b1", "b2", "b3"])
+def test_all_baselines_return_verdicts(name):
+    trial = make_trial(42, "gpu", intensity=2.2, confuser_prob=0.0)
+    dg = make_baseline(name)
+    res = dg.diagnose_trial(trial.ts, trial.data, trial.channels)
+    assert isinstance(res.pred, CauseClass)
+    assert res.pred != CauseClass.UNKNOWN
+
+
+def test_b1_sees_gpu_directly():
+    trial = make_trial(43, "gpu", intensity=2.0, confuser_prob=0.0)
+    res = make_baseline("b1").diagnose_trial(trial.ts, trial.data,
+                                             trial.channels)
+    assert res.pred == CauseClass.GPU
+    assert res.t_rca is not None and res.t_rca > trial.t_on + 30
+
+
+def test_b2_is_offline_slow():
+    trial = make_trial(44, "io", intensity=2.0, confuser_prob=0.0)
+    res = make_baseline("b2").diagnose_trial(trial.ts, trial.data,
+                                             trial.channels)
+    assert res.t_rca - trial.t_on > 20.0
+
+
+def test_ours_faster_than_deep_profiling():
+    trial = make_trial(45, "cpu", intensity=2.0, confuser_prob=0.0)
+    ours = make_baseline("ours").diagnose_trial(trial.ts, trial.data.copy(),
+                                                trial.channels)
+    b3 = make_baseline("b3").diagnose_trial(trial.ts, trial.data.copy(),
+                                            trial.channels)
+    assert ours.t_rca is not None and b3.t_rca is not None
+    assert ours.t_rca < b3.t_rca

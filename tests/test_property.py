@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.confidence import combine_confidence, squash_spike
+from repro.core.spike import baseline_stats, detect, spike_scores_matrix
+from repro.core.xcorr import lagged_xcorr, max_abs_xcorr
+
+finite = st.floats(-1e6, 1e6, allow_nan=False, allow_infinity=False,
+                   width=32)
+
+
+@given(hnp.arrays(np.float64, st.integers(30, 200), elements=finite))
+@settings(max_examples=50, deadline=None)
+def test_baseline_stats_sigma_positive(x):
+    mu, sd = baseline_stats(x)
+    assert sd > 0
+    assert np.isfinite(mu)
+
+
+@given(hnp.arrays(np.float64, (6, 300), elements=finite),
+       hnp.arrays(np.float64, 300,
+                  elements=st.floats(-100, 100, allow_nan=False, width=32)))
+@settings(max_examples=30, deadline=None)
+def test_xcorr_always_bounded(M, L):
+    rho = lagged_xcorr(L, M, 20)
+    assert np.all(np.abs(rho) <= 1.0 + 1e-6)
+    assert np.all(np.isfinite(rho))
+
+
+@given(st.floats(0.1, 100.0), st.floats(-1000, 1000))
+@settings(max_examples=50, deadline=None)
+def test_xcorr_affine_invariance(scale, shift):
+    rng = np.random.default_rng(0)
+    L = rng.normal(0, 1, 400)
+    M = rng.normal(0, 1, (3, 400))
+    r1 = lagged_xcorr(L, M, 10)
+    r2 = lagged_xcorr(L, scale * M + shift, 10)
+    np.testing.assert_allclose(r1, r2, atol=1e-7)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_spike_detect_never_fires_below_threshold_mean(seed):
+    """A window identical in distribution to its baseline must (almost)
+    never produce a persistent 3-sigma detection."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(10, 1, 2000)
+    win = rng.normal(10, 1, 500)
+    hit, _, _ = detect(win, base, threshold=3.0, persistence=0.3)
+    assert not hit
+
+
+@given(hnp.arrays(np.float64, (4, 100),
+                  elements=st.floats(0, 50, allow_nan=False, width=32)))
+@settings(max_examples=30, deadline=None)
+def test_squash_monotone_bounded(x):
+    s = squash_spike(x)
+    assert np.all((0 <= s) & (s < 1))
+    flat = np.sort(x.ravel())
+    sq = squash_spike(flat)
+    assert np.all(np.diff(sq) >= -1e-12)
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_confidence_interpolates(alpha):
+    s = np.array([10.0, 0.0])
+    c = np.array([0.2, 0.9])
+    conf = combine_confidence(s, c, alpha)
+    assert np.all(conf >= 0) and np.all(conf <= 1.0)
+    # alpha=0 -> pure correlation; alpha=1 -> pure (squashed) spike
+    if alpha == 0.0:
+        np.testing.assert_allclose(conf, c)
+
+
+@given(st.integers(1, 8), st.integers(130, 400))
+@settings(max_examples=20, deadline=None)
+def test_scores_matrix_shape_contract(m, n):
+    rng = np.random.default_rng(m * n)
+    W = rng.normal(0, 1, (m, n))
+    B = rng.normal(0, 1, (m, 3 * n))
+    s = spike_scores_matrix(W, B)
+    assert s.shape == (m,)
+    assert np.all(np.isfinite(s))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_trial_determinism(seed):
+    """Same seed -> bit-identical trial (restart stability)."""
+    from repro.sim.scenario import make_trial
+    t1 = make_trial(seed, "nic")
+    t2 = make_trial(seed, "nic")
+    np.testing.assert_array_equal(t1.data, t2.data)
+    assert t1.t_on == t2.t_on and t1.intensity == t2.intensity

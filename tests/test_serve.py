@@ -1,0 +1,85 @@
+"""Serving correctness: prefill+decode == pure step-by-step decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "mixtral-8x7b", "paligemma-3b",
+                                  "mamba2-370m", "jamba-v0.1-52b"])
+def test_prefill_matches_stepping(arch):
+    """The fused prefill's last-token logits must match feeding the prompt
+    token-by-token through decode (the strongest cache-correctness check)."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.n_experts:
+        # capacity dropping differs between prefill (per-sequence capacity)
+        # and stepping (per-token) — that is GShard-correct behaviour, not a
+        # cache bug; disable drops so the comparison isolates the cache.
+        cfg = cfg.replace(capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    batch = {"tokens": prompts}
+    extra = {}
+    if cfg.family == "vlm":
+        img = jnp.asarray(rng.standard_normal(
+            (B, cfg.n_img_tokens, cfg.d_model)) * 0.02, jnp.bfloat16)
+        batch["img"] = img
+    logits_p, cache_p = jax.jit(
+        lambda p, b: model.prefill(p, b, 64))(params, batch)
+
+    # step-by-step path
+    cache = model.init_cache(B, 64)
+    dec = jax.jit(model.decode)
+    if cfg.family == "vlm":
+        # feed image tokens via prefill only; stepping path not defined for
+        # embeddings -> compare on pure-text archs only
+        return
+    logits_s = None
+    for i in range(S):
+        logits_s, cache = dec(params, prompts[:, i:i + 1], cache)
+    a = np.asarray(logits_p[:, -1, :cfg.vocab], np.float32)
+    b = np.asarray(logits_s[:, -1, :cfg.vocab], np.float32)
+    # SSD chunked-scan (prefill) vs sequential recurrence (decode) differ by
+    # bf16 accumulation order -> wider tolerance for SSM-bearing archs
+    atol = 0.3 if cfg.ssm_state else 0.15
+    np.testing.assert_allclose(a, b, rtol=0.15, atol=atol)
+    # same argmax (the actual serving contract)
+    assert np.array_equal(a.argmax(-1), b.argmax(-1))
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_config("mamba2-370m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    eng = ServeEngine(model, params, max_len=64)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab, (2, 6)).astype(np.int32)
+    r1 = eng.generate(prompts, n_new=8)
+    eng2 = ServeEngine(model, params, max_len=64)
+    r2 = eng2.generate(prompts, n_new=8)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r1.tokens.shape == (2, 8)
+
+
+def test_sliding_window_ring_cache():
+    """Decoding far past the window keeps the cache bounded and finite."""
+    cfg = get_config("mixtral-8x7b", smoke=True)   # window=64 in smoke
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    B = 1
+    cache = model.init_cache(B, 256)
+    assert cache["k"].shape[2] == cfg.window      # ring-bounded
+    dec = jax.jit(model.decode)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for _ in range(cfg.window + 10):
+        logits, cache = dec(params, tok, cache)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"]) == cfg.window + 10

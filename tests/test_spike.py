@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+
+from repro.core.spike import (
+    baseline_stats, detect, spike_score, spike_scores_matrix,
+)
+
+
+def test_baseline_stats_floor():
+    mu, sd = baseline_stats(np.full(100, 5.0))
+    assert mu == pytest.approx(5.0)
+    assert sd >= 1e-3 * 5.0  # sigma floor kicks in on a flat series
+
+
+def test_spike_score_basic():
+    rng = np.random.default_rng(0)
+    base = rng.normal(10, 1, 2000)
+    mu, sd = baseline_stats(base)
+    win = rng.normal(10, 1, 500)
+    win[100:] += 8.0
+    s = spike_score(win, mu, sd)
+    assert s > 3.0
+
+
+def test_detect_persistence_gates_single_sample():
+    rng = np.random.default_rng(1)
+    base = rng.normal(10, 1, 2000)
+    win = rng.normal(10, 1, 500)
+    win[250] = 30.0  # single outlier
+    hit, score, onset = detect(win, base, threshold=3.0, persistence=0.3)
+    assert not hit and score > 3.0
+    hit2, _, onset2 = detect(win, base, threshold=3.0, persistence=0.0)
+    # persistence=0 reproduces the bare rule: fires, onset at the first
+    # above-threshold sample (ambient tails may cross before the outlier)
+    assert hit2 and onset2 <= 250
+
+
+def test_detect_onset_index():
+    rng = np.random.default_rng(2)
+    base = rng.normal(5, 0.5, 2000)
+    win = rng.normal(5, 0.5, 500)
+    win[200:] += 6.0
+    hit, _, onset = detect(win, base, persistence=0.3)
+    assert hit
+    assert 195 <= onset <= 210
+
+
+def test_scores_matrix_matches_scalar():
+    rng = np.random.default_rng(3)
+    W = rng.normal(0, 1, (5, 300))
+    B = rng.normal(0, 1, (5, 1000))
+    W[2, 50:] += 10
+    s = spike_scores_matrix(W, B)
+    assert s.shape == (5,)
+    assert np.argmax(s) == 2
+    for i in range(5):
+        mu, sd = baseline_stats(B[i])
+        assert s[i] == pytest.approx(spike_score(W[i], mu, sd), rel=1e-9)

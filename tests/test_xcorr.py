@@ -1,0 +1,52 @@
+import numpy as np
+import pytest
+
+from repro.core.xcorr import lagged_xcorr, max_abs_xcorr
+
+
+def test_recovers_known_lag():
+    rng = np.random.default_rng(0)
+    N, K, lag = 600, 20, 7
+    sig = rng.normal(0, 1, N + K)
+    L = sig[:N]
+    # metric leads latency by `lag` samples: M(t + lag) ~ L(t)
+    M = np.stack([sig[lag:N + lag], rng.normal(0, 1, N)])
+    c, lags = max_abs_xcorr(L, M, max_lag=K)
+    assert lags[0] == lag
+    assert c[0] > 0.9
+    assert c[1] < 0.4
+
+
+def test_bounded_by_one():
+    rng = np.random.default_rng(1)
+    L = rng.normal(0, 1, 400)
+    M = rng.normal(0, 1, (8, 400))
+    rho = lagged_xcorr(L, M, 20)
+    assert np.all(np.abs(rho) <= 1.0 + 1e-9)
+
+
+def test_zero_lag_is_pearson():
+    rng = np.random.default_rng(2)
+    L = rng.normal(0, 1, 500)
+    M = (2 * L + rng.normal(0, 0.1, 500))[None]
+    rho = lagged_xcorr(L, M, 5)
+    pearson = np.corrcoef(L, M[0])[0, 1]
+    assert rho[0, 5] == pytest.approx(pearson, abs=1e-6)
+
+
+def test_scale_shift_invariance():
+    rng = np.random.default_rng(3)
+    L = rng.normal(5, 2, 500)
+    M = rng.normal(0, 1, (3, 500))
+    r1 = lagged_xcorr(L, M, 10)
+    r2 = lagged_xcorr(L * 3 + 100, M * 0.01 - 5, 10)
+    np.testing.assert_allclose(r1, r2, atol=1e-8)
+
+
+def test_anticorrelation_detected():
+    rng = np.random.default_rng(4)
+    L = rng.normal(0, 1, 500)
+    M = (-L)[None]
+    c, lags = max_abs_xcorr(L, M, 10)
+    assert c[0] > 0.99
+    assert lags[0] == 0
