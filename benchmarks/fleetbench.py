@@ -1,0 +1,114 @@
+"""Fleet-RCA throughput + detection-sweep benchmarks (perf trajectory).
+
+Two sections, both emitted into BENCH_fleet.json by run.py:
+
+  sweep/  — full-trial ``CorrelationEngine.process`` wall time, rolling-
+            statistics fast path vs the seed scalar per-tick path, at the
+            default boundary cadence and at the 10-sample streaming cadence.
+  fleet/  — batched ``FleetMonitor.diagnose_fleet`` vs B sequential
+            per-host ``engine.process`` replays, at B in {16, 64, 256,
+            1024}: hosts/sec, speedup, and per-stage wall time.
+
+The batched fleet path runs the fused spike+xcorr math through the jit'd
+XLA reference (`use_kernels=False`) — on CPU the Pallas kernels execute in
+interpret mode, which validates numerics but is not a timing path; kernel
+parity is covered by tests/test_fused.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import CorrelationEngine, EngineConfig
+from repro.monitor.fleet import FleetMonitor
+from repro.sim.scenario import make_trial
+
+_CLIP_S = 46.0     # trailing snapshot: event at t_on=40 s is inside it
+
+
+def _median_wall(fn, reps: int = 3) -> float:
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls))
+
+
+# ---------------------------------------------------------------- sweep bench
+def sweep_rows(n_trials: int = 8, reps: int = 3,
+               ) -> List[Tuple[str, float, str]]:
+    """Rolling-stats engine sweep vs seed scalar path, same trials."""
+    trials = [make_trial(7000 + i, ["io", "cpu", "nic", "gpu"][i % 4])
+              for i in range(n_trials)]
+    rows: List[Tuple[str, float, str]] = []
+    for tag, cfg in (("boundary", EngineConfig()),
+                     ("10ms", EngineConfig(eval_every=10))):
+        eng = CorrelationEngine(cfg)
+
+        def run(fast: bool) -> None:
+            for t in trials:
+                eng.process(t.ts, t.data, t.channels, fast=fast)
+
+        fast_s = _median_wall(lambda: run(True), reps)
+        scalar_s = _median_wall(lambda: run(False), reps)
+        rows.append((f"sweep/rolling_s/{tag}", fast_s,
+                     f"{n_trials} trials, 90s @100Hz"))
+        rows.append((f"sweep/scalar_s/{tag}", scalar_s, "seed per-tick path"))
+        rows.append((f"sweep/speedup/{tag}", scalar_s / fast_s,
+                     "scalar / rolling"))
+    return rows
+
+
+# ---------------------------------------------------------------- fleet bench
+def _make_fleet(n_hosts: int, bad_host: int, seed: int = 0,
+                n_unique: int = 16, cls: str = "nic"):
+    """(ts, (hosts, C, T) data, channels).  Quiet hosts cycle over
+    ``n_unique`` distinct ambient trials (fleet-size-independent setup
+    cost); one injected straggler."""
+    quiet = [make_trial(seed + u, cls, intensity=0.0, t_on=40.0,
+                        confuser_prob=0.0)
+             for u in range(min(n_unique, n_hosts))]
+    bad = make_trial(seed + 777, cls, intensity=2.0, t_on=40.0,
+                     confuser_prob=0.0)
+    t_hi = int(_CLIP_S * quiet[0].rate_hz)
+    data = np.stack([(bad if h == bad_host else quiet[h % len(quiet)])
+                     .data[:, :t_hi] for h in range(n_hosts)])
+    return quiet[0].ts[:t_hi], data, quiet[0].channels
+
+
+def fleet_rows(batch_sizes: Sequence[int] = (16, 64, 256, 1024),
+               reps: int = 3) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for B in batch_sizes:
+        ts, data, channels = _make_fleet(B, bad_host=B // 2)
+        mon = FleetMonitor(use_kernels=False)
+        mon.diagnose_fleet(ts, data, channels)          # jit warm-up
+        mon._strikes = {}
+
+        def batched() -> None:
+            mon._strikes = {}
+            batched.fd = mon.diagnose_fleet(ts, data, channels)
+
+        batched_s = _median_wall(batched, reps)
+        fd = batched.fd
+        eng = CorrelationEngine()
+
+        def sequential() -> None:
+            for h in range(B):
+                eng.process(ts, data[h], channels)
+
+        seq_s = _median_wall(sequential, max(1, reps - 1))
+        rows.append((f"fleet/batched_s/B{B}", batched_s,
+                     f"{len(fd.flagged_hosts)} flagged, straggler="
+                     f"{fd.straggler_host}"))
+        rows.append((f"fleet/sequential_s/B{B}", seq_s,
+                     "B x engine.process (rolling fast path)"))
+        rows.append((f"fleet/hosts_per_s/B{B}", B / batched_s, "batched"))
+        rows.append((f"fleet/speedup/B{B}", seq_s / batched_s,
+                     "sequential / batched"))
+        for stage, wall in fd.stage_seconds.items():
+            rows.append((f"fleet/stage_s/{stage}/B{B}", wall, ""))
+    return rows

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.fused.ops import fused_rca
 from repro.kernels.spike.ops import spike_scores
 from repro.kernels.welford.ops import welford
 from repro.kernels.xcorr.ops import lagged_xcorr
@@ -24,7 +25,8 @@ def _time(fn, *args, reps=3) -> float:
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
-    jax.tree.leaves(out)[0].block_until_ready()
+    for leaf in jax.tree.leaves(out):
+        leaf.block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
 
 
@@ -48,4 +50,18 @@ def kernel_microbench() -> List[Tuple[str, float, str]]:
         lambda a, b: spike_scores(a, b, use_kernel=False), W, Bs), ""))
     rows.append((f"kernel/welford_ref_jnp/{B}x{M}", _time(
         lambda a: welford(a, use_kernel=False), Bs), ""))
+    # fused spike+xcorr (single pass over each tile) vs the two dispatches
+    us_sep = _time(lambda a, b, c: (spike_scores(b, c, use_kernel=False),
+                                    lagged_xcorr(a, b, K, use_kernel=False)),
+                   L, Mx, Bs)
+    us_fused = _time(lambda a, b, c: fused_rca(a, b, c, K, use_kernel=False),
+                     L, Mx, Bs)
+    rows.append((f"kernel/fused_ref_jnp/{B}x{M}x{N}", us_fused,
+                 "one pass: stats+spike+xcorr"))
+    rows.append((f"kernel/fused_vs_separate/{B}x{M}x{N}", us_sep / us_fused,
+                 "separate spike+xcorr dispatches / fused"))
+    rows.append((f"kernel/fused_pallas_interp/{B}x{M}x{N}", _time(
+        lambda a, b, c: fused_rca(a, b, c, K, use_kernel=True,
+                                  interpret=True), L, Mx, Bs),
+        "interpret-mode (CPU correctness path)"))
     return rows

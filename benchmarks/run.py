@@ -1,12 +1,17 @@
 """Benchmark harness — one section per paper table/figure.
 
-Prints ``name,value,derived`` CSV rows.  Usage:
+Prints ``name,value,derived`` CSV rows and writes per-section JSON
+artifacts (BENCH_kernels.json, BENCH_fleet.json) so the perf trajectory is
+tracked across PRs.  Usage:
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table3,fig2a
+    PYTHONPATH=src python -m benchmarks.run --only kernel,fleet --json-dir .
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -14,12 +19,25 @@ import time
 def _emit(rows):
     for name, value, derived in rows:
         print(f"{name},{value:.6g},{derived}")
+    return rows
+
+
+def _write_json(path: str, rows) -> None:
+    doc = {name: {"value": value, "derived": derived}
+           for name, value, derived in rows}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(doc)} rows)", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated section prefixes to run")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_*.json artifacts")
     args = ap.parse_args()
     want = [s for s in args.only.split(",") if s]
 
@@ -29,7 +47,7 @@ def main() -> None:
     t0 = time.time()
     print("name,value,derived")
 
-    from benchmarks import diagnostics, kernelbench, roofline
+    from benchmarks import diagnostics, fleetbench, kernelbench, roofline
 
     if on("table3"):
         _emit(diagnostics.table3_diagnostic())
@@ -42,7 +60,12 @@ def main() -> None:
     if on("ablation"):
         _emit(diagnostics.ablation_probes())
     if on("kernel"):
-        _emit(kernelbench.kernel_microbench())
+        rows = _emit(kernelbench.kernel_microbench())
+        _write_json(os.path.join(args.json_dir, "BENCH_kernels.json"), rows)
+    if on("fleet"):
+        rows = _emit(fleetbench.sweep_rows())
+        rows += _emit(fleetbench.fleet_rows())
+        _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):
         _emit(roofline.roofline_rows())
 

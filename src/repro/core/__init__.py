@@ -8,9 +8,12 @@ Four-layer pipeline (paper Fig 1):
   L4 ranked causes   -> repro.core.engine
 """
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent, RankedCause
-from repro.core.spike import baseline_stats, spike_score, spike_scores_matrix, detect
+from repro.core.spike import (
+    baseline_stats, spike_score, spike_scores_matrix, detect, detect_rows,
+    detect_sweep, sliding_baseline_stats,
+)
 from repro.core.xcorr import lagged_xcorr, max_abs_xcorr, lagged_xcorr_batch
-from repro.core.confidence import combine_confidence, rank_causes
+from repro.core.confidence import combine_confidence, rank_causes, rank_causes_batch
 from repro.core.engine import CorrelationEngine, EngineConfig
 from repro.core.baselines import (
     Diagnoser, GPUCentricDiagnoser, ClusterAnalysisDiagnoser,
@@ -20,8 +23,9 @@ from repro.core.baselines import (
 __all__ = [
     "CauseClass", "Diagnosis", "SpikeEvent", "RankedCause",
     "baseline_stats", "spike_score", "spike_scores_matrix", "detect",
+    "detect_rows", "detect_sweep", "sliding_baseline_stats",
     "lagged_xcorr", "max_abs_xcorr", "lagged_xcorr_batch",
-    "combine_confidence", "rank_causes",
+    "combine_confidence", "rank_causes", "rank_causes_batch",
     "CorrelationEngine", "EngineConfig",
     "Diagnoser", "GPUCentricDiagnoser", "ClusterAnalysisDiagnoser",
     "DeepProfilingDiagnoser", "make_baseline",

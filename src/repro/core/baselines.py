@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.engine import CorrelationEngine, EngineConfig
-from repro.core.spike import baseline_stats, spike_scores_matrix
+from repro.core.spike import detect_sweep
 from repro.core.taxonomy import CauseClass
 from repro.telemetry.schema import (
     METRIC_REGISTRY, ORIENTATION, SignalGroup, GROUP_TO_CAUSE,
@@ -71,15 +71,22 @@ def _onset_index(L: np.ndarray, rate_hz: float, window_s: float = 5.0,
 
     Requires ``persistence`` fraction of the window elevated, else ambient
     max-z over hundreds of correlated samples trips spuriously.
+
+    All evaluation ticks are swept in one rolling-statistics pass
+    (``spike.detect_sweep``) — the seed's per-tick loop recomputed the
+    2,000-sample baseline mean/std ~700 times per trial and dominated the
+    B1/B2 diagnoser cost.
     """
     wn, bn = int(window_s * rate_hz), int(baseline_s * rate_hz)
-    for t in range(wn + bn, L.size, max(1, int(rate_hz // 10))):
-        mu, sigma = baseline_stats(L[t - wn - bn:t - wn])
-        z = (L[t - wn:t] - mu) / sigma
-        hot = z > threshold
-        if np.max(z) > threshold and float(np.mean(hot)) >= persistence:
-            return t - wn + int(np.argmax(hot))
-    return None
+    ticks = np.arange(wn + bn, L.size, max(1, int(rate_hz // 10)))
+    if ticks.size == 0:
+        return None
+    fire, _, onset = detect_sweep(L, wn, bn, ticks, threshold, persistence)
+    hits = np.flatnonzero(fire)
+    if hits.size == 0:
+        return None
+    i = int(hits[0])
+    return int(ticks[i]) - wn + int(onset[i])
 
 
 def _group_deviation(data: np.ndarray, channels: Sequence[str], onset: int,
@@ -90,23 +97,31 @@ def _group_deviation(data: np.ndarray, channels: Sequence[str], onset: int,
     stride = max(1, int(rate_hz / agg_hz))
     pre_n, post_n = int(pre_s * rate_hz), int(post_s * rate_hz)
     lo, hi = max(0, onset - pre_n), min(data.shape[1], onset + post_n)
-    scores: Dict[CauseClass, float] = {}
+    rows, orient, causes = [], [], []
     for i, name in enumerate(channels):
         spec = METRIC_REGISTRY.get(name)
         if spec is None or spec.cause is None or spec.group not in groups:
             continue
-        x = np.asarray(data[i], dtype=np.float64)
-        o = ORIENTATION.get(name, 1.0)
-        pre = x[lo:onset:stride]
-        post = x[onset:hi:stride]
-        if pre.size < 2 or post.size < 1:
-            continue
-        mu, sd = float(np.mean(pre)), float(np.std(pre))
-        sd = max(sd, 1e-3 * abs(mu), 1e-9)
-        dev = (np.mean(post) - mu) / sd
-        z = abs(dev) if o == 0.0 else o * dev
-        cause = spec.cause
-        scores[cause] = max(scores.get(cause, -np.inf), float(z))
+        rows.append(i)
+        orient.append(ORIENTATION.get(name, 1.0))
+        causes.append(spec.cause)
+    if not rows:
+        return {}
+    # all channels share the pre/post spans: one vectorized moment pass
+    pre = np.asarray(data[rows, lo:onset:stride], dtype=np.float64)
+    post = np.asarray(data[rows, onset:hi:stride], dtype=np.float64)
+    if pre.shape[1] < 2 or post.shape[1] < 1:
+        return {}
+    mu = pre.mean(axis=1)
+    sd = pre.std(axis=1)
+    sd = np.maximum(sd, np.maximum(1e-3 * np.abs(mu), 1e-9))
+    dev = (post.mean(axis=1) - mu) / sd
+    o = np.asarray(orient)
+    z = np.where(o == 0.0, np.abs(dev), o * dev)
+    scores: Dict[CauseClass, float] = {}
+    for cause, zi in zip(causes, z):
+        if scores.get(cause, -np.inf) < zi:
+            scores[cause] = float(zi)
     return scores
 
 

@@ -72,3 +72,69 @@ def rank_causes(metric_names: Sequence[str], spike_scores: np.ndarray,
                 correlation=float(correlations[i]), lag_s=float(lags_s[i]))
     ranked = sorted(best.values(), key=lambda rc: -rc.confidence)
     return ranked, per_metric
+
+
+#: metric-name tuple -> [(cause, column indices)] for the batched ranker
+_CAUSE_COLS: Dict[tuple, List[Tuple[CauseClass, np.ndarray]]] = {}
+
+
+def _cause_columns(metric_names: Sequence[str]):
+    key = tuple(metric_names)
+    hit = _CAUSE_COLS.get(key)
+    if hit is None:
+        by_cause: Dict[CauseClass, List[int]] = {}
+        for i, name in enumerate(metric_names):
+            spec = METRIC_REGISTRY.get(name)
+            cause = spec.cause if spec is not None else None
+            if cause is not None:
+                by_cause.setdefault(cause, []).append(i)
+        hit = [(c, np.asarray(cols, np.intp)) for c, cols in by_cause.items()]
+        _CAUSE_COLS[key] = hit
+    return hit
+
+
+def rank_causes_batch(metric_names: Sequence[str], spike_scores: np.ndarray,
+                      correlations: np.ndarray, lags_s: np.ndarray,
+                      alpha: float = DEFAULT_ALPHA, details: bool = False,
+                      ) -> List[Tuple[List[RankedCause],
+                                      Dict[str, Dict[str, float]]]]:
+    """Vectorized :func:`rank_causes` over a leading host axis.
+
+    All inputs are (H, M); returns one ``(ranked, per_metric)`` pair per
+    host.  The confidence fusion and per-cause arg-max run as whole-matrix
+    reductions; only the final RankedCause assembly (H x #causes objects)
+    stays in Python.  ``details=False`` skips building the H x M per-metric
+    dicts — the fleet path requests them only for the straggler.
+    """
+    S = np.asarray(spike_scores, dtype=np.float64)
+    C = np.asarray(correlations, dtype=np.float64)
+    G = np.asarray(lags_s, dtype=np.float64)
+    if S.ndim != 2 or S.shape != C.shape or S.shape != G.shape:
+        raise ValueError(f"shape mismatch: {S.shape} {C.shape} {G.shape}")
+    H = S.shape[0]
+    conf = combine_confidence(S, C, alpha)                      # (H, M)
+    names = list(metric_names)
+    out: List[Tuple[List[RankedCause], Dict[str, Dict[str, float]]]] = []
+    picks = []  # (cause, best_col (H,), best_conf (H,))
+    for cause, cols in _cause_columns(names):
+        sub = conf[:, cols]
+        loc = np.argmax(sub, axis=1)
+        picks.append((cause, cols[loc], sub[np.arange(H), loc]))
+    for h in range(H):
+        ranked = sorted(
+            (RankedCause(cause=cause, confidence=float(bc[h]),
+                         top_metric=names[int(col[h])],
+                         spike_score=float(S[h, col[h]]),
+                         correlation=float(C[h, col[h]]),
+                         lag_s=float(G[h, col[h]]))
+             for cause, col, bc in picks),
+            key=lambda rc: -rc.confidence)
+        per_metric: Dict[str, Dict[str, float]] = {}
+        if details:
+            per_metric = {name: {"spike": float(S[h, i]),
+                                 "corr": float(C[h, i]),
+                                 "conf": float(conf[h, i]),
+                                 "lag_s": float(G[h, i])}
+                          for i, name in enumerate(names)}
+        out.append((ranked, per_metric))
+    return out

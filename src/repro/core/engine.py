@@ -11,12 +11,17 @@ Time accounting matches the paper's metrics:
   detection latency  ~ window mechanics (≈5 s after onset),
   Time-to-RCA        = onset -> diagnosis complete (detection + accumulation
                        + analysis compute), the paper's 6-8 s.
+
+The full-trial replay (``process``) evaluates every cadence tick from one
+vectorized prefix-sum pass (``spike.detect_sweep``) instead of re-slicing
+the 2,500-sample baseline at every tick; ``fast=False`` keeps the original
+scalar per-tick path as the parity oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,6 +30,9 @@ from repro.core import spike as spike_mod
 from repro.core import xcorr as xcorr_mod
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent
 from repro.telemetry.schema import METRIC_REGISTRY, ORIENTATION
+
+#: below this many samples a pre-onset slice is too short to be a baseline
+MIN_BASELINE_N = 32
 
 
 @dataclasses.dataclass
@@ -55,6 +63,69 @@ class EngineConfig:
         return int(self.baseline_s * self.rate_hz)
 
 
+#: (channels, latency_metric, evidence_restriction) -> (names, row idx,
+#: orientation vector).  Evaluating the registry per channel is pure, so the
+#: layout is shared process-wide across engines and the fleet monitor.
+_LAYOUT_CACHE: Dict[tuple, Tuple[List[str], np.ndarray, np.ndarray]] = {}
+
+
+def evidence_layout(channels: Sequence[str], latency_metric: str,
+                    evidence_channels: Optional[frozenset] = None,
+                    ) -> Tuple[List[str], np.ndarray, np.ndarray]:
+    """Names, row indices and orientation signs of the evidence channels."""
+    key = (tuple(channels), latency_metric, evidence_channels)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    names: List[str] = []
+    idx: List[int] = []
+    orient: List[float] = []
+    for i, name in enumerate(channels):
+        if name == latency_metric:
+            continue
+        spec = METRIC_REGISTRY.get(name)
+        if spec is None or spec.cause is None:
+            continue
+        if evidence_channels is not None and name not in evidence_channels:
+            continue
+        names.append(name)
+        idx.append(i)
+        orient.append(ORIENTATION.get(name, 1.0))
+    out = (names, np.asarray(idx, np.intp), np.asarray(orient, np.float64))
+    _LAYOUT_CACHE[key] = out
+    return out
+
+
+def pick_baseline_slice(nb: int, onset_head: int, n_total: int) -> slice:
+    """Baseline columns for Layer-3 scoring, shared by the scalar engine
+    and the batched fleet path.
+
+    Trailing history when present (``nb`` columns precede the window);
+    otherwise the window's pre-onset head — a genuine quiet stretch — and
+    only the full (spiky) window as a last resort.  (The seed's np.resize
+    hack silently used the spiky window itself as baseline.)
+    """
+    if nb > 0:
+        return slice(0, nb)
+    if onset_head >= MIN_BASELINE_N:
+        return slice(0, onset_head)
+    return slice(0, n_total)
+
+
+def orient_about_baseline(X: np.ndarray, orient: np.ndarray,
+                          b_sl: slice) -> np.ndarray:
+    """Apply per-metric anomaly orientation about the baseline-region mean.
+
+    ``X`` is (..., M, N) with metrics on the second-to-last axis and
+    ``orient`` (M,) in {+1, -1, 0}: +1 a rise is anomalous, -1 a drop,
+    0 two-sided (|deviation|).
+    """
+    mu = X[..., b_sl].mean(axis=-1, keepdims=True)       # (..., M, 1)
+    o = orient.reshape(-1, 1)
+    dev = X - mu
+    return mu + np.where(o == 0.0, np.abs(dev), o * dev)
+
+
 class CorrelationEngine:
     """Streaming engine over an aligned (C, T) telemetry matrix."""
 
@@ -82,14 +153,24 @@ class CorrelationEngine:
             return False
         return True
 
+    def _layout(self, channels: Sequence[str]):
+        restrict = (frozenset(self.evidence_channels)
+                    if self.evidence_channels is not None else None)
+        return evidence_layout(channels, self.cfg.latency_metric, restrict)
+
     # ------------------------------------------------------- batch processing
     def process(self, ts: np.ndarray, data: np.ndarray,
-                channels: Sequence[str]) -> List[Diagnosis]:
+                channels: Sequence[str], fast: bool = True) -> List[Diagnosis]:
         """Run the engine over a full trial; returns diagnoses in time order.
 
         ``ts``: (T,) uniform 100 Hz grid; ``data``: (C, T); ``channels``
         names the rows.  This replays exactly what the streaming deployment
         does tick by tick, with virtual time taken from ``ts``.
+
+        ``fast=True`` precomputes every tick's detection decision in one
+        vectorized rolling-statistics pass; ``fast=False`` is the original
+        scalar per-tick path, kept as the parity oracle for tests and the
+        before/after benchmark.
         """
         cfg = self.cfg
         channels = list(channels)
@@ -110,7 +191,14 @@ class CorrelationEngine:
 
         cadence = cfg.eval_every if cfg.eval_every > 0 else wn
         t0 = wn + bn
-        for t in range(t0, T, cadence):
+        ticks = np.arange(t0, T, cadence)
+        if fast and ticks.size:
+            # Layer-2 decisions for the whole sweep in one rolling pass; the
+            # stateful cooldown/pending machinery below merely consults them.
+            fire_v, score_v, onset_v = spike_mod.detect_sweep(
+                L, wn, bn, ticks, cfg.threshold, cfg.persistence)
+        for i, t in enumerate(ticks):
+            t = int(t)
             now = float(ts[t])
             # -- Layer 3/4, if an event is waiting for its accumulation;
             # runs at the exact accumulation index, not the next boundary.
@@ -124,10 +212,15 @@ class CorrelationEngine:
             # -- Layer 2 detection on the latency channel
             if now - last_event_t < cfg.cooldown_s:
                 continue
-            obs = L[t - wn:t]
-            base = L[t - wn - bn:t - wn]
-            is_spike, score, onset_idx = spike_mod.detect(
-                obs, base, cfg.threshold, cfg.persistence)
+            if fast:
+                is_spike = bool(fire_v[i])
+                score = float(score_v[i])
+                onset_idx = int(onset_v[i]) if is_spike else None
+            else:
+                obs = L[t - wn:t]
+                base = L[t - wn - bn:t - wn]
+                is_spike, score, onset_idx = spike_mod.detect(
+                    obs, base, cfg.threshold, cfg.persistence)
             if is_spike:
                 onset_t = float(ts[t - wn + int(onset_idx)])
                 ev = SpikeEvent(t_onset=onset_t, t_detect=now, score=score,
@@ -157,23 +250,18 @@ class CorrelationEngine:
         blo = max(0, lo - bn)
         L_win = np.asarray(data[li, lo:t], dtype=np.float64)
 
-        names: List[str] = []
-        rows: List[np.ndarray] = []
-        bases: List[np.ndarray] = []
-        for i, name in enumerate(channels):
-            if i == li or not self._is_evidence(name):
-                continue
-            x = np.asarray(data[i], dtype=np.float64)
-            mu_all = float(np.mean(x[blo:lo])) if lo > blo else float(np.mean(x[lo:t]))
-            xo = self._oriented(name, x, mu_all)
-            names.append(name)
-            rows.append(xo[lo:t])
-            bases.append(xo[blo:lo] if lo > blo else xo[lo:t])
+        names, idx, orient = self._layout(channels)
         if not names:
             return Diagnosis(event=event, ranked=[], per_metric={},
                              t_rca=float(ts[t]), analysis_seconds=0.0)
-        W = np.stack(rows)                    # (M, rn)
-        B = np.stack([np.resize(b, max(len(b), 1)) for b in bases])
+        # one vectorized slice over all evidence rows: [blo:t] covers both
+        # the baseline region and the RCA window
+        X = np.asarray(data[idx, blo:t], dtype=np.float64)
+        wstart = lo - blo                 # window columns start here within X
+        b_sl = pick_baseline_slice(wstart, max(0, onset_idx - lo), X.shape[1])
+        XO = orient_about_baseline(X, orient, b_sl)
+        W = XO[:, wstart:]                    # (M, rn)
+        B = XO[:, b_sl]                       # (M, nb) common-length baseline
         scores = spike_mod.spike_scores_matrix(W, B)
         corr, lags = xcorr_mod.max_abs_xcorr(L_win, W, cfg.max_lag)
         ranked, per_metric = conf_mod.rank_causes(

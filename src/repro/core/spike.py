@@ -74,6 +74,103 @@ def detect(window: np.ndarray, baseline: np.ndarray,
     return False, score, None
 
 
+def sliding_baseline_stats(x: np.ndarray, starts: np.ndarray, n: int,
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """(mu, sigma) of ``x[s:s+n]`` for every start in ``starts`` — O(T + #starts).
+
+    One prefix-sum pass replaces per-tick ``np.mean``/``np.std`` recomputation.
+    The series is shifted by its global mean before the squared pass so the
+    sum-of-squares difference does not cancel catastrophically for large-mean
+    channels (byte counters); this is the rolling-moment analogue of the
+    Welford kernel's chunk merge.  Applies the same sigma floor as
+    :func:`baseline_stats`.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    starts = np.asarray(starts, dtype=np.intp)
+    n = int(n)
+    if n <= 0 or (starts.size and (starts.min() < 0 or starts.max() + n > x.size)):
+        raise ValueError(f"invalid baseline spans: n={n}, x.size={x.size}")
+    shift = float(x.mean()) if x.size else 0.0
+    y = x - shift
+    c1 = np.concatenate(([0.0], np.cumsum(y)))
+    c2 = np.concatenate(([0.0], np.cumsum(y * y)))
+    m = (c1[starts + n] - c1[starts]) / n
+    var = np.maximum((c2[starts + n] - c2[starts]) / n - m * m, 0.0)
+    mu = m + shift
+    sigma = np.sqrt(var)
+    floor = np.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * np.abs(mu))
+    return mu, np.maximum(sigma, floor)
+
+
+def detect_sweep(x: np.ndarray, window_n: int, baseline_n: int,
+                 ticks: np.ndarray, threshold: float = DEFAULT_THRESHOLD,
+                 persistence: float = 0.0,
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized :func:`detect` over many evaluation ticks at once.
+
+    For every tick ``t`` the decision is over ``window = x[t-wn:t]`` against
+    ``baseline = x[t-wn-bn:t-wn]`` — exactly the scalar rule, but baseline
+    moments come from one prefix-sum pass and the window reductions from a
+    strided view, so a full-trial sweep costs O(T + #ticks * wn) instead of
+    re-slicing the baseline at every tick.
+
+    Returns ``(is_spike, score, onset)`` arrays over ticks; ``onset`` is the
+    first window index whose z exceeds the threshold (-1 where none does).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    ticks = np.asarray(ticks, dtype=np.intp)
+    wn, bn = int(window_n), int(baseline_n)
+    nt = ticks.size
+    if nt == 0:
+        e = np.empty(0)
+        return e.astype(bool), e, e.astype(np.intp)
+    if ticks.min() < wn + bn or ticks.max() > x.size:
+        raise ValueError(f"ticks must lie in [{wn + bn}, {x.size}]")
+    if bn > 0:
+        mu, sigma = sliding_baseline_stats(x, ticks - wn - bn, bn)
+    else:  # empty baseline: scalar baseline_stats() convention
+        mu = np.zeros(nt)
+        sigma = np.full(nt, SIGMA_FLOOR_ABS)
+    # one strided view: row i is the observation window ending at ticks[i];
+    # z is materialized so comparisons round exactly like the scalar path
+    W = np.lib.stride_tricks.sliding_window_view(x, wn)[ticks - wn]
+    z = (W - mu[:, None]) / sigma[:, None]
+    score = z.max(axis=1)
+    hot = z > threshold
+    frac = hot.mean(axis=1)
+    fire = (score > threshold) & (frac >= persistence)
+    onset = np.where(hot.any(axis=1), hot.argmax(axis=1), -1)
+    return fire, score, onset.astype(np.intp)
+
+
+def detect_rows(windows: np.ndarray, baselines: np.ndarray,
+                threshold: float = DEFAULT_THRESHOLD,
+                persistence: float = 0.0,
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Row-batched :func:`detect`: one decision per (window, baseline) row.
+
+    ``windows`` (H, Nw) vs ``baselines`` (H, Nb); returns ``(fire, score,
+    onset)`` arrays of length H under exactly the scalar rule (sigma floor,
+    max-z, persistence fraction).  ``onset`` is the first above-threshold
+    sample, falling back to the arg-max z when no sample crosses — the
+    fleet monitor wants a timestamp estimate even for marginal rows.
+    """
+    w = np.asarray(windows, dtype=np.float64)
+    b = np.asarray(baselines, dtype=np.float64)
+    if w.ndim != 2 or b.ndim != 2 or w.shape[0] != b.shape[0]:
+        raise ValueError(f"shape mismatch: windows {w.shape} baselines {b.shape}")
+    mu = b.mean(axis=1)
+    sigma = np.maximum(b.std(axis=1),
+                       np.maximum(SIGMA_FLOOR_ABS,
+                                  SIGMA_FLOOR_REL * np.abs(mu)))
+    z = (w - mu[:, None]) / sigma[:, None]
+    score = z.max(axis=1)
+    hot = z > threshold
+    fire = (score > threshold) & (hot.mean(axis=1) >= persistence)
+    onset = np.where(hot.any(axis=1), hot.argmax(axis=1), z.argmax(axis=1))
+    return fire, score, onset.astype(np.intp)
+
+
 def spike_scores_matrix(windows: np.ndarray, baselines: np.ndarray) -> np.ndarray:
     """Per-row spike scores for a (M, N) window matrix vs (M, Nb) baselines.
 

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused baseline stats + max-z spike score + lagged
+cross-correlation.
+
+The seed pipeline dispatched :mod:`repro.kernels.spike` and
+:mod:`repro.kernels.xcorr` separately, so every (host, metric) telemetry
+window crossed HBM twice.  Here one grid cell handles (1 host, block_m
+metrics) and computes, from a single VMEM-resident read of the tile:
+
+  * baseline mean/std (VPU row reductions, sigma floor as in core.spike),
+  * the window max-z spike score S_i,
+  * the full lag sweep rho_i(k), |k| <= K, as one MXU matmul.
+
+The lag-shifted latency matrix is built with a single gather from the
+zero-padded centered latency row — ``Lshift[j, t] = Lpad[t + j]`` — instead
+of the seed xcorr kernel's 2K+1-iteration Python loop of ``dynamic_slice``
+calls, which unrolled into 2K+1 separate VMEM copies at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.xcorr.xcorr import shifted_lag_matrix
+
+SIGMA_FLOOR_REL = 1e-3
+SIGMA_FLOOR_ABS = 1e-9
+NEG = -3.4e38
+_EPS = 1e-12
+LAG_PAD = 64   # output lag dim padded for lane alignment
+
+
+def _fused_kernel(n_valid: int, nb_valid: int, max_lag: int,
+                  lat_ref, met_ref, base_ref, score_ref, rho_ref):
+    """lat_ref (1, N); met_ref (1, bm, N); base_ref (1, bm, Nb);
+    score_ref (1, bm); rho_ref (1, bm, LAG_PAD)."""
+    N = lat_ref.shape[-1]
+    Nb = base_ref.shape[-1]
+    K = int(max_lag)
+    bm = met_ref.shape[1]
+    valid = (jax.lax.iota(jnp.int32, N) < n_valid).astype(jnp.float32)
+    bmask = (jax.lax.iota(jnp.int32, Nb) < nb_valid).astype(jnp.float32)
+    nv = jnp.float32(n_valid)
+    nb = jnp.float32(nb_valid)
+
+    # ---- Layer 2: baseline stats + window max-z (reads the tile once)
+    b = base_ref[0] * bmask[None, :]
+    mu = jnp.sum(b, axis=1) / nb                                   # (bm,)
+    d = (b - mu[:, None]) * bmask[None, :]
+    sd = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=1) / nb, 0.0))
+    floor = jnp.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * jnp.abs(mu))
+    sd = jnp.maximum(sd, floor)
+
+    w = met_ref[0]                                                 # (bm, N)
+    z = (w - mu[:, None]) / sd[:, None]
+    z = jnp.where(valid[None, :] > 0, z, NEG)
+    score_ref[0] = jnp.max(z, axis=1)
+
+    # ---- Layer 3: centered/normalized series, shared with the same tile
+    L = lat_ref[0, :] * valid
+    Lmean = jnp.sum(L) / nv
+    Lc = (L - Lmean) * valid
+    Ln = jnp.sqrt(jnp.sum(Lc * Lc)) + _EPS
+
+    Mw = w * valid[None, :]
+    Mmean = jnp.sum(Mw, axis=1, keepdims=True) / nv
+    Mc = (Mw - Mmean) * valid[None, :]
+    Mn = jnp.sqrt(jnp.sum(Mc * Mc, axis=1)) + _EPS                 # (bm,)
+
+    Lshift = shifted_lag_matrix(Lc, K)                             # (2K+1, N)
+    rho = jax.lax.dot_general(
+        Mc, Lshift, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                        # (bm, 2K+1)
+    rho = rho / (Mn[:, None] * Ln)
+    out = jnp.zeros((bm, LAG_PAD), jnp.float32)
+    out = jax.lax.dynamic_update_slice(out, rho, (0, 0))
+    rho_ref[0] = out
+
+
+def fused_rca_pallas(latency: jax.Array, metrics: jax.Array,
+                     baselines: jax.Array, max_lag: int,
+                     n_valid: int | None = None, nb_valid: int | None = None,
+                     block_m: int = 8, interpret: bool = True,
+                     ) -> tuple[jax.Array, jax.Array]:
+    """latency (B, N), metrics (B, M, N), baselines (B, M, Nb) ->
+    (scores (B, M), rho (B, M, 2K+1)), fp32.
+
+    N and Nb must be lane-aligned (pad + pass n_valid/nb_valid).
+    ``interpret`` runs the kernel body on CPU (the bit-accurate validation
+    path); on TPU pass interpret=False.
+    """
+    B, Mm, N = metrics.shape
+    Nb = baselines.shape[-1]
+    if N % 128 != 0 or Nb % 128 != 0:
+        raise ValueError(f"N={N}, Nb={Nb} must be lane-aligned (x128)")
+    n_valid = N if n_valid is None else int(n_valid)
+    nb_valid = Nb if nb_valid is None else int(nb_valid)
+    K = int(max_lag)
+    pad_m = (-Mm) % block_m
+    if pad_m:
+        metrics = jnp.pad(metrics, ((0, 0), (0, pad_m), (0, 0)))
+        baselines = jnp.pad(baselines, ((0, 0), (0, pad_m), (0, 0)),
+                            constant_values=1.0)
+    Mp = Mm + pad_m
+
+    scores, rho = pl.pallas_call(
+        functools.partial(_fused_kernel, n_valid, nb_valid, K),
+        grid=(B, Mp // block_m),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, block_m, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_m, Nb), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda b, j: (b, j)),
+            pl.BlockSpec((1, block_m, LAG_PAD), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Mp, LAG_PAD), jnp.float32),
+        ],
+        interpret=interpret,
+    )(latency.astype(jnp.float32), metrics.astype(jnp.float32),
+      baselines.astype(jnp.float32))
+    return scores[:, :Mm], rho[:, :Mm, : 2 * K + 1]

@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for the fused spike+xcorr kernel with CPU fallback.
+
+This is the fleet-RCA hot path: one dispatch yields, for every (host,
+metric), the spike score against its baseline AND the full lag sweep against
+that host's latency window — the two quantities confidence fusion consumes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused.fused import fused_rca_pallas
+from repro.kernels.fused.ref import fused_rca_ref
+
+
+def _pad128(x: jax.Array, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % 128
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag", "use_kernel",
+                                             "interpret"))
+def fused_rca(latency: jax.Array, metrics: jax.Array, baselines: jax.Array,
+              max_lag: int = 20, use_kernel: bool = True,
+              interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(scores (B, M), rho (B, M, 2K+1)) for latency (B, N), metrics
+    (B, M, N), baselines (B, M, Nb).
+
+    ``use_kernel=True`` dispatches the fused Pallas kernel (interpret mode
+    executes the body on CPU for validation); False composes the pure-jnp
+    references — also the AD-friendly path.
+    """
+    if latency.ndim != 2 or metrics.ndim != 3 or baselines.ndim != 3:
+        raise ValueError(f"latency {latency.shape}, metrics {metrics.shape}, "
+                         f"baselines {baselines.shape}")
+    if not use_kernel:
+        return fused_rca_ref(latency, metrics, baselines, max_lag)
+    n, nb = metrics.shape[-1], baselines.shape[-1]
+    lat = _pad128(latency.astype(jnp.float32), 1)
+    met = _pad128(metrics.astype(jnp.float32), 2)
+    base = _pad128(baselines.astype(jnp.float32), 2)
+    return fused_rca_pallas(lat, met, base, max_lag, n_valid=n, nb_valid=nb,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag", "use_kernel",
+                                             "interpret"))
+def fused_rca_max(latency, metrics, baselines, max_lag: int = 20,
+                  use_kernel: bool = True, interpret: bool = True):
+    """(scores, c, lag) per (B, M): spike scores plus max |rho| over lags
+    and its arg-max lag — the exact inputs of confidence.rank_causes."""
+    scores, rho = fused_rca(latency, metrics, baselines, max_lag,
+                            use_kernel, interpret)
+    idx = jnp.argmax(jnp.abs(rho), axis=-1)
+    c = jnp.take_along_axis(jnp.abs(rho), idx[..., None], axis=-1)[..., 0]
+    return scores, c, idx - max_lag

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused spike+xcorr kernel.
+
+Composes the two single-purpose oracles — proving the fusion changes data
+movement, not math.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.spike.ref import spike_scores_ref
+from repro.kernels.xcorr.ref import lagged_xcorr_ref
+
+
+def fused_rca_ref(latency: jax.Array, metrics: jax.Array,
+                  baselines: jax.Array, max_lag: int,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """latency (B, N), metrics (B, M, N), baselines (B, M, Nb) ->
+    (scores (B, M), rho (B, M, 2K+1)) f32."""
+    scores = spike_scores_ref(metrics, baselines)
+    rho = lagged_xcorr_ref(latency, metrics, max_lag)
+    return scores, rho

@@ -5,8 +5,9 @@ from B hosts x M metrics and correlates each against that host's latency
 window over lags |k| <= K.
 
 TPU mapping: for one (host, metric-block) grid cell we materialize the
-lag-shifted latency matrix Lshift (2K+1, N) in VMEM once (static slices of
-a zero-padded row), then the whole lag sweep is a single MXU matmul:
+lag-shifted latency matrix Lshift (2K+1, N) in VMEM once (a single gather
+from a zero-padded row — :func:`shifted_lag_matrix`), then the
+whole lag sweep is a single MXU matmul:
 
     rho_block = Mc (bm, N) @ Lshift^T (N, 2K+1)
 
@@ -24,6 +25,22 @@ from jax.experimental import pallas as pl
 
 _EPS = 1e-12
 LAG_PAD = 64   # output lag dim padded for lane alignment
+
+
+def shifted_lag_matrix(lc: jax.Array, max_lag: int) -> jax.Array:
+    """(2K+1, N) matrix with row j pairing L(t) with M(t - (j - K)).
+
+    One gather from the zero-padded row: Lshift[j, t] = Lpad[t + j], with
+    Lpad[K:K+N] = lc.  Positive lag = metric leads, matching core.xcorr.
+    Shared by this kernel and kernels.fused.
+    """
+    N = lc.shape[-1]
+    K = int(max_lag)
+    lpad = jnp.zeros((N + 2 * K,), jnp.float32)
+    lpad = jax.lax.dynamic_update_slice(lpad, lc, (K,))
+    j = jax.lax.broadcasted_iota(jnp.int32, (2 * K + 1, N), 0)
+    t = jax.lax.broadcasted_iota(jnp.int32, (2 * K + 1, N), 1)
+    return jnp.take(lpad, j + t, axis=0)
 
 
 def _xcorr_kernel(n_valid: int, max_lag: int,
@@ -46,13 +63,10 @@ def _xcorr_kernel(n_valid: int, max_lag: int,
     Mc = (M - Mmean) * valid[None, :]
     Mn = jnp.sqrt(jnp.sum(Mc * Mc, axis=1)) + _EPS     # (bm,)
 
-    # lag-shifted latency matrix via static slices of a zero-padded row
-    Lpad = jnp.zeros((N + 2 * K,), jnp.float32)
-    Lpad = jax.lax.dynamic_update_slice(Lpad, Lc, (K,))
-    rows = [jax.lax.dynamic_slice(Lpad, (k,), (N,)) for k in range(2 * K + 1)]
+    # lag-shifted latency matrix in one gather from the zero-padded row:
     # row j pairs L(t) with M(t - (j - K)):  Lshift[j, t] = Lc[t + (j - K)]
     # (positive lag = metric leads, matching core.xcorr and ref.py)
-    Lshift = jnp.stack(rows, axis=0)                   # (2K+1, N)
+    Lshift = shifted_lag_matrix(Lc, K)                 # (2K+1, N)
 
     rho = jax.lax.dot_general(
         Mc, Lshift, (((1,), (1,)), ((), ())),

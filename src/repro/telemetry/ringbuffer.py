@@ -41,9 +41,27 @@ class RingBuffer:
             self._count += 1
 
     def extend(self, ts: np.ndarray, values: np.ndarray) -> None:
-        for t, v in zip(np.asarray(ts, dtype=np.float64).ravel(),
-                        np.asarray(values, dtype=np.float32).ravel()):
-            self.append(float(t), float(v))
+        """Bulk append: two slice writes (split at the wrap point), not a
+        per-sample Python loop."""
+        t = np.asarray(ts, dtype=np.float64).ravel()
+        v = np.asarray(values, dtype=np.float32).ravel()
+        if t.size != v.size:
+            raise ValueError(f"ts {t.size} vs values {v.size}")
+        n = t.size
+        if n == 0:
+            return
+        if n >= self.capacity:          # only the newest samples survive
+            t, v = t[-self.capacity:], v[-self.capacity:]
+            n = self.capacity
+        first = min(n, self.capacity - self._head)
+        self._ts[self._head:self._head + first] = t[:first]
+        self._val[self._head:self._head + first] = v[:first]
+        rest = n - first
+        if rest:
+            self._ts[:rest] = t[first:]
+            self._val[:rest] = v[first:]
+        self._head = (self._head + n) % self.capacity
+        self._count = min(self.capacity, self._count + n)
 
     def view(self, last_n: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Chronologically ordered copy of the newest ``last_n`` samples."""
@@ -82,6 +100,10 @@ class MultiChannelRing:
                              dtype=np.float32)
         self._head = 0
         self._count = 0
+        #: row-key tuple -> (positions into the dict, destination channel
+        #: rows); the agent emits identically-keyed dicts every tick, so one
+        #: cached layout turns push_row into two vectorized writes.
+        self._row_layout: Dict[tuple, Tuple[np.ndarray, np.ndarray]] = {}
 
     def __len__(self) -> int:
         return self._count
@@ -90,23 +112,29 @@ class MultiChannelRing:
     def n_channels(self) -> int:
         return len(self.channels)
 
+    def _layout(self, keys: tuple) -> Tuple[np.ndarray, np.ndarray]:
+        hit = self._row_layout.get(keys)
+        if hit is None:
+            sel = [p for p, k in enumerate(keys) if k in self.index]
+            dest = [self.index[keys[p]] for p in sel]
+            hit = (np.asarray(sel, np.intp), np.asarray(dest, np.intp))
+            self._row_layout[keys] = hit
+        return hit
+
     def push_row(self, ts: float, values: Dict[str, float]) -> None:
         col = self._head
         self._ts[col] = ts
-        for name, v in values.items():
-            i = self.index.get(name)
-            if i is not None:
-                self._data[i, col] = np.float32(v)
-        # channels absent from this sample instant carry forward last value
-        missing = set(self.channels) - set(values)
-        if missing and self._count > 0:
-            prev = (col - 1) % self.capacity
-            for name in missing:
-                i = self.index[name]
-                self._data[i, col] = self._data[i, prev]
-        elif missing:
-            for name in missing:
-                self._data[self.index[name], col] = 0.0
+        # carry the whole previous column forward in one vectorized copy,
+        # then overwrite the channels present at this instant — absent
+        # channels keep their last value (0.0 on the very first push)
+        if self._count > 0:
+            self._data[:, col] = self._data[:, (col - 1) % self.capacity]
+        else:
+            self._data[:, col] = 0.0
+        sel, dest = self._layout(tuple(values))
+        vals = np.fromiter(values.values(), dtype=np.float32,
+                           count=len(values))
+        self._data[dest, col] = vals[sel]
         self._head = (self._head + 1) % self.capacity
         if self._count < self.capacity:
             self._count += 1

@@ -50,3 +50,81 @@ def test_kernel_and_numpy_paths_agree():
     assert a.straggler_host == b.straggler_host
     np.testing.assert_allclose(a.per_host_scores, b.per_host_scores,
                                rtol=1e-4, atol=1e-4)
+    assert a.flagged_hosts == b.flagged_hosts
+    for h in a.flagged_hosts:
+        assert a.diagnoses[h].top_cause == b.diagnoses[h].top_cause
+
+
+@pytest.mark.parametrize("cls", ["io", "cpu", "nic", "gpu"])
+def test_batched_rca_agrees_with_per_host_engine(cls):
+    """Every flagged host's batched verdict == a scalar engine.process
+    replay of that host's slab — the fused dispatch changes throughput,
+    not diagnoses."""
+    from repro.core.engine import CorrelationEngine
+    for seed in (100, 400):
+        ts, data, channels, _ = _fleet_data(3, 1, cls, seed=seed)
+        fd = FleetMonitor(use_kernels=False).diagnose_fleet(ts, data, channels)
+        assert fd.flagged_hosts, f"{cls}/{seed}: no host flagged"
+        eng = CorrelationEngine()
+        for h in fd.flagged_hosts:
+            diags = eng.process(ts, data[h], channels)
+            assert diags, f"{cls}/{seed}: engine found nothing on host {h}"
+            assert diags[0].top_cause == fd.diagnoses[h].top_cause
+
+
+def test_multiple_stragglers_one_dispatch():
+    """Two injected stragglers with different causes: both flagged, both
+    explained from the same batched dispatch, each with its own verdict."""
+    t_nic = make_trial(500, "nic", intensity=2.0, t_on=40.0, confuser_prob=0.0)
+    t_io = make_trial(501, "io", intensity=2.0, t_on=40.0, confuser_prob=0.0)
+    quiet = [make_trial(510 + h, "nic", intensity=0.0, t_on=40.0,
+                        confuser_prob=0.0) for h in range(2)]
+    t_hi = int(46.0 * t_nic.rate_hz)
+    data = np.stack([t.data[:, :t_hi]
+                     for t in (quiet[0], t_nic, quiet[1], t_io)])
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(
+        t_nic.ts[:t_hi], data, t_nic.channels)
+    assert set(fd.flagged_hosts) == {1, 3}
+    assert fd.diagnoses[1].top_cause == CauseClass.NIC
+    assert fd.diagnoses[3].top_cause == CauseClass.IO
+    assert fd.mitigations[1] == Mitigation.HIERARCHICAL_ALLREDUCE
+    assert fd.mitigations[3] == Mitigation.REBALANCE_INPUT
+    # the worst host leads the flagged list and fills the legacy fields
+    assert fd.straggler_host == fd.flagged_hosts[0]
+    assert fd.diagnosis is fd.diagnoses[fd.straggler_host]
+
+
+def test_transient_glitch_does_not_outrank_persistent_straggler():
+    """A single-sample latency glitch can carry the fleet's highest max-z
+    but must not be named straggler over a persistent spike."""
+    ts, data, channels, _ = _fleet_data(3, 1, "nic", seed=700)
+    li = channels.index("coll_allreduce_ms")
+    data = data.copy()
+    data[0, li, -10] += 1e4                 # one-sample glitch on host 0
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(ts, data, channels)
+    assert fd.per_host_scores[0] > fd.per_host_scores[1]
+    assert 0 not in fd.flagged_hosts
+    assert fd.straggler_host == 1
+    assert fd.diagnosis is fd.diagnoses[1]
+
+
+def test_no_evidence_channels_degrades_gracefully():
+    """Latency-only telemetry: a flagged host gets no verdict, not a crash."""
+    ts, data, channels, _ = _fleet_data(2, 1, "cpu", seed=950)
+    li = channels.index("coll_allreduce_ms")
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(
+        ts, data[:, [li], :], ["coll_allreduce_ms"])
+    assert fd.flagged_hosts == [1]
+    assert fd.diagnosis is None
+    assert fd.mitigation == Mitigation.NONE
+
+
+def test_quiet_fleet_flags_nothing():
+    ts, data, channels, _ = _fleet_data(4, 0, "cpu", seed=900)
+    quiet = data.copy()
+    # neutralize the injected host by replacing it with another quiet one
+    quiet[0] = data[3]
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(ts, quiet, channels)
+    assert fd.flagged_hosts == []
+    assert fd.diagnosis is None
+    assert fd.mitigation == Mitigation.NONE

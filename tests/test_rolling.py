@@ -1,0 +1,91 @@
+"""Rolling-statistics fast path == seed scalar path, bit-for-bit where it
+matters: same detections, same onsets, same ranked causes."""
+import numpy as np
+import pytest
+
+from repro.core.engine import CorrelationEngine, EngineConfig
+from repro.core.spike import baseline_stats, detect, detect_sweep, \
+    sliding_baseline_stats
+from repro.sim.scenario import make_trial
+
+
+def test_sliding_baseline_stats_matches_scalar():
+    rng = np.random.default_rng(0)
+    # large-mean/small-std regime: the cancellation trap for naive sumsq
+    x = rng.normal(1e8, 30.0, 5000)
+    starts = np.arange(0, 3000, 37)
+    mu, sd = sliding_baseline_stats(x, starts, 2000)
+    for s, m, d in zip(starts, mu, sd):
+        m0, d0 = baseline_stats(x[s:s + 2000])
+        assert m == pytest.approx(m0, rel=1e-12)
+        assert d == pytest.approx(d0, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_detect_sweep_matches_scalar_detect(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(10, 1, 6000)
+    x[4000:4400] += 6.0                     # injected spike
+    wn, bn = 500, 2000
+    ticks = np.arange(wn + bn, x.size, 113)
+    fire, score, onset = detect_sweep(x, wn, bn, ticks,
+                                      threshold=3.0, persistence=0.3)
+    for i, t in enumerate(ticks):
+        f0, s0, o0 = detect(x[t - wn:t], x[t - wn - bn:t - wn],
+                            threshold=3.0, persistence=0.3)
+        assert bool(fire[i]) == f0, f"tick {t}"
+        assert score[i] == pytest.approx(s0, rel=1e-9)
+        if f0:
+            assert int(onset[i]) == o0
+
+
+@pytest.mark.parametrize("seed,cls", [
+    (123, "io"), (5, "nic"), (7, "cpu"), (9, "gpu"),
+    (321, "nic"), (654, "io"),
+])
+def test_engine_fast_path_identical_diagnoses(seed, cls):
+    """The vectorized sweep must reproduce the seed scalar replay exactly:
+    same events, same timing, same cause ranking."""
+    trial = make_trial(seed, cls)
+    eng = CorrelationEngine()
+    fast = eng.process(trial.ts, trial.data, trial.channels, fast=True)
+    slow = eng.process(trial.ts, trial.data, trial.channels, fast=False)
+    assert len(fast) == len(slow)
+    for a, b in zip(fast, slow):
+        assert a.event.t_onset == b.event.t_onset
+        assert a.event.t_detect == b.event.t_detect
+        assert a.event.score == pytest.approx(b.event.score, rel=1e-9)
+        assert [rc.cause for rc in a.ranked] == [rc.cause for rc in b.ranked]
+        for ra, rb in zip(a.ranked, b.ranked):
+            assert ra.confidence == pytest.approx(rb.confidence, rel=1e-12)
+            assert ra.top_metric == rb.top_metric
+
+
+def test_engine_fast_path_fine_cadence():
+    """Streaming cadence (evaluate every 10 samples) — the regime the
+    rolling pass exists for — still agrees with the scalar replay."""
+    trial = make_trial(42, "nic", intensity=1.5, confuser_prob=0.0)
+    eng = CorrelationEngine(EngineConfig(eval_every=10))
+    fast = eng.process(trial.ts, trial.data, trial.channels, fast=True)
+    slow = eng.process(trial.ts, trial.data, trial.channels, fast=False)
+    assert len(fast) == len(slow) >= 1
+    for a, b in zip(fast, slow):
+        assert a.event.t_detect == b.event.t_detect
+        assert a.top_cause == b.top_cause
+
+
+def test_diagnose_no_history_uses_preonset_baseline():
+    """lo == blo == 0: the baseline must be the quiet pre-onset head, not
+    the spiky window itself (the seed np.resize hack degenerated here)."""
+    trial = make_trial(77, "cpu", intensity=2.0, t_on=30.0,
+                       confuser_prob=0.0)
+    # clip the trial so no history exists before the RCA window
+    lo = int((30.0 - 2.5) * 100)            # pre_onset_s before onset
+    hi = int(38.0 * 100)
+    ts = trial.ts[lo:hi] - trial.ts[lo]
+    data = trial.data[:, lo:hi]
+    eng = CorrelationEngine(EngineConfig(baseline_s=0.0, window_s=2.0))
+    diags = eng.process(ts, data, trial.channels)
+    if diags:   # evidence scores must be finite and the verdict sane
+        for rc in diags[0].ranked:
+            assert np.isfinite(rc.confidence)
