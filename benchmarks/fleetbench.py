@@ -1,13 +1,18 @@
 """Fleet-RCA throughput + detection-sweep benchmarks (perf trajectory).
 
-Two sections, both emitted into BENCH_fleet.json by run.py:
+Three sections, all emitted into BENCH_fleet.json by run.py:
 
   sweep/  — full-trial ``CorrelationEngine.process`` wall time, rolling-
             statistics fast path vs the seed scalar per-tick path, at the
             default boundary cadence and at the 10-sample streaming cadence.
   fleet/  — batched ``FleetMonitor.diagnose_fleet`` vs B sequential
             per-host ``engine.process`` replays, at B in {16, 64, 256,
-            1024}: hosts/sec, speedup, and per-stage wall time.
+            1024}: hosts/sec, speedup, per-stage wall time, plus the
+            streaming-detect kernel (one dispatch over the f32 slab) vs the
+            seed detect path (spike dispatch + f64 ``detect_rows`` replay)
+            with a byte-exact flagged/onset parity check.
+  eval/   — event-batched Layer 3: ``run_eval`` with all trials' events in
+            ONE fused dispatch per diagnoser vs the per-event path.
 
 The batched fleet path runs the fused spike+xcorr math through the jit'd
 XLA reference (`use_kernels=False`) — on CPU the Pallas kernels execute in
@@ -21,6 +26,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.baselines import make_baseline
 from repro.core.engine import CorrelationEngine, EngineConfig
 from repro.monitor.fleet import FleetMonitor
 from repro.sim.scenario import make_trial
@@ -35,6 +41,24 @@ def _median_wall(fn, reps: int = 3) -> float:
         fn()
         walls.append(time.perf_counter() - t0)
     return float(np.median(walls))
+
+
+def _median_stages(mon: FleetMonitor, ts, data, channels, reps: int,
+                   ):
+    """(median wall, per-stage median seconds, last FleetDiagnosis) over
+    ``reps`` diagnose_fleet calls — stage attribution from one run is a
+    single sample and too noisy to report."""
+    walls, stages = [], {}
+    fd = None
+    for _ in range(reps):
+        mon._strikes = {}
+        t0 = time.perf_counter()
+        fd = mon.diagnose_fleet(ts, data, channels)
+        walls.append(time.perf_counter() - t0)
+        for k, v in fd.stage_seconds.items():
+            stages.setdefault(k, []).append(v)
+    med = {k: float(np.median(v)) for k, v in stages.items()}
+    return float(np.median(walls)), med, fd
 
 
 # ---------------------------------------------------------------- sweep bench
@@ -64,51 +88,136 @@ def sweep_rows(n_trials: int = 8, reps: int = 3,
 
 # ---------------------------------------------------------------- fleet bench
 def _make_fleet(n_hosts: int, bad_host: int, seed: int = 0,
-                n_unique: int = 16, cls: str = "nic"):
+                n_unique: int = 16, cls: str = "nic",
+                bad_every: int = 0):
     """(ts, (hosts, C, T) data, channels).  Quiet hosts cycle over
     ``n_unique`` distinct ambient trials (fleet-size-independent setup
-    cost); one injected straggler."""
+    cost); one injected straggler.  ``bad_every`` > 0 additionally injects
+    every bad_every'th host (the incident-storm profile: the seed detect
+    path re-slices every candidate in f64, so its cost scales with the
+    flagged fraction)."""
     quiet = [make_trial(seed + u, cls, intensity=0.0, t_on=40.0,
                         confuser_prob=0.0)
              for u in range(min(n_unique, n_hosts))]
-    bad = make_trial(seed + 777, cls, intensity=2.0, t_on=40.0,
-                     confuser_prob=0.0)
+    n_bad = min(8, n_hosts)
+    bad = [make_trial(seed + 777 + u, cls, intensity=2.0, t_on=40.0,
+                      confuser_prob=0.0) for u in range(n_bad)]
     t_hi = int(_CLIP_S * quiet[0].rate_hz)
-    data = np.stack([(bad if h == bad_host else quiet[h % len(quiet)])
-                     .data[:, :t_hi] for h in range(n_hosts)])
+
+    def pick(h):
+        if h == bad_host or (bad_every and h % bad_every == 0):
+            return bad[h % n_bad]
+        return quiet[h % len(quiet)]
+
+    data = np.stack([pick(h).data[:, :t_hi] for h in range(n_hosts)])
     return quiet[0].ts[:t_hi], data, quiet[0].channels
 
 
+def _detect_compare_rows(B: int, ts, data, data32, channels, reps: int,
+                         tag: str = "") -> Tuple[list, float, dict, object]:
+    """Streaming-detect vs seed-detect stage rows for one fleet slab.
+
+    Returns (rows, batched wall, median stages, FleetDiagnosis of the
+    fast path)."""
+    mon = FleetMonitor(use_kernels=False)
+    oracle = FleetMonitor(use_kernels=False, fast_detect=False)
+    mon.diagnose_fleet(ts, data32, channels)            # jit warm-up
+    oracle.diagnose_fleet(ts, data, channels)
+
+    batched_s, stages, fd = _median_stages(mon, ts, data32, channels, reps)
+    _, stages_o, fd_o = _median_stages(oracle, ts, data, channels, reps)
+    parity = float(
+        fd.flagged_hosts == fd_o.flagged_hosts
+        and all(fd.diagnoses[h].event.t_onset
+                == fd_o.diagnoses[h].event.t_onset
+                for h in fd.flagged_hosts))
+    det_f, det_o = stages["detect"], stages_o["detect"]
+    rows = [
+        (f"fleet/detect_fast_s{tag}/B{B}", det_f,
+         f"one streaming-detect dispatch, f32 slab; "
+         f"{len(fd.flagged_hosts)} flagged"),
+        (f"fleet/detect_oracle_s{tag}/B{B}", det_o,
+         "seed: spike dispatch + f64 detect_rows replay"),
+        (f"fleet/detect_speedup{tag}/B{B}", det_o / det_f,
+         "oracle / streaming"),
+        (f"fleet/detect_parity{tag}/B{B}", parity,
+         "1.0 = flagged hosts + onsets byte-exact"),
+    ]
+    return rows, batched_s, stages, fd
+
+
 def fleet_rows(batch_sizes: Sequence[int] = (16, 64, 256, 1024),
-               reps: int = 3) -> List[Tuple[str, float, str]]:
+               reps: int = 3, sequential_baseline: bool = True,
+               ) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     for B in batch_sizes:
         ts, data, channels = _make_fleet(B, bad_host=B // 2)
-        mon = FleetMonitor(use_kernels=False)
-        mon.diagnose_fleet(ts, data, channels)          # jit warm-up
-        mon._strikes = {}
-
-        def batched() -> None:
-            mon._strikes = {}
-            batched.fd = mon.diagnose_fleet(ts, data, channels)
-
-        batched_s = _median_wall(batched, reps)
-        fd = batched.fd
-        eng = CorrelationEngine()
-
-        def sequential() -> None:
-            for h in range(B):
-                eng.process(ts, data[h], channels)
-
-        seq_s = _median_wall(sequential, max(1, reps - 1))
+        # the columnar deployment hands the monitor the ring's f32 slab;
+        # the oracle monitor replays the seed path on the seed's f64 slab
+        data32 = np.ascontiguousarray(data, np.float32)
+        det_rows, batched_s, stages, fd = _detect_compare_rows(
+            B, ts, data, data32, channels, reps)
         rows.append((f"fleet/batched_s/B{B}", batched_s,
                      f"{len(fd.flagged_hosts)} flagged, straggler="
                      f"{fd.straggler_host}"))
-        rows.append((f"fleet/sequential_s/B{B}", seq_s,
-                     "B x engine.process (rolling fast path)"))
         rows.append((f"fleet/hosts_per_s/B{B}", B / batched_s, "batched"))
-        rows.append((f"fleet/speedup/B{B}", seq_s / batched_s,
-                     "sequential / batched"))
-        for stage, wall in fd.stage_seconds.items():
+        rows += det_rows
+        if sequential_baseline:
+            eng = CorrelationEngine()
+
+            def sequential() -> None:
+                for h in range(B):
+                    eng.process(ts, data[h], channels)
+
+            seq_s = _median_wall(sequential, max(1, reps - 1))
+            rows.append((f"fleet/sequential_s/B{B}", seq_s,
+                         "B x engine.process (rolling fast path, f64)"))
+            rows.append((f"fleet/speedup/B{B}", seq_s / batched_s,
+                         "f64 sequential / f32-columnar batched (PR 2 "
+                         "redefined the batched side; detect_* rows are "
+                         "the like-for-like comparison)"))
+        for stage, wall in stages.items():
             rows.append((f"fleet/stage_s/{stage}/B{B}", wall, ""))
+    # incident-storm profile at the largest B: ~1/4 of the fleet degraded.
+    # The seed path re-slices every candidate host in f64 and replays the
+    # scalar rule over it, so its detect cost grows with the flagged
+    # fraction; the streaming kernel's one-dispatch cost does not.
+    B = max(batch_sizes)
+    ts, data, channels = _make_fleet(B, bad_host=B // 2, bad_every=4)
+    data32 = np.ascontiguousarray(data, np.float32)
+    det_rows, _, _, _ = _detect_compare_rows(B, ts, data, data32, channels,
+                                             reps, tag="_storm")
+    rows += det_rows
+    return rows
+
+
+# ----------------------------------------------------------------- eval bench
+def eval_rows(n_per_class: int = 4, reps: int = 3,
+              ) -> List[Tuple[str, float, str]]:
+    """Event-batched Layer 3 (one fused dispatch per diagnoser) vs the
+    per-event sequential diagnosis, same trials, identical predictions.
+
+    Trial *generation* is excluded from the timed region — this isolates
+    the diagnosis path ``run_eval`` drives (detection sweep + Layer 3).
+    """
+    rows: List[Tuple[str, float, str]] = []
+    trials = [make_trial(7100 + 17 * ci + k, cls)
+              for ci, cls in enumerate(["io", "cpu", "nic", "gpu"])
+              for k in range(n_per_class)]
+    inputs = [(t.ts, t.data, t.channels) for t in trials]
+    dg = make_baseline("ours")
+    dg.diagnose_trials(inputs)              # ragged-dispatch jit warm-up
+
+    batched_s = _median_wall(lambda: dg.diagnose_trials(inputs), reps)
+    seq_s = _median_wall(
+        lambda: [dg.diagnose_trial(*t) for t in inputs], reps)
+    rb = dg.diagnose_trials(inputs)
+    rs = [dg.diagnose_trial(*t) for t in inputs]
+    match = float(all(a.pred == b.pred for a, b in zip(rb, rs)))
+    rows.append(("eval/batched_s", batched_s,
+                 f"{len(trials)} trials, one fused Layer-3 dispatch"))
+    rows.append(("eval/sequential_s", seq_s, "one _diagnose per event"))
+    rows.append(("eval/speedup", seq_s / batched_s, "sequential / batched"))
+    rows.append(("eval/pred_parity", match,
+                 "1.0 = per-trial predictions identical"))
     return rows

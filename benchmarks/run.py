@@ -6,6 +6,11 @@ tracked across PRs.  Usage:
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table3,fig2a
     PYTHONPATH=src python -m benchmarks.run --only kernel,fleet --json-dir .
+    PYTHONPATH=src python -m benchmarks.run --smoke    # <30 s perf canary
+
+``--smoke`` exercises all three perf-path benchmark families (kernel,
+sweep, fleet+eval) at tiny sizes without writing JSON artifacts — the
+fail-fast regression canary tier-1 runs via tests/test_bench_smoke.py.
 """
 from __future__ import annotations
 
@@ -32,12 +37,30 @@ def _write_json(path: str, rows) -> None:
     print(f"# wrote {path} ({len(doc)} rows)", file=sys.stderr)
 
 
+def smoke() -> list:
+    """All three perf-path families at tiny sizes (<30 s total): kernel
+    microbench, engine sweep, fleet + event-batched eval.  Returns the
+    combined rows (also printed as CSV)."""
+    from benchmarks import fleetbench, kernelbench
+
+    rows = _emit(kernelbench.kernel_microbench(B=4, M=8, N=256, K=10,
+                                               detect_h=64))
+    rows += _emit(kernelbench.tile_sweep_rows())
+    rows += _emit(fleetbench.sweep_rows(n_trials=1, reps=1))
+    rows += _emit(fleetbench.fleet_rows(batch_sizes=(16,), reps=1,
+                                        sequential_baseline=False))
+    rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated section prefixes to run")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_*.json artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size run of all perf families, no JSON")
     args = ap.parse_args()
     want = [s for s in args.only.split(",") if s]
 
@@ -46,6 +69,11 @@ def main() -> None:
 
     t0 = time.time()
     print("name,value,derived")
+
+    if args.smoke:
+        smoke()
+        print(f"# smoke total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
 
     from benchmarks import diagnostics, fleetbench, kernelbench, roofline
 
@@ -61,10 +89,12 @@ def main() -> None:
         _emit(diagnostics.ablation_probes())
     if on("kernel"):
         rows = _emit(kernelbench.kernel_microbench())
+        rows += _emit(kernelbench.tile_sweep_rows())
         _write_json(os.path.join(args.json_dir, "BENCH_kernels.json"), rows)
     if on("fleet"):
         rows = _emit(fleetbench.sweep_rows())
         rows += _emit(fleetbench.fleet_rows())
+        rows += _emit(fleetbench.eval_rows())
         _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):
         _emit(roofline.roofline_rows())

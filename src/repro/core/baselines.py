@@ -54,6 +54,14 @@ class Diagnoser:
                        channels: Sequence[str]) -> DiagnoserResult:
         raise NotImplementedError
 
+    def diagnose_trials(self, trials: Sequence[tuple],
+                        ) -> List[DiagnoserResult]:
+        """Many trials at once: ``trials`` is ``(ts, data, channels)``
+        tuples.  The default is the sequential per-trial loop; engine-backed
+        diagnosers override it with the event-batched Layer-3 path (all
+        trials' events stacked into one fused dispatch)."""
+        return [self.diagnose_trial(*t) for t in trials]
+
 
 # ---------------------------------------------------------------------------
 # helpers shared by the baselines
@@ -257,10 +265,11 @@ class DeepProfilingDiagnoser(Diagnoser):
             rate_hz=rate_hz, alpha=0.0, rca_extra_s=2.0, max_lag=50))
         self.rate_hz = rate_hz
 
-    def diagnose_trial(self, ts, data, channels) -> DiagnoserResult:
+    def _eventize(self, ts, data, channels) -> np.ndarray:
         # Trace systems *eventize*: a channel contributes trace events when
         # it crosses a threshold, and ranking correlates event trains — the
         # amplitude shape information our engine exploits is gone.
+        del ts
         data = np.asarray(data, dtype=np.float64).copy()
         n0 = int(20 * self.rate_hz)
         lat_i = list(channels).index("coll_allreduce_ms")
@@ -278,14 +287,26 @@ class DeepProfilingDiagnoser(Diagnoser):
             # saturating event counter: amplitude detail above ~12 sigma is
             # gone, below-threshold shape is kept at coarse fidelity
             data[i] = np.clip(z, 0.0, 12.0)
-        diags = _with_forced_fallback(self.engine, ts, data, channels)
-        if not diags:
+        return data
+
+    def _result(self, d) -> DiagnoserResult:
+        if d is None:
             return DiagnoserResult(CauseClass.UNKNOWN, None, {})
-        d = diags[0]
         # trace collect + parse cycle replaces our 2 s accumulation: 6-10 s
         extra = 6.0 + (int(d.event.t_detect * 10) % 5)
         return DiagnoserResult(d.top_cause, d.event.t_detect + extra,
                                {"conf": d.ranked[0].confidence if d.ranked else 0.0})
+
+    def diagnose_trial(self, ts, data, channels) -> DiagnoserResult:
+        data = self._eventize(ts, data, channels)
+        diags = _with_forced_fallback(self.engine, ts, data, channels)
+        return self._result(diags[0] if diags else None)
+
+    def diagnose_trials(self, trials) -> List[DiagnoserResult]:
+        """Event-batched eval path: one fused Layer-3 dispatch for the lot."""
+        diags = _first_diagnoses_batched(self.engine, trials,
+                                         prep=self._eventize)
+        return [self._result(d) for d in diags]
 
 
 # ---------------------------------------------------------------------------
@@ -304,10 +325,51 @@ def _with_forced_fallback(engine: CorrelationEngine, ts, data, channels):
     diags = engine.process(ts, data, channels)
     if diags:
         return diags
-    relaxed = CorrelationEngine(
+    return _relaxed(engine).process(ts, data, channels)
+
+
+def _relaxed(engine: CorrelationEngine) -> CorrelationEngine:
+    """The 2-sigma / minimal-persistence fallback detector — one definition
+    so the sequential and event-batched paths cannot drift apart."""
+    return CorrelationEngine(
         dataclasses.replace(engine.cfg, threshold=2.0, persistence=0.05),
         sorted(engine.evidence_channels) if engine.evidence_channels is not None else None)
-    return relaxed.process(ts, data, channels)
+
+
+def _detect_with_fallback(engine: CorrelationEngine, ts, data, channels):
+    """Layer-2 only counterpart of :func:`_with_forced_fallback`."""
+    events = engine.detect_events(ts, data, channels)
+    if events:
+        return events
+    return _relaxed(engine).detect_events(ts, data, channels)
+
+
+def _first_diagnoses_batched(engine: CorrelationEngine,
+                             trials: Sequence[tuple], prep=None):
+    """Each trial's first diagnosis (or None), via ONE fused Layer-3
+    dispatch across all trials' events.
+
+    Detection (plus the relaxed fallback sweep) still runs per trial —
+    it is the cheap rolling pass — but the per-event ``_diagnose`` replay,
+    which dominates boundary-cadence eval wall time, collapses into a
+    single ``fused_rca_max_ragged`` dispatch with events as rows.  The
+    relaxed fallback shares the dispatch: threshold/persistence do not
+    enter Layer-3 math, so its events batch with the strict ones.
+    """
+    items, owner = [], []
+    for (ts, data, channels) in trials:
+        data = np.asarray(data)
+        if prep is not None:
+            data = prep(ts, data, channels)
+        events = _detect_with_fallback(engine, ts, data, channels)
+        if events:
+            ev, t = events[0]       # diagnose_trial consumes diags[0]
+            owner.append(len(items))
+            items.append((ts, data, list(channels), t, ev))
+        else:
+            owner.append(None)
+    diags = engine.diagnose_events_batch(items)
+    return [None if o is None else diags[o] for o in owner]
 
 
 class OurDiagnoser(Diagnoser):
@@ -320,12 +382,19 @@ class OurDiagnoser(Diagnoser):
 
     def diagnose_trial(self, ts, data, channels) -> DiagnoserResult:
         diags = _with_forced_fallback(self.engine, ts, np.asarray(data), channels)
-        if not diags:
+        return self._result(diags[0] if diags else None)
+
+    def _result(self, d) -> DiagnoserResult:
+        if d is None:
             return DiagnoserResult(CauseClass.UNKNOWN, None, {})
-        d = diags[0]
         detail = {"conf": d.ranked[0].confidence if d.ranked else 0.0,
                   "detect_latency": d.event.detection_latency}
         return DiagnoserResult(d.top_cause, d.t_rca, detail)
+
+    def diagnose_trials(self, trials) -> List[DiagnoserResult]:
+        """Event-batched eval path: one fused Layer-3 dispatch for the lot."""
+        diags = _first_diagnoses_batched(self.engine, trials)
+        return [self._result(d) for d in diags]
 
 
 def make_baseline(name: str, rate_hz: float = 100.0, **kw) -> Diagnoser:

@@ -121,7 +121,8 @@ def orient_about_baseline(X: np.ndarray, orient: np.ndarray,
     0 two-sided (|deviation|).
     """
     mu = X[..., b_sl].mean(axis=-1, keepdims=True)       # (..., M, 1)
-    o = orient.reshape(-1, 1)
+    # match X's dtype so the f32 columnar path stays f32 (no silent upcast)
+    o = orient.reshape(-1, 1).astype(X.dtype, copy=False)
     dev = X - mu
     return mu + np.where(o == 0.0, np.abs(dev), o * dev)
 
@@ -159,32 +160,32 @@ class CorrelationEngine:
         return evidence_layout(channels, self.cfg.latency_metric, restrict)
 
     # ------------------------------------------------------- batch processing
-    def process(self, ts: np.ndarray, data: np.ndarray,
-                channels: Sequence[str], fast: bool = True) -> List[Diagnosis]:
-        """Run the engine over a full trial; returns diagnoses in time order.
+    def detect_events(self, ts: np.ndarray, data: np.ndarray,
+                      channels: Sequence[str], fast: bool = True,
+                      ) -> List[Tuple[SpikeEvent, int]]:
+        """Layer-2 sweep only: every event the streaming replay would
+        diagnose, as ``(event, rca_index)`` pairs in time order.
 
-        ``ts``: (T,) uniform 100 Hz grid; ``data``: (C, T); ``channels``
-        names the rows.  This replays exactly what the streaming deployment
-        does tick by tick, with virtual time taken from ``ts``.
-
-        ``fast=True`` precomputes every tick's detection decision in one
-        vectorized rolling-statistics pass; ``fast=False`` is the original
-        scalar per-tick path, kept as the parity oracle for tests and the
-        before/after benchmark.
+        The detection sequence (cooldown, pending-accumulation windows) is
+        independent of Layer-3 *results*, so the sweep can be split off and
+        the diagnoses batched — ``process`` composes the two, and the
+        event-batched eval path stacks the events of many trials into one
+        fused dispatch (``diagnose_events_batch``).  ``rca_index`` is the
+        exact sample index Layer 3 runs at (detection + accumulation,
+        clamped to trial end).
         """
         cfg = self.cfg
         channels = list(channels)
         if data.shape != (len(channels), ts.shape[0]):
             raise ValueError(f"data {data.shape} vs channels {len(channels)} x T {ts.shape[0]}")
-        try:
-            li = channels.index(cfg.latency_metric)
-        except ValueError:
+        if cfg.latency_metric not in channels:
             raise ValueError(f"latency channel {cfg.latency_metric!r} not present")
+        li = channels.index(cfg.latency_metric)
         L = np.asarray(data[li], dtype=np.float64)
         T = ts.shape[0]
         wn, bn = cfg.window_n, cfg.baseline_n
         rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
-        out: List[Diagnosis] = []
+        out: List[Tuple[SpikeEvent, int]] = []
         last_event_t = -np.inf
         pending: Optional[SpikeEvent] = None
         pending_rca_at: Optional[int] = None
@@ -200,12 +201,10 @@ class CorrelationEngine:
         for i, t in enumerate(ticks):
             t = int(t)
             now = float(ts[t])
-            # -- Layer 3/4, if an event is waiting for its accumulation;
-            # runs at the exact accumulation index, not the next boundary.
+            # -- an event pending accumulation matures at the exact
+            # accumulation index, not the next boundary.
             if pending is not None and pending_rca_at is not None and t >= pending_rca_at:
-                diag = self._diagnose(ts, data, channels, li,
-                                      min(pending_rca_at, T - 1), pending)
-                out.append(diag)
+                out.append((pending, min(pending_rca_at, T - 1)))
                 pending, pending_rca_at = None, None
             if pending is not None:
                 continue
@@ -230,9 +229,27 @@ class CorrelationEngine:
                 last_event_t = now
         # trial end: flush a pending event using whatever data exists
         if pending is not None:
-            diag = self._diagnose(ts, data, channels, li, T - 1, pending)
-            out.append(diag)
+            out.append((pending, T - 1))
         return out
+
+    def process(self, ts: np.ndarray, data: np.ndarray,
+                channels: Sequence[str], fast: bool = True) -> List[Diagnosis]:
+        """Run the engine over a full trial; returns diagnoses in time order.
+
+        ``ts``: (T,) uniform 100 Hz grid; ``data``: (C, T); ``channels``
+        names the rows.  This replays exactly what the streaming deployment
+        does tick by tick, with virtual time taken from ``ts``.
+
+        ``fast=True`` precomputes every tick's detection decision in one
+        vectorized rolling-statistics pass; ``fast=False`` is the original
+        scalar per-tick path, kept as the parity oracle for tests and the
+        before/after benchmark.
+        """
+        channels = list(channels)
+        events = self.detect_events(ts, data, channels, fast=fast)
+        li = channels.index(self.cfg.latency_metric)
+        return [self._diagnose(ts, data, channels, li, t, ev)
+                for ev, t in events]
 
     # ------------------------------------------------------------- Layer 3+4
     def _diagnose(self, ts: np.ndarray, data: np.ndarray,
@@ -270,3 +287,96 @@ class CorrelationEngine:
         return Diagnosis(event=event, ranked=ranked, per_metric=per_metric,
                          t_rca=float(ts[t]) + analysis,
                          analysis_seconds=analysis)
+
+    # ------------------------------------------------- event-batched Layer 3+4
+    def diagnose_events_batch(self, items: Sequence[tuple],
+                              use_kernel: bool = False) -> List[Diagnosis]:
+        """Explain many pending events — possibly from different trials —
+        in ONE fused Layer-3 dispatch per evidence layout.
+
+        ``items``: ``(ts, data, channels, rca_index, event)`` tuples, e.g.
+        the cross product of ``detect_events`` over an eval's trials.  Each
+        event's RCA window geometry is *exactly* :meth:`_diagnose`'s (same
+        slices, same orientation-about-baseline policy); windows of
+        different lengths are stacked left-aligned and the per-row valid
+        lengths ride along into ``fused_rca_max_ragged`` — events are just
+        rows to the fused kernel.  For the homogeneous eval (one channel
+        layout) that is a single dispatch for all 68 trials, vs one
+        ``_diagnose`` per event.
+
+        Returns one :class:`Diagnosis` per item, in item order.  The shared
+        batch analysis wall time stamps every diagnosis in a group (the
+        paper's Time-to-RCA includes analysis compute; the whole batch
+        completes together).
+        """
+        from repro.kernels.fused import ops as fused_ops
+
+        cfg = self.cfg
+        wn, bn = cfg.window_n, cfg.baseline_n
+        rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
+        pre_n = int(cfg.pre_onset_s * cfg.rate_hz)
+        results: List[Optional[Diagnosis]] = [None] * len(items)
+        groups: Dict[tuple, list] = {}
+        for i, (ts, data, channels, t, event) in enumerate(items):
+            channels = list(channels)
+            li = channels.index(cfg.latency_metric)
+            names, idx, orient = self._layout(channels)
+            if not names:
+                results[i] = Diagnosis(event=event, ranked=[], per_metric={},
+                                       t_rca=float(ts[t]),
+                                       analysis_seconds=0.0)
+                continue
+            t = int(t)
+            onset_idx = int(np.searchsorted(ts, event.t_onset))
+            lo = max(0, min(t - wn - rca_n, onset_idx - pre_n))
+            blo = max(0, lo - bn)
+            L_win = np.asarray(data[li, lo:t], dtype=np.float64)
+            X = np.asarray(data[idx, blo:t], dtype=np.float64)
+            wstart = lo - blo
+            b_sl = pick_baseline_slice(wstart, max(0, onset_idx - lo),
+                                       X.shape[1])
+            XO = orient_about_baseline(X, orient, b_sl)
+            groups.setdefault(tuple(names), []).append(
+                (i, ts, t, event, L_win, XO[:, wstart:], XO[:, b_sl]))
+
+        for names_key, rows in groups.items():
+            w0 = time.perf_counter()
+            names = list(names_key)
+            E = len(rows)
+            M = rows[0][5].shape[0]
+            n_v = np.array([r[5].shape[1] for r in rows], np.int32)
+            nb_v = np.array([r[6].shape[1] for r in rows], np.int32)
+            # bucket the slab shape (rows to the next power of two, sample
+            # axes to x256) so repeated calls with drifting event counts /
+            # window lengths reuse one jit cache entry instead of
+            # recompiling the ragged dispatch every time; padded rows carry
+            # a tiny valid span of zeros and are dropped before ranking
+            Ep = max(4, 1 << (E - 1).bit_length())
+            N = -(-int(n_v.max()) // 256) * 256
+            Nb = -(-int(nb_v.max()) // 256) * 256
+            n_vp = np.full(Ep, 8, np.int32)
+            nb_vp = np.full(Ep, 8, np.int32)
+            n_vp[:E], nb_vp[:E] = n_v, nb_v
+            L = np.zeros((Ep, N), np.float32)
+            W = np.zeros((Ep, M, N), np.float32)
+            B = np.zeros((Ep, M, Nb), np.float32)
+            for e, (_, _, _, _, lw, w, b) in enumerate(rows):
+                L[e, :lw.size] = lw
+                W[e, :, :w.shape[1]] = w
+                B[e, :, :b.shape[1]] = b
+            s, c, lags = fused_ops.fused_rca_max_ragged(
+                L, W, B, n_vp, nb_vp, max_lag=cfg.max_lag,
+                use_kernel=use_kernel)
+            s = np.asarray(s)[:E]
+            c = np.asarray(c)[:E]
+            lags = np.asarray(lags)[:E]
+            ranked_all = conf_mod.rank_causes_batch(
+                names, s, c, lags / cfg.rate_hz, cfg.alpha, details=True)
+            analysis = time.perf_counter() - w0
+            for e, (i, ts, t, event, _, _, _) in enumerate(rows):
+                ranked, per_metric = ranked_all[e]
+                results[i] = Diagnosis(event=event, ranked=ranked,
+                                       per_metric=per_metric,
+                                       t_rca=float(ts[t]) + analysis,
+                                       analysis_seconds=analysis)
+        return results

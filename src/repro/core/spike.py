@@ -18,6 +18,9 @@ DEFAULT_THRESHOLD = 3.0
 #: numerical dust into spikes (sigma=0 would make any deviation infinite).
 SIGMA_FLOOR_REL = 1e-3
 SIGMA_FLOOR_ABS = 1e-9
+#: f32 -inf surrogate the kernels use to mask padded lanes out of max/argmax
+#: reductions — one definition so every kernel/ref pair stays in sync.
+MASK_NEG = -3.4e38
 
 
 def baseline_stats(baseline: np.ndarray) -> Tuple[float, float]:

@@ -1,0 +1,5 @@
+"""Streaming fleet-detect kernel: spike score + persistence gate + onset
+in one pass over the (hosts, window) latency slab."""
+from repro.kernels.detect.ops import detect_hosts, persistence_count
+
+__all__ = ["detect_hosts", "persistence_count"]

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: streaming fleet detect — spike score + persistence
+gate + onset estimate in one pass over the (hosts, window) latency slab.
+
+The seed fleet path made two trips over the latency slab per
+``diagnose_fleet`` call: a spike-kernel dispatch for the (hosts,) max-z
+scores, then an f64 re-slice + scalar-rule ``detect_rows`` replay over the
+candidate hosts for the persistence gate and onset estimates.  One grid
+cell here handles ``block_h`` hosts and computes, from a single
+VMEM-resident read of the (block_h, Nw) window tile and its (block_h, Nb)
+baseline tile:
+
+  * baseline mean/std with the sigma floor (VPU row reductions),
+  * the window max-z spike score S_h,
+  * the above-threshold sample count (the persistence gate, compared
+    against a precomputed integer count so the decision is bit-identical
+    to the f64 ``hot.mean() >= persistence`` rule),
+  * the onset index: first above-threshold sample, arg-max z fallback.
+
+Everything downstream (flag ordering, Layer-3 gather) consumes the three
+small (hosts,) outputs — the slab is read exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.spike import (
+    MASK_NEG as NEG, SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL,
+)
+from repro.kernels import tuning
+
+
+def _detect_kernel(nw_valid: int, nb_valid: int, threshold: float,
+                   min_hot: int, win_ref, base_ref,
+                   score_ref, fire_ref, onset_ref):
+    """win_ref (1, bh, Nw); base_ref (1, bh, Nb); outputs (1, bh)."""
+    Nw = win_ref.shape[-1]
+    Nb = base_ref.shape[-1]
+    wmask = (jax.lax.iota(jnp.int32, Nw) < nw_valid)
+    bmask = (jax.lax.iota(jnp.int32, Nb) < nb_valid).astype(jnp.float32)
+    nb = jnp.float32(nb_valid)
+
+    # ---- baseline moments + sigma floor (same policy as core.spike)
+    b = base_ref[0] * bmask[None, :]
+    mu = jnp.sum(b, axis=1) / nb                                   # (bh,)
+    d = (b - mu[:, None]) * bmask[None, :]
+    sd = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=1) / nb, 0.0))
+    floor = jnp.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * jnp.abs(mu))
+    sd = jnp.maximum(sd, floor)
+
+    # ---- window z, max-z score, persistence count, onset — one tile read
+    w = win_ref[0]                                                 # (bh, Nw)
+    z = (w - mu[:, None]) / sd[:, None]
+    z = jnp.where(wmask[None, :], z, NEG)
+    score = jnp.max(z, axis=1)
+    hot = (z > threshold) & wmask[None, :]
+    cnt = jnp.sum(hot.astype(jnp.int32), axis=1)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    first_hot = jnp.min(jnp.where(hot, idx, Nw), axis=1)
+    # arg-max via first index attaining the max (np.argmax tie rule)
+    amax = jnp.min(jnp.where(z == score[:, None], idx, Nw), axis=1)
+
+    score_ref[0] = score
+    fire_ref[0] = ((score > threshold) & (cnt >= min_hot)).astype(jnp.int32)
+    onset_ref[0] = jnp.where(cnt > 0, first_hot, amax)
+
+
+def detect_hosts_pallas(windows: jax.Array, baselines: jax.Array,
+                        threshold: float, min_hot: int,
+                        nw_valid: int | None = None,
+                        nb_valid: int | None = None,
+                        block_h: int | None = None, interpret: bool = True,
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """windows (H, Nw), baselines (H, Nb) -> (fire i32, score f32, onset i32)
+    each (H,).  Nw and Nb must be lane-aligned (pad + pass valid counts);
+    ``min_hot`` is the integer persistence gate (see ops.persistence_count).
+    """
+    H, Nw = windows.shape
+    Nb = baselines.shape[-1]
+    if Nw % 128 or Nb % 128:
+        raise ValueError(f"Nw={Nw}, Nb={Nb} must be lane-aligned (x128)")
+    nw_valid = Nw if nw_valid is None else int(nw_valid)
+    nb_valid = Nb if nb_valid is None else int(nb_valid)
+    bh = tuning.detect_block_h(block_h)
+    pad_h = (-H) % bh
+    if pad_h:
+        windows = jnp.pad(windows, ((0, pad_h), (0, 0)))
+        baselines = jnp.pad(baselines, ((0, pad_h), (0, 0)),
+                            constant_values=1.0)
+    Hp = H + pad_h
+
+    score, fire, onset = pl.pallas_call(
+        functools.partial(_detect_kernel, nw_valid, nb_valid,
+                          float(threshold), int(min_hot)),
+        grid=(1, Hp // bh),
+        in_specs=[
+            pl.BlockSpec((1, bh, Nw), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bh, Nb), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bh), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bh), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bh), lambda b, j: (b, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Hp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Hp), jnp.int32),
+            jax.ShapeDtypeStruct((1, Hp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(windows.astype(jnp.float32)[None], baselines.astype(jnp.float32)[None])
+    return fire[0, :H], score[0, :H], onset[0, :H]

@@ -1,0 +1,111 @@
+"""Jit'd public wrapper for the streaming fleet-detect kernel.
+
+This is the ``diagnose_fleet`` Layer-2 hot path: ONE dispatch over the
+(hosts, wn) latency slab yields, per host, the spike score, the
+persistence-gated straggler decision, and the onset estimate — the seed
+needed a spike-kernel dispatch plus an f64 re-slice + scalar-rule
+``detect_rows`` replay over the candidates for the same three outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.detect.detect import detect_hosts_pallas
+from repro.kernels.detect.ref import detect_hosts_ref
+
+
+def persistence_count(n: int, persistence: float) -> int:
+    """Smallest integer c with ``c / n >= persistence`` in f64.
+
+    The scalar rule (:func:`repro.core.spike.detect_rows`) gates on
+    ``hot.mean() >= persistence`` computed in f64; comparing an f32
+    fraction against the f64 threshold can flip exactly at the boundary
+    count, so the kernel gates on the integer count instead — decided
+    here, once, in exact f64.
+    """
+    n = int(n)
+    if n <= 0 or persistence <= 0.0:
+        return 0
+    c = min(int(np.ceil(persistence * n)), n)
+    while c > 0 and (c - 1) / n >= persistence:
+        c -= 1
+    while c <= n and c / n < persistence:
+        c += 1
+    return c
+
+
+def _pad128(x: jax.Array, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % 128
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "min_hot", "use_kernel", "interpret"))
+def _detect_hosts_jit(windows, baselines, threshold, min_hot,
+                      use_kernel, interpret):
+    if not use_kernel:
+        return detect_hosts_ref(windows, baselines, threshold, min_hot)
+    nw, nb = windows.shape[-1], baselines.shape[-1]
+    w = _pad128(windows.astype(jnp.float32), 1)
+    b = _pad128(baselines.astype(jnp.float32), 1)
+    return detect_hosts_pallas(w, b, threshold, min_hot,
+                               nw_valid=nw, nb_valid=nb, interpret=interpret)
+
+
+
+
+def detect_hosts(windows, baselines, threshold: float = 3.0,
+                 persistence: float = 0.0, use_kernel: bool = True,
+                 interpret: bool = True,
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched Layer-2 decision per host row, one dispatch.
+
+    ``windows`` (H, Nw) vs ``baselines`` (H, Nb) -> ``(fire, score, onset)``
+    numpy arrays of length H: fire is the full scalar :func:`spike.detect`
+    rule (max-z above threshold AND >= ``persistence`` of the window hot),
+    onset the first above-threshold sample with arg-max z fallback —
+    exactly :func:`repro.core.spike.detect_rows`, f32, without the
+    intermediate (H, Nw) z materialization in host memory.
+    """
+    windows = jnp.asarray(windows)
+    baselines = jnp.asarray(baselines)
+    if windows.ndim != 2 or baselines.ndim != 2 \
+            or windows.shape[0] != baselines.shape[0]:
+        raise ValueError(f"shape mismatch: windows {windows.shape} "
+                         f"baselines {baselines.shape}")
+    min_hot = persistence_count(windows.shape[-1], persistence)
+    fire, score, onset = _detect_hosts_jit(
+        windows, baselines, float(threshold), min_hot,
+        bool(use_kernel), bool(interpret))
+    return (np.asarray(fire).astype(bool), np.asarray(score),
+            np.asarray(onset).astype(np.intp))
+
+
+def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
+                      persistence: float = 0.0, use_kernel: bool = True,
+                      interpret: bool = True,
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """:func:`detect_hosts` over a trailing latency slab.
+
+    ``tail`` is the (H, bn + wn) slab — baseline columns then window
+    columns, exactly the layout of a trailing ring snapshot.  The split
+    is materialized host-side as two contiguous f32 blocks: jax aliases
+    aligned contiguous f32 numpy on CPU (zero-copy), whereas handing it a
+    strided slab view takes a slow elementwise transfer path, and
+    slicing inside the jit re-materializes both halves on device.
+    """
+    tail = np.asarray(tail)
+    if tail.ndim != 2 or tail.shape[-1] != wn + bn:
+        raise ValueError(f"tail {tail.shape} vs bn+wn={bn + wn}")
+    win = np.ascontiguousarray(tail[:, bn:], dtype=np.float32)
+    base = np.ascontiguousarray(tail[:, :bn], dtype=np.float32)
+    return detect_hosts(win, base, threshold, persistence,
+                        use_kernel=use_kernel, interpret=interpret)

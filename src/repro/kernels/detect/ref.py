@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the streaming detect kernel.
+
+Same math as :func:`repro.core.spike.detect_rows` (sigma floor, max-z,
+persistence fraction, first-hot/arg-max onset), in f32 over the whole host
+slab at once — the XLA path the CPU benchmark times, and the AD-friendly
+path.  The persistence gate compares an integer sample count (precomputed
+by ops.persistence_count) so the f32 path decides bit-identically to the
+f64 scalar rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spike import (
+    MASK_NEG as NEG, SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL,
+)
+
+
+def detect_hosts_ref(windows: jax.Array, baselines: jax.Array,
+                     threshold: float, min_hot: int,
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """windows (H, Nw), baselines (H, Nb) -> (fire i32, score f32, onset i32)."""
+    w = windows.astype(jnp.float32)
+    b = baselines.astype(jnp.float32)
+    mu = b.mean(axis=-1)
+    sd = b.std(axis=-1)
+    floor = jnp.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * jnp.abs(mu))
+    sd = jnp.maximum(sd, floor)
+    z = (w - mu[:, None]) / sd[:, None]
+    score = z.max(axis=-1)
+    hot = z > threshold
+    cnt = jnp.sum(hot.astype(jnp.int32), axis=-1)
+    fire = ((score > threshold) & (cnt >= min_hot)).astype(jnp.int32)
+    onset = jnp.where(cnt > 0, jnp.argmax(hot, axis=-1),
+                      jnp.argmax(z, axis=-1)).astype(jnp.int32)
+    return fire, score, onset

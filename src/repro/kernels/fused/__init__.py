@@ -1,5 +1,7 @@
 """Fused Layer-2+3 kernel: baseline stats + spike scores + lagged xcorr in
 one pass over each (host, metric-block) tile."""
-from repro.kernels.fused.ops import fused_rca, fused_rca_max
+from repro.kernels.fused.ops import (
+    fused_rca, fused_rca_max, fused_rca_max_ragged,
+)
 
-__all__ = ["fused_rca", "fused_rca_max"]
+__all__ = ["fused_rca", "fused_rca_max", "fused_rca_max_ragged"]

@@ -22,14 +22,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.spike import (
+    MASK_NEG as NEG, SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL,
+)
+from repro.kernels import tuning
 from repro.kernels.xcorr.xcorr import shifted_lag_matrix
 
-SIGMA_FLOOR_REL = 1e-3
-SIGMA_FLOOR_ABS = 1e-9
-NEG = -3.4e38
 _EPS = 1e-12
-LAG_PAD = 64   # output lag dim padded for lane alignment
+LAG_PAD = tuning.DEFAULT_LAG_PAD   # default lag padding (env-overridable)
 
 
 def _fused_kernel(n_valid: int, nb_valid: int, max_lag: int,
@@ -74,7 +76,7 @@ def _fused_kernel(n_valid: int, nb_valid: int, max_lag: int,
         Mc, Lshift, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                        # (bm, 2K+1)
     rho = rho / (Mn[:, None] * Ln)
-    out = jnp.zeros((bm, LAG_PAD), jnp.float32)
+    out = jnp.zeros((bm, rho_ref.shape[-1]), jnp.float32)
     out = jax.lax.dynamic_update_slice(out, rho, (0, 0))
     rho_ref[0] = out
 
@@ -82,14 +84,16 @@ def _fused_kernel(n_valid: int, nb_valid: int, max_lag: int,
 def fused_rca_pallas(latency: jax.Array, metrics: jax.Array,
                      baselines: jax.Array, max_lag: int,
                      n_valid: int | None = None, nb_valid: int | None = None,
-                     block_m: int = 8, interpret: bool = True,
+                     block_m: int | None = None, lag_pad: int | None = None,
+                     interpret: bool = True,
                      ) -> tuple[jax.Array, jax.Array]:
     """latency (B, N), metrics (B, M, N), baselines (B, M, Nb) ->
     (scores (B, M), rho (B, M, 2K+1)), fp32.
 
     N and Nb must be lane-aligned (pad + pass n_valid/nb_valid).
     ``interpret`` runs the kernel body on CPU (the bit-accurate validation
-    path); on TPU pass interpret=False.
+    path); on TPU pass interpret=False.  ``block_m``/``lag_pad`` default to
+    the env-overridable tile config (kernels.tuning).
     """
     B, Mm, N = metrics.shape
     Nb = baselines.shape[-1]
@@ -98,7 +102,9 @@ def fused_rca_pallas(latency: jax.Array, metrics: jax.Array,
     n_valid = N if n_valid is None else int(n_valid)
     nb_valid = Nb if nb_valid is None else int(nb_valid)
     K = int(max_lag)
-    pad_m = (-Mm) % block_m
+    bm = tuning.block_m(block_m)
+    lp = tuning.lag_pad(K, lag_pad)
+    pad_m = (-Mm) % bm
     if pad_m:
         metrics = jnp.pad(metrics, ((0, 0), (0, pad_m), (0, 0)))
         baselines = jnp.pad(baselines, ((0, 0), (0, pad_m), (0, 0)),
@@ -107,21 +113,129 @@ def fused_rca_pallas(latency: jax.Array, metrics: jax.Array,
 
     scores, rho = pl.pallas_call(
         functools.partial(_fused_kernel, n_valid, nb_valid, K),
-        grid=(B, Mp // block_m),
+        grid=(B, Mp // bm),
         in_specs=[
             pl.BlockSpec((1, N), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, block_m, N), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, block_m, Nb), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bm, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bm, Nb), lambda b, j: (b, j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block_m), lambda b, j: (b, j)),
-            pl.BlockSpec((1, block_m, LAG_PAD), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bm), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bm, lp), lambda b, j: (b, j, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, Mp), jnp.float32),
-            jax.ShapeDtypeStruct((B, Mp, LAG_PAD), jnp.float32),
+            jax.ShapeDtypeStruct((B, Mp, lp), jnp.float32),
         ],
         interpret=interpret,
     )(latency.astype(jnp.float32), metrics.astype(jnp.float32),
+      baselines.astype(jnp.float32))
+    return scores[:, :Mm], rho[:, :Mm, : 2 * K + 1]
+
+
+# --------------------------------------------------------------- masked rows
+def _fused_masked_kernel(max_lag: int, nv_ref, nb_ref,
+                         lat_ref, met_ref, base_ref, score_ref, rho_ref):
+    """Per-row ragged variant: valid lengths come from SMEM scalars.
+
+    nv_ref/nb_ref (1, 1) int32 — this grid row's valid window/baseline
+    lengths; everything else identical to :func:`_fused_kernel`.  Rows are
+    events here, not hosts: the event-batched Layer-3 path stacks every
+    pending event's (latency, metrics, baselines) windows left-aligned
+    into one slab and explains them all in one dispatch.
+    """
+    N = lat_ref.shape[-1]
+    Nb = base_ref.shape[-1]
+    K = int(max_lag)
+    bm = met_ref.shape[1]
+    n_valid = nv_ref[0, 0]
+    nb_valid = nb_ref[0, 0]
+    valid = (jax.lax.iota(jnp.int32, N) < n_valid).astype(jnp.float32)
+    bmask = (jax.lax.iota(jnp.int32, Nb) < nb_valid).astype(jnp.float32)
+    nv = n_valid.astype(jnp.float32)
+    nb = nb_valid.astype(jnp.float32)
+
+    b = base_ref[0] * bmask[None, :]
+    mu = jnp.sum(b, axis=1) / nb
+    d = (b - mu[:, None]) * bmask[None, :]
+    sd = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=1) / nb, 0.0))
+    floor = jnp.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * jnp.abs(mu))
+    sd = jnp.maximum(sd, floor)
+
+    w = met_ref[0] * valid[None, :]
+    z = (w - mu[:, None]) / sd[:, None]
+    z = jnp.where(valid[None, :] > 0, z, NEG)
+    score_ref[0] = jnp.max(z, axis=1)
+
+    L = lat_ref[0, :] * valid
+    Lmean = jnp.sum(L) / nv
+    Lc = (L - Lmean) * valid
+    Ln = jnp.sqrt(jnp.sum(Lc * Lc)) + _EPS
+
+    Mmean = jnp.sum(w, axis=1, keepdims=True) / nv
+    Mc = (w - Mmean) * valid[None, :]
+    Mn = jnp.sqrt(jnp.sum(Mc * Mc, axis=1)) + _EPS
+
+    Lshift = shifted_lag_matrix(Lc, K)
+    rho = jax.lax.dot_general(
+        Mc, Lshift, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    rho = rho / (Mn[:, None] * Ln)
+    out = jnp.zeros((bm, rho_ref.shape[-1]), jnp.float32)
+    out = jax.lax.dynamic_update_slice(out, rho, (0, 0))
+    rho_ref[0] = out
+
+
+def fused_rca_masked_pallas(latency: jax.Array, metrics: jax.Array,
+                            baselines: jax.Array, n_valid: jax.Array,
+                            nb_valid: jax.Array, max_lag: int,
+                            block_m: int | None = None,
+                            lag_pad: int | None = None,
+                            interpret: bool = True,
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Ragged-row fused RCA: per-row valid lengths.
+
+    latency (B, N), metrics (B, M, N), baselines (B, M, Nb) left-aligned
+    with zero tails; n_valid/nb_valid (B,) int32 give each row's true
+    window/baseline lengths.  Returns (scores (B, M), rho (B, M, 2K+1)).
+    """
+    B, Mm, N = metrics.shape
+    Nb = baselines.shape[-1]
+    if N % 128 != 0 or Nb % 128 != 0:
+        raise ValueError(f"N={N}, Nb={Nb} must be lane-aligned (x128)")
+    K = int(max_lag)
+    bm = tuning.block_m(block_m)
+    lp = tuning.lag_pad(K, lag_pad)
+    pad_m = (-Mm) % bm
+    if pad_m:
+        metrics = jnp.pad(metrics, ((0, 0), (0, pad_m), (0, 0)))
+        baselines = jnp.pad(baselines, ((0, 0), (0, pad_m), (0, 0)),
+                            constant_values=1.0)
+    Mp = Mm + pad_m
+    nv = n_valid.astype(jnp.int32).reshape(B, 1)
+    nb = nb_valid.astype(jnp.int32).reshape(B, 1)
+
+    scores, rho = pl.pallas_call(
+        functools.partial(_fused_masked_kernel, K),
+        grid=(B, Mp // bm),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, bm, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bm, Nb), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bm, lp), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Mp, lp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nv, nb, latency.astype(jnp.float32), metrics.astype(jnp.float32),
       baselines.astype(jnp.float32))
     return scores[:, :Mm], rho[:, :Mm, : 2 * K + 1]

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
+
 SIGMA_FLOOR_REL = 1e-3
 SIGMA_FLOOR_ABS = 1e-9
 NEG = -3.4e38
@@ -44,15 +46,18 @@ def _spike_kernel(nw_valid: int, nb_valid: int, win_ref, base_ref, out_ref):
 def spike_scores_pallas(windows: jax.Array, baselines: jax.Array,
                         nw_valid: int | None = None,
                         nb_valid: int | None = None,
-                        block_m: int = 8, interpret: bool = True,
+                        block_m: int | None = None, interpret: bool = True,
                         ) -> jax.Array:
-    """windows (B, M, Nw), baselines (B, M, Nb) -> (B, M) f32."""
+    """windows (B, M, Nw), baselines (B, M, Nb) -> (B, M) f32.
+
+    ``block_m`` defaults to the env-overridable tile config."""
     B, M, Nw = windows.shape
     Nb = baselines.shape[-1]
     if Nw % 128 or Nb % 128:
         raise ValueError("window dims must be lane-aligned")
     nw_valid = Nw if nw_valid is None else int(nw_valid)
     nb_valid = Nb if nb_valid is None else int(nb_valid)
+    block_m = tuning.block_m(block_m)
     pad_m = (-M) % block_m
     if pad_m:
         windows = jnp.pad(windows, ((0, 0), (0, pad_m), (0, 0)))

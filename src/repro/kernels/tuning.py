@@ -1,0 +1,60 @@
+"""Env/config-driven tile-size selection for the Pallas kernels.
+
+The fused, xcorr and detect kernels tile their grids by ``block_m`` (metric
+rows per grid cell — hosts, for the detect kernel) and pad the lag axis to
+``LAG_PAD`` lanes.  The defaults below are the shapes the kernels were
+written against (DESIGN.md §6: bm=8 keeps the (bm + 2K + 2) x N x 4-byte
+working set far under VMEM); on real TPU hardware the sweet spot depends on
+the generation, so both are overridable without code edits:
+
+    REPRO_BLOCK_M=16 REPRO_LAG_PAD=128 python -m benchmarks.run --only kernel
+    REPRO_DETECT_BLOCK_H=32 ...                      # detect kernel host tile
+
+``benchmarks/kernelbench.py`` sweeps the ``block_m`` candidates in interpret
+mode (`kernel/tile_sweep/*` rows) so a hardware run has a starting grid; the
+ROADMAP's TPU-tuning item consumes those rows.
+"""
+from __future__ import annotations
+
+import os
+
+DEFAULT_BLOCK_M = 8      # metric rows per (host, metric-block) grid cell
+DEFAULT_BLOCK_H = 8      # host rows per detect-kernel grid cell
+DEFAULT_LAG_PAD = 64     # lag output lanes (>= 2K+1, lane-aligned)
+
+#: candidates the interpret-mode microbench sweeps (hardware starting grid)
+BLOCK_M_CANDIDATES = (4, 8, 16)
+
+
+def _env_int(name: str, default: int, minimum: int = 1) -> int:
+    raw = os.environ.get(name)
+    if not raw:
+        return default
+    try:
+        v = int(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not an integer")
+    if v < minimum:
+        raise ValueError(f"{name}={v} must be >= {minimum}")
+    return v
+
+
+def block_m(override: int | None = None) -> int:
+    """Metric-block rows for the fused/xcorr/spike kernels."""
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_BLOCK_M", DEFAULT_BLOCK_M)
+
+
+def detect_block_h(override: int | None = None) -> int:
+    """Host-block rows for the streaming detect kernel."""
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_DETECT_BLOCK_H", DEFAULT_BLOCK_H)
+
+
+def lag_pad(max_lag: int, override: int | None = None) -> int:
+    """Lag-axis padding: env/explicit override, floored at 2K+1."""
+    pad = (int(override) if override is not None
+           else _env_int("REPRO_LAG_PAD", DEFAULT_LAG_PAD))
+    return max(pad, 2 * int(max_lag) + 1)

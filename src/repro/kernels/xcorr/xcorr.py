@@ -23,8 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
+
 _EPS = 1e-12
-LAG_PAD = 64   # output lag dim padded for lane alignment
+LAG_PAD = tuning.DEFAULT_LAG_PAD   # default lag padding (env-overridable)
 
 
 def shifted_lag_matrix(lc: jax.Array, max_lag: int) -> jax.Array:
@@ -72,40 +74,44 @@ def _xcorr_kernel(n_valid: int, max_lag: int,
         Mc, Lshift, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)            # (bm, 2K+1)
     rho = rho / (Mn[:, None] * Ln)
-    out = jnp.zeros((bm, LAG_PAD), jnp.float32)
+    out = jnp.zeros((bm, out_ref.shape[-1]), jnp.float32)
     out = jax.lax.dynamic_update_slice(out, rho, (0, 0))
     out_ref[0] = out
 
 
 def lagged_xcorr_pallas(latency: jax.Array, metrics: jax.Array,
                         max_lag: int, n_valid: int | None = None,
-                        block_m: int = 8, interpret: bool = True,
-                        ) -> jax.Array:
+                        block_m: int | None = None,
+                        lag_pad: int | None = None,
+                        interpret: bool = True) -> jax.Array:
     """latency (B, N), metrics (B, M, N) -> rho (B, M, 2K+1), fp32.
 
     N must be a multiple of 128 (pad + pass ``n_valid``).  ``interpret``
     runs the kernel body on CPU (bit-accurate validation path); on TPU pass
-    interpret=False.
+    interpret=False.  ``block_m``/``lag_pad`` default to the
+    env-overridable tile config (kernels.tuning).
     """
     B, Mm, N = metrics.shape
     if N % 128 != 0:
         raise ValueError(f"N={N} must be lane-aligned (multiple of 128)")
     n_valid = N if n_valid is None else int(n_valid)
     K = int(max_lag)
-    pad_m = (-Mm) % block_m
+    bm = tuning.block_m(block_m)
+    lp = tuning.lag_pad(K, lag_pad)
+    pad_m = (-Mm) % bm
     if pad_m:
         metrics = jnp.pad(metrics, ((0, 0), (0, pad_m), (0, 0)))
     Mp = Mm + pad_m
 
     out = pl.pallas_call(
         functools.partial(_xcorr_kernel, n_valid, K),
-        grid=(B, Mp // block_m),
+        grid=(B, Mp // bm),
         in_specs=[
             pl.BlockSpec((1, N), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, block_m, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bm, N), lambda b, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_m, LAG_PAD), lambda b, j: (b, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Mp, LAG_PAD), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm, lp), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Mp, lp), jnp.float32),
         interpret=interpret,
     )(latency.astype(jnp.float32), metrics.astype(jnp.float32))
     return out[:, :Mm, : 2 * K + 1]

@@ -14,6 +14,22 @@ vectorized over the host axis — the seed fell back to a per-host scalar
 ``engine.process`` replay for the single worst straggler, which is exactly
 the per-node scaling wall at fleet size.  Verdicts map to mitigation hints
 consumed by the training loop (fault tolerance wiring).
+
+The columnar fast path (default, ``fast_detect=True``) keeps the pipeline
+f32-contiguous from the telemetry ring to the verdict: Layer 2 is ONE
+streaming-detect dispatch (kernels.detect — spike score + persistence gate
++ onset per host, one read of the (hosts, wn) latency slab) and the Layer-3
+evidence gather stays f32 into the fused kernel.  ``fast_detect=False``
+keeps the seed path — a spike-kernel dispatch, then an f64 re-slice +
+scalar-rule ``detect_rows`` replay over the candidates, and an f64 evidence
+gather — as the parity oracle: on the tested/benchmarked slabs flagged
+hosts and onsets match the fast path byte-exactly (asserted by tests and
+recorded in BENCH_fleet.json; the persistence gate compares an integer
+count, so only a z-score within one f32 ulp of the 3-sigma threshold
+could ever split the two paths).
+
+``stage_seconds`` reports *disjoint* pipeline stages (detect / gather /
+kernel / rank / assemble) so benchmark attribution sums to the wall total.
 """
 from __future__ import annotations
 
@@ -31,6 +47,7 @@ from repro.core.engine import (
 )
 from repro.core.spike import detect_rows
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent
+from repro.kernels.detect import ops as detect_ops
 from repro.kernels.fused import ops as fused_ops
 from repro.kernels.spike import ops as spike_ops
 from repro.kernels.xcorr import ops as xcorr_ops
@@ -66,7 +83,8 @@ class FleetDiagnosis:
     #: host -> diagnosis for ALL flagged hosts (one fused dispatch)
     diagnoses: Dict[int, Diagnosis] = dataclasses.field(default_factory=dict)
     mitigations: Dict[int, Mitigation] = dataclasses.field(default_factory=dict)
-    #: wall seconds per pipeline stage (detect / gather / kernel / rank)
+    #: wall seconds per pipeline stage, disjoint (detect / gather / kernel /
+    #: rank / assemble) — they sum to the diagnose_fleet wall total
     stage_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
@@ -75,10 +93,14 @@ class FleetMonitor:
 
     def __init__(self, config: Optional[EngineConfig] = None,
                  use_kernels: bool = True,
-                 persistent_threshold: int = 3):
+                 persistent_threshold: int = 3,
+                 fast_detect: bool = True):
         self.cfg = config or EngineConfig()
         self.use_kernels = use_kernels
         self.persistent_threshold = persistent_threshold
+        #: columnar fast path: one streaming-detect dispatch + f32 gather;
+        #: False = seed spike-dispatch + f64 detect_rows replay (oracle)
+        self.fast_detect = fast_detect
         self._strikes: Dict[int, int] = {}
 
     # ------------------------------------------------------------- batched L2
@@ -114,26 +136,44 @@ class FleetMonitor:
         bn = min(bn, T - wn)
         t_detect = time.perf_counter()
         lat = host_data[:, li, :]
-        scores = self.host_spike_scores(lat[:, T - wn:],
-                                        lat[:, T - wn - bn:T - wn])
         # persistence gate, the scalar spike.detect rule batched over hosts:
         # a host is a straggler only if `persistence` of its window sits
         # above mu + thr*sigma — bare max-z over 500 correlated ambient
-        # samples trips routinely.  detect_rows also yields each survivor's
+        # samples trips routinely.  The gate also yields each survivor's
         # onset estimate for Layer 3.
-        cand = np.flatnonzero(scores > self.cfg.threshold)
-        onset_rel = np.empty(0, dtype=np.intp)
-        if cand.size:
-            latc = np.asarray(lat[cand], dtype=np.float64)
-            keep, _, onset_rel = detect_rows(
-                latc[:, T - wn:], latc[:, T - wn - bn:T - wn],
-                self.cfg.threshold, self.cfg.persistence)
-            cand, onset_rel = cand[keep], onset_rel[keep]
+        if self.fast_detect:
+            # one streaming-detect dispatch over the trailing slab view:
+            # score + gate + onset per host, one host->device copy, no
+            # candidate re-slice
+            fire, scores, onset_all = detect_ops.detect_hosts_slab(
+                lat[:, T - wn - bn:T], wn, bn,
+                self.cfg.threshold, self.cfg.persistence,
+                use_kernel=self.use_kernels)
+            cand = np.flatnonzero(fire)
+            onset_rel = onset_all[cand]
+        else:
+            scores = self.host_spike_scores(lat[:, T - wn:],
+                                            lat[:, T - wn - bn:T - wn])
+            cand = np.flatnonzero(scores > self.cfg.threshold)
+            onset_rel = np.empty(0, dtype=np.intp)
+            if cand.size:
+                latc = np.asarray(lat[cand], dtype=np.float64)
+                keep, _, onset_rel = detect_rows(
+                    latc[:, T - wn:], latc[:, T - wn - bn:T - wn],
+                    self.cfg.threshold, self.cfg.persistence)
+                cand, onset_rel = cand[keep], onset_rel[keep]
         stage = {"detect": time.perf_counter() - t_detect}
         order = np.argsort(-scores[cand])
         flagged, onset_rel = cand[order], onset_rel[order]
         diagnoses: Dict[int, Diagnosis] = {}
         mitigations: Dict[int, Mitigation] = {}
+        # strike lifecycle: a host that recovered (not flagged THIS round)
+        # loses its strike history immediately, even while other hosts stay
+        # flagged — otherwise churn leaves stale counts behind forever and
+        # the dict grows unbounded with fleet size
+        flagged_set = {int(h) for h in flagged}
+        for h in [h for h in self._strikes if h not in flagged_set]:
+            del self._strikes[h]
         if flagged.size:
             diagnoses = self._diagnose_hosts(ts, host_data, channels, li,
                                              flagged, (T - wn) + onset_rel,
@@ -149,8 +189,6 @@ class FleetMonitor:
                     mitigations[h] = Mitigation.EXCLUDE_AND_RESCALE
                 else:
                     mitigations[h] = VERDICT_TO_MITIGATION[d.top_cause]
-        else:
-            self._strikes = {}
         # the worst *persistent* host; bare arg-max only as the quiet-fleet
         # readout (a transient max-z glitch must not name a straggler)
         straggler = int(flagged[0]) if flagged.size else int(np.argmax(scores))
@@ -197,8 +235,12 @@ class FleetMonitor:
         if not names:
             return {}
         rows = np.concatenate(([li], idx))
+        # columnar mode gathers straight to f32 (the fused kernel's input
+        # dtype) — no f64 round-trip of the evidence slab; the oracle path
+        # keeps the seed's f64 gather
+        gather_dtype = np.float32 if self.fast_detect else np.float64
         X = host_data[np.ix_(flagged, rows, np.arange(T - rn - nb, T))
-                      ].astype(np.float64)                      # (H, 1+M, nb+rn)
+                      ].astype(gather_dtype)                    # (H, 1+M, nb+rn)
         L_win = X[:, 0, nb:]                                    # (H, rn)
         Xm = X[:, 1:, :]                                        # (H, M, nb+rn)
 
@@ -227,11 +269,16 @@ class FleetMonitor:
         # detail for it only, via the same ranker
         ranked_all[0] = conf_mod.rank_causes_batch(
             names, s[:1], c[:1], lags[:1] / rate, cfg.alpha, details=True)[0]
+        t_assemble = time.perf_counter()
+        # disjoint stages: "rank" is the confidence fusion only; the
+        # Diagnosis-object assembly below is its own stage, so benchmark
+        # attribution sums to the wall total with no double counting
+        stage["rank"] = t_assemble - t_rank
         out: Dict[int, Diagnosis] = {}
         now = float(ts[T - 1])
         # Layer-3/4 compute cost, shared by the whole batch (paper's
         # Time-to-RCA includes analysis compute)
-        analysis = time.perf_counter() - t_kernel
+        analysis = t_assemble - t_kernel
         for j, h in enumerate(flagged):
             h = int(h)
             ranked, per_metric = ranked_all[j]
@@ -241,5 +288,5 @@ class FleetMonitor:
             out[h] = Diagnosis(event=ev, ranked=ranked,
                                per_metric=per_metric, t_rca=now + analysis,
                                analysis_seconds=analysis)
-        stage["rank"] = time.perf_counter() - t_rank
+        stage["assemble"] = time.perf_counter() - t_assemble
         return out

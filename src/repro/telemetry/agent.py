@@ -11,6 +11,15 @@ Two drive modes:
     (deterministic, reproducible trials);
   * ``run_background()`` — a real thread at ``rate_hz`` against the wall
     clock, used by the training loop and the overhead benchmark.
+
+Columnar fast path: when every collector supports ``sample_block`` (the
+replay-style ``SimCollector`` does) and no channel needs counter-to-rate
+conversion, ``run_virtual`` ingests the whole span as one f32 (C, n) block
+via ``MultiChannelRing.push_block`` — no per-tick dict construction, f32
+end to end into the ring, exact-parity with the per-tick path.  Real
+probes (``ProcCollector``, ``DeviceMetricSource``) and counter channels
+fall back to the per-tick ``step`` loop, which stays the parity oracle
+(``run_virtual(..., columnar=False)`` forces it).
 """
 from __future__ import annotations
 
@@ -119,10 +128,59 @@ class TelemetryAgent:
         return row
 
     # ----------------------------------------------------------- virtual run
-    def run_virtual(self, t_start: float, t_end: float) -> None:
-        """Drive the agent on a virtual clock (simulation trials)."""
+    def _columnar_block(self, grid: np.ndarray) -> Optional[np.ndarray]:
+        """(C, n) f32 block for the whole grid, or None if any collector
+        (or a counter channel) forces the per-tick path."""
+        cols: Dict[str, np.ndarray] = {}
+        for c in self.collectors:
+            try:
+                blk = c.sample_block(grid)
+            except Exception:
+                # same invariant as step(): a failing probe must never take
+                # the agent down — fall back to the per-tick path, which
+                # skips the offender sample by sample
+                return None
+            if blk is None:
+                return None
+            cols.update(blk)
+        if self._counter_channels & cols.keys():
+            return None                 # rates need tick-to-tick deltas
+        block = np.empty((self.ring.n_channels, grid.size), np.float32)
+        for i, name in enumerate(self.ring.channels):
+            v = cols.get(name)
+            if v is None:
+                # channel absent from this run's collectors: forward-fill
+                # its last ring value (0.0 on a fresh ring) — the same
+                # carry semantics as push_row
+                last = 0.0
+                if len(self.ring):
+                    last = float(self.ring.window(1, copy=False)[1][i, -1])
+                block[i] = last
+            else:
+                block[i] = v
+        return block
+
+    def run_virtual(self, t_start: float, t_end: float,
+                    columnar: bool = True) -> None:
+        """Drive the agent on a virtual clock (simulation trials).
+
+        ``columnar=True`` (default) ingests the whole span as one f32
+        block when every collector supports it; ``False`` forces the
+        per-tick ``step`` loop (the parity oracle).
+        """
         period = 1.0 / self.rate_hz
         n = int(round((t_end - t_start) / period))
+        if columnar and n:
+            t0 = time.perf_counter()
+            grid = t_start + np.arange(n) * period
+            block = self._columnar_block(grid)
+            if block is not None:
+                self.ring.push_block(grid, block)
+                self.stats.samples += n
+                self._prev_ts = float(grid[-1])
+                self.stats.busy_seconds += time.perf_counter() - t0
+                self.stats.wall_seconds += t_end - t_start
+                return
         for i in range(n):
             self.step(t_start + i * period)
         self.stats.wall_seconds += t_end - t_start
@@ -162,10 +220,15 @@ class TelemetryAgent:
         return self.stats
 
     # ------------------------------------------------------------- accessors
-    def window(self, seconds: float) -> tuple[np.ndarray, np.ndarray]:
-        """(ts, (C, n)) snapshot of the trailing ``seconds``."""
+    def window(self, seconds: float, copy: bool = True,
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """(ts, (C, n)) snapshot of the trailing ``seconds``.
+
+        ``copy=False`` forwards the ring's zero-copy f32 view when the
+        span is contiguous — the columnar monitor path (consume before the
+        next push)."""
         n = int(seconds * self.rate_hz)
-        return self.ring.window(n)
+        return self.ring.window(n, copy=copy)
 
     @property
     def channels(self) -> List[str]:

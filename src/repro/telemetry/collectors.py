@@ -39,6 +39,17 @@ class Collector:
     def sample(self, now: float) -> Dict[str, float]:
         raise NotImplementedError
 
+    def sample_block(self, grid: np.ndarray,
+                     ) -> Optional[Dict[str, np.ndarray]]:
+        """Columnar sampling: all instants of ``grid`` at once, one f32
+        row per channel — or None when this collector can only be read
+        tick by tick (real probes).  Replay-style collectors override;
+        the agent's columnar ingest path requires every collector to
+        answer.
+        """
+        del grid
+        return None
+
     def close(self) -> None:  # pragma: no cover
         pass
 
@@ -213,6 +224,15 @@ class SimCollector(Collector):
         i = int(np.searchsorted(self._ts, now, side="right")) - 1
         i = max(0, min(i, self._ts.size - 1))
         return {c: float(self._data[j, i]) for j, c in enumerate(self.channel_names)}
+
+    def sample_block(self, grid: np.ndarray) -> Dict[str, np.ndarray]:
+        """All grid instants in one gather — same right-side ZOH lookup as
+        ``sample``, f32 end to end (no per-tick dict/float round trip)."""
+        idx = np.searchsorted(self._ts, np.asarray(grid, np.float64),
+                              side="right") - 1
+        np.clip(idx, 0, self._ts.size - 1, out=idx)
+        block = self._data[:, idx]                       # (C, n) f32
+        return {c: block[j] for j, c in enumerate(self.channel_names)}
 
 
 class DeviceMetricSource(Collector):

@@ -6,6 +6,11 @@ preallocated numpy array; ``MultiChannelRing`` packs all channels of one host
 into a single (C, N) array so a window snapshot is one contiguous slice —
 that snapshot is exactly the (metrics × window) tile the correlation kernels
 consume.
+
+Columnar fast path: ``push_block`` ingests a whole (C, n) f32 block in two
+slice writes (no per-tick Python), and ``window(n, copy=False)`` hands the
+monitor a zero-copy f32 view of the ring storage whenever the span does not
+wrap — end to end f32 from collector to kernel, no f64 round-trip.
 """
 from __future__ import annotations
 
@@ -139,13 +144,51 @@ class MultiChannelRing:
         if self._count < self.capacity:
             self._count += 1
 
-    def window(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Newest ``n`` columns, chronological: (ts[n], data[C, n])."""
+    def push_block(self, ts: np.ndarray, block: np.ndarray) -> None:
+        """Columnar bulk append: ``block`` is (C, n) — n sample instants
+        across ALL channels — written in two slice writes (split at the
+        wrap point).  Exact-parity counterpart of n ``push_row`` calls with
+        full rows; the agent's columnar sampling path feeds this.
+        """
+        t = np.asarray(ts, dtype=np.float64).ravel()
+        b = np.asarray(block, dtype=np.float32)
+        if b.shape != (self.n_channels, t.size):
+            raise ValueError(f"block {b.shape} vs "
+                             f"({self.n_channels}, {t.size})")
+        n = t.size
+        if n == 0:
+            return
+        if n >= self.capacity:          # only the newest samples survive
+            t, b = t[-self.capacity:], b[:, -self.capacity:]
+            n = self.capacity
+        first = min(n, self.capacity - self._head)
+        self._ts[self._head:self._head + first] = t[:first]
+        self._data[:, self._head:self._head + first] = b[:, :first]
+        rest = n - first
+        if rest:
+            self._ts[:rest] = t[first:]
+            self._data[:, :rest] = b[:, first:]
+        self._head = (self._head + n) % self.capacity
+        self._count = min(self.capacity, self._count + n)
+
+    def window(self, n: int, copy: bool = True,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Newest ``n`` columns, chronological: (ts[n], data[C, n]).
+
+        ``copy=False`` returns zero-copy f32 views of the ring storage when
+        the span is contiguous (no wrap) — the columnar monitor path; the
+        views are invalidated by the next push, so consume before pushing.
+        A wrapped span is always returned as a copy.
+        """
         n = min(int(n), self._count)
         if n == 0:
             return (np.empty(0, np.float64),
                     np.empty((self.n_channels, 0), np.float32))
         start = (self._head - n) % self.capacity
+        if start + n <= self.capacity:          # contiguous: plain slices
+            ts = self._ts[start:start + n]
+            d = self._data[:, start:start + n]
+            return (ts.copy(), d.copy()) if copy else (ts, d)
         idx = (start + np.arange(n)) % self.capacity
         return self._ts[idx].copy(), self._data[:, idx].copy()
 

@@ -1,0 +1,52 @@
+"""Perf-path regression canary: the three benchmark families (kernel
+microbench, engine sweep, fleet + event-batched eval) at tiny sizes.
+
+Marked ``bench_smoke`` so CI can select it (`-m bench_smoke`); it also runs
+in plain tier-1 — the whole module stays well under the 30 s budget of
+``python -m benchmarks.run --smoke``, whose code paths it exercises.
+"""
+import math
+
+import pytest
+
+from benchmarks import fleetbench, kernelbench
+
+
+def _check(rows, prefix):
+    assert rows, f"{prefix}: no rows"
+    for name, value, _ in rows:
+        assert name.startswith(prefix.split("/")[0]), name
+        assert math.isfinite(value), f"{name} = {value}"
+
+
+@pytest.mark.bench_smoke
+def test_kernel_family_smoke():
+    rows = kernelbench.kernel_microbench(B=2, M=4, N=128, K=6, detect_h=16)
+    _check(rows, "kernel/")
+    rows = kernelbench.tile_sweep_rows()
+    _check(rows, "kernel/tile_sweep")
+
+
+@pytest.mark.bench_smoke
+def test_sweep_family_smoke():
+    rows = fleetbench.sweep_rows(n_trials=1, reps=1)
+    _check(rows, "sweep/")
+
+
+@pytest.mark.bench_smoke
+def test_fleet_family_smoke():
+    rows = fleetbench.fleet_rows(batch_sizes=(8,), reps=1,
+                                 sequential_baseline=False)
+    _check(rows, "fleet/")
+    vals = dict((n, v) for n, v, _ in rows)
+    # parity holds exactly on these fixed-seed slabs (a z within one f32
+    # ulp of the threshold is the only thing that could split the paths)
+    assert vals["fleet/detect_parity/B8"] == 1.0
+
+
+@pytest.mark.bench_smoke
+def test_eval_family_smoke():
+    rows = fleetbench.eval_rows(n_per_class=1, reps=1)
+    _check(rows, "eval/")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["eval/pred_parity"] == 1.0

@@ -1,0 +1,95 @@
+"""Event-batched Layer 3: the eval stacks every trial's pending event into
+ONE fused dispatch per diagnoser, with per-class accuracy identical to the
+per-event sequential path."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import make_baseline
+from repro.core.engine import CorrelationEngine
+from repro.kernels.fused import ops as fused_ops
+from repro.sim.scenario import accuracy_by_class, make_trial, run_eval
+
+
+@pytest.fixture(scope="module")
+def paired_records():
+    dgs = lambda: [make_baseline(n) for n in ["ours", "b3"]]
+    batched = run_eval(dgs(), n_per_class=3, seed=5, batch_events=True)
+    sequential = run_eval(dgs(), n_per_class=3, seed=5, batch_events=False)
+    return batched, sequential
+
+
+def test_accuracy_identical_to_per_event_path(paired_records):
+    batched, sequential = paired_records
+    for name in ("ours", "B3-deep-profiling"):
+        assert accuracy_by_class(batched, name) \
+            == accuracy_by_class(sequential, name)
+
+
+def test_per_trial_predictions_identical(paired_records):
+    batched, sequential = paired_records
+    key = lambda r: (r.diagnoser, r.trial_seed)
+    preds_b = {key(r): r.pred for r in batched}
+    preds_s = {key(r): r.pred for r in sequential}
+    assert preds_b == preds_s
+
+
+def test_one_fused_dispatch_per_diagnoser():
+    """The 12-trial eval issues exactly ONE batched Layer-3 dispatch per
+    engine-backed diagnoser (events are rows, not separate calls)."""
+    dgs = [make_baseline(n) for n in ["ours", "b3"]]
+    c0 = fused_ops.DISPATCH_COUNT
+    run_eval(dgs, n_per_class=3, seed=5, batch_events=True)
+    assert fused_ops.DISPATCH_COUNT - c0 == len(dgs)
+
+
+def test_detect_events_process_equivalence():
+    """process == detect_events + per-event _diagnose, byte-identical."""
+    trial = make_trial(11, "nic", intensity=1.5, t_on=40.0)
+    eng = CorrelationEngine()
+    diags = eng.process(trial.ts, trial.data, trial.channels)
+    events = eng.detect_events(trial.ts, trial.data, trial.channels)
+    assert len(diags) == len(events) >= 1
+    for d, (ev, t) in zip(diags, events):
+        assert d.event == ev
+        assert d.t_rca == pytest.approx(float(trial.ts[t]),
+                                        abs=d.analysis_seconds + 1e-9)
+
+
+def test_diagnose_events_batch_matches_scalar_diagnose():
+    """Batched verdicts == per-event _diagnose replays on the same events
+    (top cause and ranked order; confidences agree to f32 tolerance)."""
+    trials = [make_trial(200 + i, cls, intensity=1.8, t_on=40.0,
+                         confuser_prob=0.0)
+              for i, cls in enumerate(["io", "cpu", "nic", "gpu"])]
+    eng = CorrelationEngine()
+    items, scalar = [], []
+    for tr in trials:
+        events = eng.detect_events(tr.ts, tr.data, tr.channels)
+        assert events, "expected a detection in every injected trial"
+        ev, t = events[0]
+        li = list(tr.channels).index(eng.cfg.latency_metric)
+        items.append((tr.ts, tr.data, list(tr.channels), t, ev))
+        scalar.append(eng._diagnose(tr.ts, tr.data, list(tr.channels),
+                                    li, t, ev))
+    for use_kernel in (False, True):
+        batched = eng.diagnose_events_batch(items, use_kernel=use_kernel)
+        for db, ds in zip(batched, scalar):
+            assert db.top_cause == ds.top_cause
+            assert [r.cause for r in db.ranked] == [r.cause for r in ds.ranked]
+            np.testing.assert_allclose(
+                [r.confidence for r in db.ranked],
+                [r.confidence for r in ds.ranked], rtol=1e-3, atol=1e-3)
+            assert db.event == ds.event
+
+
+def test_diagnose_events_batch_no_evidence_channels():
+    trial = make_trial(33, "cpu", intensity=2.0, t_on=40.0)
+    li = trial.channels.index("coll_allreduce_ms")
+    data = trial.data[[li]]
+    eng = CorrelationEngine()
+    events = eng.detect_events(trial.ts, data, ["coll_allreduce_ms"])
+    assert events
+    ev, t = events[0]
+    out = eng.diagnose_events_batch(
+        [(trial.ts, data, ["coll_allreduce_ms"], t, ev)])
+    assert len(out) == 1 and out[0].ranked == []
