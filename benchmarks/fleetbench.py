@@ -1,6 +1,6 @@
 """Fleet-RCA throughput + detection-sweep benchmarks (perf trajectory).
 
-Three sections, all emitted into BENCH_fleet.json by run.py:
+Four sections, all emitted into BENCH_fleet.json by run.py:
 
   sweep/  — full-trial ``CorrelationEngine.process`` wall time, rolling-
             statistics fast path vs the seed scalar per-tick path, at the
@@ -11,8 +11,15 @@ Three sections, all emitted into BENCH_fleet.json by run.py:
             streaming-detect kernel (one dispatch over the f32 slab) vs the
             seed detect path (spike dispatch + f64 ``detect_rows`` replay)
             with a byte-exact flagged/onset parity check.
+  fleet/live_* — the live path: ``FleetAggregator`` staging (seqlock
+            read_window into a preallocated slab) vs per-host
+            ``window(copy=True)`` snapshots + ``np.stack``, and the
+            torn-read retry rate of the seqlock reader under a
+            writer-storm thread.
   eval/   — event-batched Layer 3: ``run_eval`` with all trials' events in
-            ONE fused dispatch per diagnoser vs the per-event path.
+            ONE fused dispatch per diagnoser vs the per-event path, plus
+            the columnar TrialStore path (slab-indexed evidence gather,
+            ``SLICE_OPS``-counted).
 
 The batched fleet path runs the fused spike+xcorr math through the jit'd
 XLA reference (`use_kernels=False`) — on CPU the Pallas kernels execute in
@@ -21,15 +28,22 @@ parity is covered by tests/test_fused.py.
 """
 from __future__ import annotations
 
+import sys
+import threading
 import time
 from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import engine as engine_mod
 from repro.core.baselines import make_baseline
 from repro.core.engine import CorrelationEngine, EngineConfig
+from repro.monitor.aggregator import FleetAggregator
 from repro.monitor.fleet import FleetMonitor
-from repro.sim.scenario import make_trial
+from repro.sim.scenario import TrialStore, make_trial
+from repro.telemetry.agent import TelemetryAgent
+from repro.telemetry.collectors import SimCollector
+from repro.telemetry.ringbuffer import MultiChannelRing
 
 _CLIP_S = 46.0     # trailing snapshot: event at t_on=40 s is inside it
 
@@ -191,6 +205,86 @@ def fleet_rows(batch_sizes: Sequence[int] = (16, 64, 256, 1024),
     return rows
 
 
+# ------------------------------------------------------------ live fleet bench
+def live_rows(n_hosts: int = 8, window_s: float = 20.0, reps: int = 5,
+              storm_s: float = 0.4) -> List[Tuple[str, float, str]]:
+    """Live fleet path: aggregator staging vs per-host copying snapshots.
+
+    The agents are virtual-clock driven past the ring wrap point so the
+    staged window spans the wrap (the expensive case for a naive gather);
+    the storm rows push from a real thread while a reader loops
+    ``read_window`` and report the seqlock retry rate.
+    """
+    rows: List[Tuple[str, float, str]] = []
+    trials = [make_trial(8200 + h, "nic",
+                         intensity=(2.0 if h == n_hosts // 2 else 0.0),
+                         t_on=40.0, confuser_prob=0.0)
+              for h in range(n_hosts)]
+    agents = []
+    for t in trials:
+        sim = SimCollector(t.channels, t.ts, t.data)
+        agents.append(TelemetryAgent([sim], rate_hz=100.0,
+                                     history_s=window_s + 10.0))
+    agg = FleetAggregator(agents, window_s=window_s)
+    agg.run_virtual(0.0, 46.0)          # wraps the (window+10)s rings
+    agg.assemble()                       # warm-up
+
+    assemble_s = _median_wall(agg.assemble, reps)
+
+    def copies() -> None:
+        # the seed deployment snapshot: one allocating consistent copy per
+        # host, then a stacking copy into the (hosts, C, T) slab
+        np.stack([a.window(window_s)[1] for a in agents])
+
+    copy_s = _median_wall(copies, reps)
+    H = n_hosts
+    rows.append((f"fleet/live_assemble_s/H{H}", assemble_s,
+                 f"aggregator staging, {window_s:.0f}s window, wrapped"))
+    rows.append((f"fleet/live_copy_s/H{H}", copy_s,
+                 "per-host window(copy=True) + np.stack"))
+    rows.append((f"fleet/live_speedup/H{H}", copy_s / assemble_s,
+                 "copying snapshots / aggregator staging"))
+
+    mon = FleetMonitor(use_kernels=False)
+    agg.diagnose(mon)                    # jit warm-up
+    diag_s = _median_wall(lambda: agg.diagnose(mon), max(1, reps - 2))
+    rows.append((f"fleet/live_diagnose_s/H{H}", diag_s,
+                 "assemble + diagnose_fleet on the staged slab"))
+
+    # torn-read retry rate under a writer storm (ring-level, wall-clock)
+    ring = MultiChannelRing([f"c{i}" for i in range(8)], capacity=2048)
+    stop = threading.Event()
+
+    def writer() -> None:
+        i = 0
+        keys = {f"c{j}": 0.0 for j in range(8)}
+        while not stop.is_set():
+            ring.push_row(float(i), keys)
+            i += 1
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    th = threading.Thread(target=writer, daemon=True)
+    reads = 0
+    try:
+        th.start()
+        t_end = time.perf_counter() + storm_s
+        while time.perf_counter() < t_end:
+            ring.read_window(512)
+            reads += 1
+    finally:
+        stop.set()
+        th.join(timeout=5.0)
+        sys.setswitchinterval(old)
+    rows.append(("fleet/live_storm_reads_per_s", reads / storm_s,
+                 "read_window loop against a hot writer thread"))
+    rows.append(("fleet/live_torn_retry_rate",
+                 ring.torn_retries / max(reads, 1),
+                 f"{ring.torn_retries} retries / {reads} reads — every "
+                 "returned snapshot validated consistent"))
+    return rows
+
+
 # ----------------------------------------------------------------- eval bench
 def eval_rows(n_per_class: int = 4, reps: int = 3,
               ) -> List[Tuple[str, float, str]]:
@@ -220,4 +314,27 @@ def eval_rows(n_per_class: int = 4, reps: int = 3,
     rows.append(("eval/speedup", seq_s / batched_s, "sequential / batched"))
     rows.append(("eval/pred_parity", match,
                  "1.0 = per-trial predictions identical"))
+
+    # columnar trial store: the whole eval as one f32 (trials, C, T) slab,
+    # evidence gathered by slab indexing instead of per-event reslicing
+    store = TrialStore.from_trials(trials)
+    dg.diagnose_store(store)            # warm-up
+    store_s = _median_wall(lambda: dg.diagnose_store(store), reps)
+    c0 = engine_mod.SLICE_OPS
+    rstore = dg.diagnose_store(store)
+    ops_store = engine_mod.SLICE_OPS - c0
+    c0 = engine_mod.SLICE_OPS
+    dg.diagnose_trials(inputs)
+    ops_event = engine_mod.SLICE_OPS - c0
+    match_store = float(all(a.pred == b.pred for a, b in zip(rstore, rs)))
+    rows.append(("eval/store_s", store_s,
+                 "TrialStore slab path, one fused dispatch"))
+    rows.append(("eval/store_speedup", seq_s / store_s,
+                 "sequential / store"))
+    rows.append(("eval/store_pred_parity", match_store,
+                 "1.0 = per-trial predictions identical to per-event"))
+    rows.append(("eval/slice_ops_per_event", float(ops_event),
+                 "python-level evidence reslices, batched per-event path"))
+    rows.append(("eval/slice_ops_store", float(ops_store),
+                 "slab fancy-index gathers, store path"))
     return rows

@@ -49,6 +49,7 @@ def smoke() -> list:
     rows += _emit(fleetbench.sweep_rows(n_trials=1, reps=1))
     rows += _emit(fleetbench.fleet_rows(batch_sizes=(16,), reps=1,
                                         sequential_baseline=False))
+    rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
     rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
     return rows
 
@@ -94,6 +95,7 @@ def main() -> None:
     if on("fleet"):
         rows = _emit(fleetbench.sweep_rows())
         rows += _emit(fleetbench.fleet_rows())
+        rows += _emit(fleetbench.live_rows())
         rows += _emit(fleetbench.eval_rows())
         _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):

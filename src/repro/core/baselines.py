@@ -62,6 +62,14 @@ class Diagnoser:
         trials' events stacked into one fused dispatch)."""
         return [self.diagnose_trial(*t) for t in trials]
 
+    def diagnose_store(self, store) -> List[DiagnoserResult]:
+        """Columnar-eval entry: the whole protocol as one
+        :class:`~repro.sim.scenario.TrialStore`.  The default unpacks the
+        slab into per-trial row views; engine-backed diagnosers override
+        with the slab-indexed evidence gather
+        (``CorrelationEngine.diagnose_events_slab``)."""
+        return self.diagnose_trials(store.rows())
+
 
 # ---------------------------------------------------------------------------
 # helpers shared by the baselines
@@ -308,6 +316,12 @@ class DeepProfilingDiagnoser(Diagnoser):
                                          prep=self._eventize)
         return [self._result(d) for d in diags]
 
+    def diagnose_store(self, store) -> List[DiagnoserResult]:
+        """Columnar path: eventize into a second slab, gather by indexing."""
+        diags = _first_diagnoses_store(self.engine, store,
+                                       prep=self._eventize)
+        return [self._result(d) for d in diags]
+
 
 # ---------------------------------------------------------------------------
 # Ours, behind the same interface
@@ -372,6 +386,34 @@ def _first_diagnoses_batched(engine: CorrelationEngine,
     return [None if o is None else diags[o] for o in owner]
 
 
+def _first_diagnoses_store(engine: CorrelationEngine, store, prep=None):
+    """Each trial's first diagnosis (or None) over a columnar TrialStore.
+
+    Same structure as :func:`_first_diagnoses_batched` — per-trial
+    detection sweep (with the relaxed fallback), ONE fused Layer-3
+    dispatch — but the evidence gather is slab indexing over the store's
+    contiguous f32 (trials, C, T) array instead of per-event reslicing.
+    ``prep`` (B3's eventizer) transforms each row once, into a second
+    columnar slab, so the gather stays slab-indexed for prepped
+    diagnosers too.
+    """
+    slab, ts, channels = store.slab, store.ts, store.channels
+    if prep is not None:
+        slab = np.stack([prep(ts, slab[i], channels)
+                         for i in range(len(store))]).astype(np.float32)
+    events, owner = [], []
+    for i in range(len(store)):
+        evs = _detect_with_fallback(engine, ts, slab[i], channels)
+        if evs:
+            ev, t = evs[0]          # diagnose_trial consumes diags[0]
+            owner.append(len(events))
+            events.append((i, t, ev))
+        else:
+            owner.append(None)
+    diags = engine.diagnose_events_slab(ts, slab, channels, events)
+    return [None if o is None else diags[o] for o in owner]
+
+
 class OurDiagnoser(Diagnoser):
     name = "ours"
     reported_overhead_pct = None  # measured, not reported
@@ -394,6 +436,12 @@ class OurDiagnoser(Diagnoser):
     def diagnose_trials(self, trials) -> List[DiagnoserResult]:
         """Event-batched eval path: one fused Layer-3 dispatch for the lot."""
         diags = _first_diagnoses_batched(self.engine, trials)
+        return [self._result(d) for d in diags]
+
+    def diagnose_store(self, store) -> List[DiagnoserResult]:
+        """Columnar path: evidence gathered by slab indexing, no per-event
+        python reslicing."""
+        diags = _first_diagnoses_store(self.engine, store)
         return [self._result(d) for d in diags]
 
 

@@ -34,6 +34,12 @@ from repro.telemetry.schema import METRIC_REGISTRY, ORIENTATION
 #: below this many samples a pre-onset slice is too short to be a baseline
 MIN_BASELINE_N = 32
 
+#: python-level evidence-gather operations (numpy slice/fancy-index calls on
+#: trial data) — the observable the columnar trial store exists to shrink:
+#: ``diagnose_events_batch`` pays O(events) of them, the slab path O(1) per
+#: layout group.  Counted, not timed, so tests can assert the reduction.
+SLICE_OPS = 0
+
 
 @dataclasses.dataclass
 class EngineConfig:
@@ -311,6 +317,7 @@ class CorrelationEngine:
         """
         from repro.kernels.fused import ops as fused_ops
 
+        global SLICE_OPS
         cfg = self.cfg
         wn, bn = cfg.window_n, cfg.baseline_n
         rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
@@ -332,6 +339,7 @@ class CorrelationEngine:
             blo = max(0, lo - bn)
             L_win = np.asarray(data[li, lo:t], dtype=np.float64)
             X = np.asarray(data[idx, blo:t], dtype=np.float64)
+            SLICE_OPS += 2                  # per-event reslice: L row + X
             wstart = lo - blo
             b_sl = pick_baseline_slice(wstart, max(0, onset_idx - lo),
                                        X.shape[1])
@@ -380,3 +388,111 @@ class CorrelationEngine:
                                        t_rca=float(ts[t]) + analysis,
                                        analysis_seconds=analysis)
         return results
+
+    # -------------------------------------------------- columnar trial store
+    def diagnose_events_slab(self, ts: np.ndarray, slab: np.ndarray,
+                             channels: Sequence[str],
+                             events: Sequence[tuple],
+                             use_kernel: bool = False) -> List[Diagnosis]:
+        """Event-batched Layer 3 over a columnar trial store.
+
+        ``slab`` is one contiguous f32 (trials, C, T) array — every trial
+        of an eval on the shared grid ``ts`` with the shared ``channels``
+        layout — and ``events`` are ``(trial_row, rca_index, event)``
+        triples.  Exactly :meth:`diagnose_events_batch`'s RCA geometry and
+        kernel dispatch (same shape bucketing, so both paths share one jit
+        cache entry), but the evidence gather is *slab indexing*: the
+        latency windows, evidence windows and baselines of ALL events land
+        in a constant number of fancy-index ops over the store, instead of
+        one python-level reslice pair per event (``SLICE_OPS`` counts the
+        difference).  Returns one :class:`Diagnosis` per event, in order.
+        """
+        from repro.kernels.fused import ops as fused_ops
+
+        global SLICE_OPS
+        cfg = self.cfg
+        channels = list(channels)
+        if not len(events):
+            return []
+        names, idx, orient = self._layout(channels)
+        if not names:
+            return [Diagnosis(event=ev, ranked=[], per_metric={},
+                              t_rca=float(ts[int(t)]), analysis_seconds=0.0)
+                    for _, t, ev in events]
+        w0 = time.perf_counter()
+        li = channels.index(cfg.latency_metric)
+        wn, bn = cfg.window_n, cfg.baseline_n
+        rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
+        pre_n = int(cfg.pre_onset_s * cfg.rate_hz)
+        E, M = len(events), len(names)
+
+        # per-event window geometry — scalar arithmetic, no data touched
+        rows_tr = np.asarray([r for r, _, _ in events], np.intp)
+        t_idx = np.asarray([int(t) for _, t, _ in events], np.intp)
+        onset_idx = np.searchsorted(
+            ts, np.asarray([ev.t_onset for _, _, ev in events]))
+        lo = np.maximum(0, np.minimum(t_idx - wn - rca_n,
+                                      onset_idx - pre_n))
+        blo = np.maximum(0, lo - bn)
+        n_v = (t_idx - lo).astype(np.int32)
+        nb_v = np.asarray(
+            [pick_baseline_slice(int(lo[e] - blo[e]),
+                                 max(0, int(onset_idx[e] - lo[e])),
+                                 int(t_idx[e] - blo[e])).stop
+             for e in range(E)], np.int32)    # all baseline slices start at 0
+
+        # the slab gathers: every event's L window / evidence window /
+        # baseline in three fancy-index ops, padded rows clamped in-range
+        jN = np.arange(int(n_v.max()))
+        maskW = jN[None, :] < n_v[:, None]                       # (E, N)
+        colW = np.where(maskW, lo[:, None] + jN[None, :], lo[:, None])
+        jB = np.arange(int(nb_v.max()))
+        maskB = jB[None, :] < nb_v[:, None]                      # (E, Nb)
+        colB = np.where(maskB, blo[:, None] + jB[None, :], blo[:, None])
+        # f64 like the per-event gather, so orientation numerics match
+        L = slab[rows_tr[:, None], li, colW].astype(np.float64)
+        Wm = slab[rows_tr[:, None, None], idx[None, :, None],
+                  colW[:, None, :]].astype(np.float64)           # (E, M, N)
+        Bm = slab[rows_tr[:, None, None], idx[None, :, None],
+                  colB[:, None, :]].astype(np.float64)           # (E, M, Nb)
+        SLICE_OPS += 3
+        L[~maskW] = 0.0
+
+        # orientation about the baseline-region mean, batched over events
+        # (same policy as orient_about_baseline; mu from valid cols only)
+        mu = ((Bm * maskB[:, None, :]).sum(-1, keepdims=True)
+              / nb_v[:, None, None])                             # (E, M, 1)
+        o = orient.reshape(1, -1, 1)
+        WO = mu + np.where(o == 0.0, np.abs(Wm - mu), o * (Wm - mu))
+        BO = mu + np.where(o == 0.0, np.abs(Bm - mu), o * (Bm - mu))
+        WO *= maskW[:, None, :]
+        BO *= maskB[:, None, :]
+
+        # shape bucketing — identical to diagnose_events_batch so the two
+        # paths reuse one jit cache entry
+        Ep = max(4, 1 << (E - 1).bit_length())
+        N = -(-int(n_v.max()) // 256) * 256
+        Nb = -(-int(nb_v.max()) // 256) * 256
+        n_vp = np.full(Ep, 8, np.int32)
+        nb_vp = np.full(Ep, 8, np.int32)
+        n_vp[:E], nb_vp[:E] = n_v, nb_v
+        Lp = np.zeros((Ep, N), np.float32)
+        Wp = np.zeros((Ep, M, N), np.float32)
+        Bp = np.zeros((Ep, M, Nb), np.float32)
+        Lp[:E, :L.shape[1]] = L
+        Wp[:E, :, :WO.shape[2]] = WO
+        Bp[:E, :, :BO.shape[2]] = BO
+        s, c, lags = fused_ops.fused_rca_max_ragged(
+            Lp, Wp, Bp, n_vp, nb_vp, max_lag=cfg.max_lag,
+            use_kernel=use_kernel)
+        s = np.asarray(s)[:E]
+        c = np.asarray(c)[:E]
+        lags = np.asarray(lags)[:E]
+        ranked_all = conf_mod.rank_causes_batch(
+            names, s, c, lags / cfg.rate_hz, cfg.alpha, details=True)
+        analysis = time.perf_counter() - w0
+        return [Diagnosis(event=event, ranked=ranked_all[e][0],
+                          per_metric=ranked_all[e][1],
+                          t_rca=float(ts[int(t)]) + analysis,
+                          analysis_seconds=analysis)
+                for e, (_, t, event) in enumerate(events)]

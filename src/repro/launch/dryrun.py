@@ -212,6 +212,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     from repro.launch.hlo_analysis import analyze
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # newer jaxlib returns one dict/device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     corrected = analyze(hlo_text)       # trip-count-corrected (see module doc)
     coll = {k: float(v) for k, v in corrected.coll_bytes.items()}

@@ -1,5 +1,9 @@
 """Telemetry <-> training integration: per-step hooks, fleet-level RCA."""
 from repro.monitor.hooks import StepTelemetry
 from repro.monitor.fleet import FleetMonitor, FleetDiagnosis, Mitigation
+from repro.monitor.aggregator import (
+    AggregatorStats, FleetAggregator, FleetSnapshot,
+)
 
-__all__ = ["StepTelemetry", "FleetMonitor", "FleetDiagnosis", "Mitigation"]
+__all__ = ["StepTelemetry", "FleetMonitor", "FleetDiagnosis", "Mitigation",
+           "FleetAggregator", "FleetSnapshot", "AggregatorStats"]

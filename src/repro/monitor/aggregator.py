@@ -1,0 +1,221 @@
+"""Live fleet assembly: N per-host agents -> one (hosts, C, T) slab.
+
+This is the missing live path of the paper's §5.1 fleet extension: the
+benchmarks drive ``FleetMonitor.diagnose_fleet`` with pre-stacked slabs,
+but a deployment has N :class:`TelemetryAgent` s — each sampling from its
+own background thread (or the virtual clock in trials) — and the monitor
+must read *while they write*.  :class:`FleetAggregator` owns the agents
+and assembles the monitor's (hosts, C, T) f32 slab from each host's ring
+via the seqlock reader (:meth:`MultiChannelRing.read_window`):
+
+  * **one bounded copy per host** — each host's trailing window lands
+    straight from the ring's zero-copy views into a row of a preallocated
+    f32 staging slab (no per-assembly allocation); a wrapped span costs
+    the same copy split in two, and only a torn read (writer collided
+    mid-copy) repeats it,
+  * **clock alignment** — hosts are right-aligned on the newest timestamp
+    every live host has reached (``t_common``); hosts that have sampled
+    past it contribute their window *ending at* ``t_common``,
+  * **ragged tolerance** — late joiners with short rings are backfilled
+    with their oldest sample (a flat, quiet baseline) and their true
+    length reported in ``valid``; hosts whose newest sample is older than
+    ``dead_after_s`` (agent died mid-run) are zeroed out of the slab and
+    listed in ``skipped`` so a stale spike cannot masquerade as live.
+
+``diagnose`` feeds the staged slab directly to a
+:class:`~repro.monitor.fleet.FleetMonitor` — the training loop's
+per-diagnosis defensive full-window copy is gone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.monitor.fleet import FleetDiagnosis, FleetMonitor
+from repro.telemetry.agent import TelemetryAgent
+
+
+@dataclasses.dataclass
+class AggregatorStats:
+    assemblies: int = 0
+    torn_retries: int = 0       # seqlock validate-retry loops across hosts
+    ragged_hosts: int = 0       # short (late-joiner) rows staged
+    dead_hosts: int = 0         # stale rows zeroed out of the slab
+
+
+@dataclasses.dataclass
+class FleetSnapshot:
+    ts: np.ndarray              # (T,) reference clock, newest at T-1
+    slab: np.ndarray            # (hosts, C, T) f32 — the staging buffer
+    valid: np.ndarray           # (hosts,) true sample count per row
+    skipped: List[int]          # dead/stale hosts (rows zeroed)
+    retries: int                # torn-read retries during this assembly
+
+
+class FleetAggregator:
+    """Owns per-host agents and stages their windows for fleet RCA."""
+
+    def __init__(self, agents: Sequence[TelemetryAgent], window_s: float,
+                 dead_after_s: Optional[float] = None, min_samples: int = 2):
+        if not agents:
+            raise ValueError("need at least one agent")
+        self.agents: List[TelemetryAgent] = list(agents)
+        self.channels: List[str] = list(agents[0].channels)
+        self.rate_hz = float(agents[0].rate_hz)
+        for a in self.agents[1:]:
+            if list(a.channels) != self.channels:
+                raise ValueError("agents disagree on channel layout")
+            if float(a.rate_hz) != self.rate_hz:
+                raise ValueError("agents disagree on sampling rate")
+        self.window_s = float(window_s)
+        self.window_n = int(self.window_s * self.rate_hz)
+        if self.window_n <= 0:
+            raise ValueError("window shorter than one sample period")
+        period = 1.0 / self.rate_hz
+        #: a host whose newest sample lags the fleet by more than this is
+        #: considered dead (agent thread gone) and masked from the slab
+        self.dead_after_s = (float(dead_after_s) if dead_after_s is not None
+                             else max(10.0 * period, 0.5))
+        self.min_samples = int(min_samples)
+        H, C, T = len(self.agents), len(self.channels), self.window_n
+        # preallocated staging: every assembly reuses these buffers, so the
+        # steady-state cost is one bounded memcpy per host and zero allocs
+        self._slab = np.zeros((H, C, T), np.float32)
+        self._ts_rows = np.zeros((H, T), np.float64)
+        self._scratch = np.empty((C, T), np.float32)
+        self._ts_scratch = np.empty(T, np.float64)
+        self.stats = AggregatorStats()
+        self.last_snapshot: Optional[FleetSnapshot] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start_background(self) -> None:
+        """Start every agent's sampling thread (live deployment mode)."""
+        for a in self.agents:
+            a.run_background()
+
+    def stop(self) -> None:
+        for a in self.agents:
+            a.stop()
+
+    def run_virtual(self, t_start: float, t_end: float) -> None:
+        """Drive every agent over the span on the shared virtual clock."""
+        for a in self.agents:
+            a.run_virtual(t_start, t_end)
+
+    # ------------------------------------------------------------- assembly
+    def assemble(self) -> FleetSnapshot:
+        """Stage every host's trailing window into the (hosts, C, T) slab.
+
+        Safe against concurrent background writers: each host row is a
+        seqlock-validated consistent snapshot.  Returns the snapshot whose
+        ``slab`` IS the internal staging buffer — consume it before the
+        next ``assemble`` call.
+        """
+        H, T = len(self.agents), self.window_n
+        period = 1.0 / self.rate_hz
+        retries = 0
+
+        # phase 1: consistent (count, newest-ts) probe per host to pick the
+        # common right edge of the fleet window
+        counts = np.zeros(H, np.int64)
+        lasts = np.full(H, -np.inf)
+        for h, a in enumerate(self.agents):
+            counts[h], lasts[h] = a.ring.peek()
+        have = counts >= max(self.min_samples, 1)
+        if not have.any():
+            snap = FleetSnapshot(ts=np.zeros(0), slab=self._slab[:0],
+                                 valid=np.zeros(H, np.int64),
+                                 skipped=list(range(H)), retries=0)
+            self.last_snapshot = snap
+            return snap
+        t_latest = float(lasts[have].max())
+        alive = have & (lasts >= t_latest - self.dead_after_s)
+        t_common = float(lasts[alive].min())
+
+        # phase 2: one bounded copy per live host, right-aligned at t_common
+        valid = np.zeros(H, np.int64)
+        skipped: List[int] = []
+        ref_host = -1
+        for h, a in enumerate(self.agents):
+            if not alive[h]:
+                # dead or empty: a stale window must not be diagnosed as
+                # live telemetry — zero the row (flat => never flagged)
+                self._slab[h] = 0.0
+                self._ts_rows[h] = 0.0
+                skipped.append(h)
+                self.stats.dead_hosts += int(have[h])
+                continue
+            skip = max(0, int(round((lasts[h] - t_common) / period)))
+            # full-window hosts (the steady state) stage straight into
+            # their slab row — ONE bounded copy out of the ring; the
+            # scratch detour only happens for ragged/trimmed rows
+            direct = counts[h] - skip >= T
+            out_ts = self._ts_rows[h] if direct else self._ts_scratch
+            out_d = self._slab[h] if direct else self._scratch
+            ts_h, d_h, r = a.ring.read_window(T, out_ts=out_ts, out=out_d,
+                                              skip_newest=skip)
+            retries += r
+            # a live writer may have pushed between peek() and the read,
+            # making the stale `skip` land past t_common — re-derive the
+            # common-edge trim from the timestamps actually returned
+            k = int(np.searchsorted(ts_h, t_common + 0.5 * period,
+                                    side="right"))
+            ts_h, d_h = ts_h[:k], d_h[:, :k]
+            if k < self.min_samples:
+                self._slab[h] = 0.0
+                skipped.append(h)
+                continue
+            row = self._slab[h]
+            if not (direct and k == T):
+                if direct:
+                    # short/trimmed read landed left-aligned in the slab
+                    # row itself: move it through scratch to right-align
+                    self._scratch[:, :k] = d_h
+                    self._ts_scratch[:k] = ts_h
+                    d_h = self._scratch[:, :k]
+                    ts_h = self._ts_scratch[:k]
+                row[:, T - k:] = d_h
+                self._ts_rows[h, T - k:] = ts_h
+            if k < T:
+                # late joiner: backfill the missing head with its oldest
+                # sample — a flat stretch that reads as a quiet baseline
+                row[:, :T - k] = d_h[:, :1]
+                self._ts_rows[h, :T - k] = (
+                    ts_h[0] - period * np.arange(T - k, 0, -1))
+                self.stats.ragged_hosts += 1
+            valid[h] = k
+            if ref_host < 0 or k > valid[ref_host]:
+                ref_host = h
+
+        self.stats.assemblies += 1
+        self.stats.torn_retries += retries
+        snap = FleetSnapshot(ts=self._ts_rows[ref_host], slab=self._slab,
+                             valid=valid, skipped=skipped, retries=retries)
+        self.last_snapshot = snap
+        return snap
+
+    # ------------------------------------------------------------ diagnosis
+    def diagnose(self, monitor: FleetMonitor, min_valid_s: float = 0.0,
+                 ) -> Optional[FleetDiagnosis]:
+        """Assemble and run fleet RCA on the staged slab (no extra copy).
+
+        Returns None when no host has accumulated ``min_valid_s`` seconds
+        of telemetry yet (startup / all agents dead).  The diagnosed span
+        is clamped to the longest genuinely accumulated window: during
+        startup the backfilled flat head must not enter the baseline
+        statistics (a replicated startup transient would collapse sigma
+        and flag healthy hosts) — same behavior as diagnosing the actual
+        accumulated window, which is what the training loop used to do."""
+        snap = self.assemble()
+        if snap.slab.shape[0] == 0 or not snap.valid.size:
+            return None
+        k = int(snap.valid.max())
+        if k < max(int(min_valid_s * self.rate_hz), 1):
+            return None
+        T = self.window_n
+        if k < T:
+            return monitor.diagnose_fleet(
+                snap.ts[T - k:], snap.slab[:, :, T - k:], self.channels)
+        return monitor.diagnose_fleet(snap.ts, snap.slab, self.channels)

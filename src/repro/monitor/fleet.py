@@ -128,12 +128,30 @@ class FleetMonitor:
     def diagnose_fleet(self, ts: np.ndarray, host_data: np.ndarray,
                        channels: Sequence[str]) -> FleetDiagnosis:
         """host_data: (hosts, C, T) aligned windows; finds every straggler
-        above threshold and explains all of them in one batched dispatch."""
+        above threshold and explains all of them in one batched dispatch.
+
+        A window too short to leave ``MIN_BASELINE_N`` baseline samples
+        after clamping returns a quiet verdict carrying a zero-valued
+        ``short_baseline_skip`` entry in ``stage_seconds`` — detection on a
+        sigma-floored micro-baseline would flag quiet hosts."""
         hosts, C, T = host_data.shape
         li = list(channels).index(self.cfg.latency_metric)
         wn, bn = self.cfg.window_n, self.cfg.baseline_n
         wn = min(wn, T // 2)
         bn = min(bn, T - wn)
+        if bn < MIN_BASELINE_N:
+            # Short snapshot: the clamped baseline is too thin to estimate
+            # ambient statistics, and the sigma-floored z-score would flag
+            # perfectly quiet hosts.  Report a quiet verdict with an
+            # explicit stage marker instead of spurious stragglers.  A
+            # quiet round clears strike history exactly like a quiet full
+            # window (no host was flagged THIS round).
+            self._strikes.clear()
+            return FleetDiagnosis(
+                straggler_host=0, straggler_score=0.0, diagnosis=None,
+                mitigation=Mitigation.NONE,
+                per_host_scores=np.zeros(hosts, np.float32),
+                stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0})
         t_detect = time.perf_counter()
         lat = host_data[:, li, :]
         # persistence gate, the scalar spike.detect rule batched over hosts:

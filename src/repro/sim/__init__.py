@@ -12,11 +12,13 @@ from repro.sim.hostmodel import HostSignalModel, ChannelModel
 from repro.sim.disturbances import (
     Disturbance, DISTURBANCES, make_disturbance, apply_disturbance,
 )
-from repro.sim.scenario import Trial, make_trial, run_eval, EvalRecord
+from repro.sim.scenario import (
+    Trial, TrialStore, make_trial, run_eval, EvalRecord,
+)
 
 __all__ = [
     "AllReduceWorkload", "MESSAGE_SIZES",
     "HostSignalModel", "ChannelModel",
     "Disturbance", "DISTURBANCES", "make_disturbance", "apply_disturbance",
-    "Trial", "make_trial", "run_eval", "EvalRecord",
+    "Trial", "TrialStore", "make_trial", "run_eval", "EvalRecord",
 ]

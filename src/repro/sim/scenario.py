@@ -4,6 +4,13 @@
 the W1 all-reduce latency series, and exact ground truth.  ``run_eval``
 replays the paper's protocol — 17 trials per disturbance class — through any
 set of diagnosers and aggregates accuracy / confusion / Time-to-RCA.
+
+``TrialStore`` is the columnar counterpart of the trial list: the whole
+eval laid out as ONE contiguous f32 (trials, C, T) slab, so the
+event-batched Layer 3 gathers every event's evidence by slab indexing (a
+constant number of fancy-index ops) instead of re-slicing each trial's
+numpy matrix per event.  ``run_eval(batch_events=True)`` feeds it to every
+store-capable diagnoser.
 """
 from __future__ import annotations
 
@@ -91,6 +98,47 @@ def make_trial(seed: int, disturbance: str, *, duration_s: float = 90.0,
 
 
 # ---------------------------------------------------------------------------
+# columnar trial store
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrialStore:
+    """An entire eval's trials as ONE contiguous f32 (trials, C, T) slab.
+
+    All trials of the protocol share the sampling grid and channel layout,
+    so stacking them columnar lets the event-batched Layer 3
+    (:meth:`CorrelationEngine.diagnose_events_slab`) gather every event's
+    evidence by slab indexing — a constant number of fancy-index ops —
+    instead of one python-level numpy reslice per event.  ``slab[i]`` is a
+    zero-copy (C, T) row view for the per-trial detection sweep.
+    """
+
+    ts: np.ndarray                  # (T,) shared uniform grid
+    slab: np.ndarray                # (trials, C, T) f32, C-contiguous
+    channels: List[str]
+
+    def __len__(self) -> int:
+        return self.slab.shape[0]
+
+    @classmethod
+    def from_trials(cls, trials: Sequence[Trial]) -> "TrialStore":
+        t0 = trials[0]
+        for t in trials[1:]:
+            if t.channels != t0.channels or t.ts.shape != t0.ts.shape:
+                raise ValueError("trials disagree on channel/grid layout")
+        slab = np.empty((len(trials), t0.data.shape[0], t0.ts.shape[0]),
+                        np.float32)
+        for i, t in enumerate(trials):
+            slab[i] = t.data
+        return cls(ts=t0.ts, slab=slab, channels=list(t0.channels))
+
+    def rows(self) -> List[Tuple[np.ndarray, np.ndarray, List[str]]]:
+        """Per-trial (ts, data, channels) views — the legacy interface."""
+        return [(self.ts, self.slab[i], self.channels)
+                for i in range(len(self))]
+
+
+# ---------------------------------------------------------------------------
 # evaluation protocol
 # ---------------------------------------------------------------------------
 
@@ -114,10 +162,13 @@ def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = 17,
     """Replay the paper's protocol through every diagnoser.
 
     ``batch_events=True`` (default) hands each *engine-backed* diagnoser
-    all trials at once (``Diagnoser.diagnose_trials``): Layer-2 detection
-    still sweeps trial by trial, but every trial's pending event is stacked
-    as a row into ONE fused Layer-3 dispatch — the 68-trial eval runs
-    Layer 3 once per diagnoser instead of 68 times.  ``False`` replays the
+    all trials at once: Layer-2 detection still sweeps trial by trial, but
+    every trial's pending event is stacked as a row into ONE fused Layer-3
+    dispatch — the 68-trial eval runs Layer 3 once per diagnoser instead
+    of 68 times.  Store-capable diagnosers (``diagnose_store`` override)
+    additionally consume the whole eval as a columnar :class:`TrialStore`
+    — one contiguous f32 (trials, C, T) slab whose evidence gather is slab
+    indexing, not per-event python reslicing.  ``False`` replays the
     per-trial sequential path (the parity oracle).  Per-record
     ``wall_seconds`` is amortized (batch wall / n_trials) in batched mode.
     """
@@ -130,10 +181,20 @@ def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = 17,
             trials.append(make_trial(trial_seed, cls, duration_s=duration_s,
                                      rate_hz=rate_hz))
     records: List[EvalRecord] = []
+    store: Optional[TrialStore] = None
     for dg in diagnosers:
         batched = (batch_events and
                    type(dg).diagnose_trials is not Diagnoser.diagnose_trials)
-        if batched:
+        store_capable = (batch_events and
+                         type(dg).diagnose_store is not Diagnoser.diagnose_store)
+        if store_capable:
+            if store is None:       # built once, shared by all diagnosers
+                store = TrialStore.from_trials(trials)
+            w0 = time.perf_counter()
+            results = dg.diagnose_store(store)
+            per = (time.perf_counter() - w0) / max(len(trials), 1)
+            walls = [per] * len(trials)
+        elif batched:
             # no per-trial defensive copies here: the batched diagnosers
             # never mutate trial data (B3 eventizes on an internal copy),
             # and duplicating every trial would double the eval's peak

@@ -13,13 +13,15 @@ Two drive modes:
     clock, used by the training loop and the overhead benchmark.
 
 Columnar fast path: when every collector supports ``sample_block`` (the
-replay-style ``SimCollector`` does) and no channel needs counter-to-rate
-conversion, ``run_virtual`` ingests the whole span as one f32 (C, n) block
-via ``MultiChannelRing.push_block`` — no per-tick dict construction, f32
-end to end into the ring, exact-parity with the per-tick path.  Real
-probes (``ProcCollector``, ``DeviceMetricSource``) and counter channels
-fall back to the per-tick ``step`` loop, which stays the parity oracle
-(``run_virtual(..., columnar=False)`` forces it).
+replay-style ``SimCollector`` does), ``run_virtual`` ingests the whole
+span as one f32 (C, n) block via ``MultiChannelRing.push_block`` — no
+per-tick dict construction, f32 end to end into the ring, exact-parity
+with the per-tick path.  Counter channels are rate-converted vectorized
+inside the block, and the block hands its last raw column to
+``_prev_raw`` so columnar spans and per-tick steps interleave with exact
+rate parity.  Real probes (``ProcCollector``, ``DeviceMetricSource``) and
+the derived jiffy channels fall back to the per-tick ``step`` loop, which
+stays the parity oracle (``run_virtual(..., columnar=False)`` forces it).
 """
 from __future__ import annotations
 
@@ -39,15 +41,32 @@ from repro.telemetry.schema import MetricSpec
 class AgentStats:
     samples: int = 0
     busy_seconds: float = 0.0      # CPU time inside the sampling path
-    wall_seconds: float = 0.0      # wall time the agent has been live
     overruns: int = 0              # ticks where sampling exceeded the period
+    #: wall seconds of *completed* live/virtual segments; the in-flight
+    #: background segment is accounted by ``live_t0``
+    wall_accum: float = 0.0
+    #: perf_counter anchor of the running background segment (None when
+    #: not live) — lets ``wall_seconds``/``overhead_frac`` read correctly
+    #: MID-run, not only after stop()
+    live_t0: Optional[float] = None
+
+    @property
+    def wall_seconds(self) -> float:
+        """Wall time the agent has been live, including the running
+        background segment (the seed only accumulated at stop(), so live
+        overhead monitoring read 0.0 mid-run)."""
+        w = self.wall_accum
+        if self.live_t0 is not None:
+            w += time.perf_counter() - self.live_t0
+        return w
 
     @property
     def overhead_frac(self) -> float:
-        """CPU overhead fraction (paper Fig 2a y-axis)."""
-        if self.wall_seconds <= 0:
+        """CPU overhead fraction (paper Fig 2a y-axis) — live-readable."""
+        wall = self.wall_seconds
+        if wall <= 0:
             return 0.0
-        return self.busy_seconds / self.wall_seconds
+        return self.busy_seconds / wall
 
 
 class TelemetryAgent:
@@ -71,7 +90,6 @@ class TelemetryAgent:
         self.stats = AgentStats()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self._t_started: Optional[float] = None
 
     # ------------------------------------------------------------------ core
     def step(self, now: Optional[float] = None) -> Dict[str, float]:
@@ -128,9 +146,21 @@ class TelemetryAgent:
         return row
 
     # ----------------------------------------------------------- virtual run
-    def _columnar_block(self, grid: np.ndarray) -> Optional[np.ndarray]:
-        """(C, n) f32 block for the whole grid, or None if any collector
-        (or a counter channel) forces the per-tick path."""
+    def _columnar_block(self, grid: np.ndarray,
+                        ) -> Optional[Tuple[np.ndarray, Dict[str, float]]]:
+        """(C, n) f32 block for the whole grid plus the raw values at the
+        grid's last instant, or None if any collector forces the per-tick
+        path.
+
+        Counter channels are rate-converted vectorized — the same
+        ``max(v - prev, 0) / dt`` rule as ``_postprocess``, seeded from
+        ``_prev_raw``/``_prev_ts`` so a block that follows per-tick steps
+        continues their rate stream exactly.  The returned raw tail is the
+        mirror handoff: ``run_virtual`` installs it as ``_prev_raw`` so the
+        first ``step()`` AFTER the block computes its delta from the
+        block's end, not from a stale pre-block raw value over a
+        post-block dt (the mixed columnar→per-tick rate bug).
+        """
         cols: Dict[str, np.ndarray] = {}
         for c in self.collectors:
             try:
@@ -143,9 +173,12 @@ class TelemetryAgent:
             if blk is None:
                 return None
             cols.update(blk)
-        if self._counter_channels & cols.keys():
-            return None                 # rates need tick-to-tick deltas
-        block = np.empty((self.ring.n_channels, grid.size), np.float32)
+        if any(k.startswith("_") for k in cols):
+            # derived jiffy channels (cpu_util_other, iowait_frac) only
+            # exist on the per-tick path
+            return None
+        n = grid.size
+        block = np.empty((self.ring.n_channels, n), np.float32)
         for i, name in enumerate(self.ring.channels):
             v = cols.get(name)
             if v is None:
@@ -156,9 +189,22 @@ class TelemetryAgent:
                 if len(self.ring):
                     last = float(self.ring.window(1, copy=False)[1][i, -1])
                 block[i] = last
+            elif name in self._counter_channels:
+                raw = np.asarray(v, np.float64)
+                rates = np.zeros(n, np.float64)
+                if n > 1:
+                    dts = np.maximum(np.diff(np.asarray(grid, np.float64)),
+                                     1e-9)
+                    rates[1:] = np.maximum(np.diff(raw), 0.0) / dts
+                prev = self._prev_raw.get(name)
+                if prev is not None and self._prev_ts is not None:
+                    dt0 = max(float(grid[0]) - self._prev_ts, 1e-9)
+                    rates[0] = max(float(raw[0]) - prev, 0.0) / dt0
+                block[i] = rates
             else:
                 block[i] = v
-        return block
+        raw_tail = {name: float(np.asarray(v)[-1]) for name, v in cols.items()}
+        return block, raw_tail
 
     def run_virtual(self, t_start: float, t_end: float,
                     columnar: bool = True) -> None:
@@ -173,24 +219,29 @@ class TelemetryAgent:
         if columnar and n:
             t0 = time.perf_counter()
             grid = t_start + np.arange(n) * period
-            block = self._columnar_block(grid)
-            if block is not None:
+            hit = self._columnar_block(grid)
+            if hit is not None:
+                block, raw_tail = hit
                 self.ring.push_block(grid, block)
                 self.stats.samples += n
+                # per-tick-parity handoff: the next step()/block computes
+                # counter deltas from the block's last raw column over the
+                # block-end timestamp
+                self._prev_raw = raw_tail
                 self._prev_ts = float(grid[-1])
                 self.stats.busy_seconds += time.perf_counter() - t0
-                self.stats.wall_seconds += t_end - t_start
+                self.stats.wall_accum += t_end - t_start
                 return
         for i in range(n):
             self.step(t_start + i * period)
-        self.stats.wall_seconds += t_end - t_start
+        self.stats.wall_accum += t_end - t_start
 
     # -------------------------------------------------------- threaded drive
     def run_background(self) -> None:
         if self._thread is not None:
             raise RuntimeError("agent already running")
         self._stop.clear()
-        self._t_started = time.perf_counter()
+        self.stats.live_t0 = time.perf_counter()
 
         def loop() -> None:
             period = 1.0 / self.rate_hz
@@ -214,9 +265,12 @@ class TelemetryAgent:
             self._stop.set()
             self._thread.join(timeout=5.0)
             self._thread = None
-        if self._t_started is not None:
-            self.stats.wall_seconds += time.perf_counter() - self._t_started
-            self._t_started = None
+        # fold the live segment into the accumulator exactly once — a
+        # second stop() (or stop without start) is a no-op, and repeated
+        # start/stop cycles sum their segments without double counting
+        if self.stats.live_t0 is not None:
+            self.stats.wall_accum += time.perf_counter() - self.stats.live_t0
+            self.stats.live_t0 = None
         return self.stats
 
     # ------------------------------------------------------------- accessors
@@ -224,11 +278,29 @@ class TelemetryAgent:
                ) -> tuple[np.ndarray, np.ndarray]:
         """(ts, (C, n)) snapshot of the trailing ``seconds``.
 
-        ``copy=False`` forwards the ring's zero-copy f32 view when the
-        span is contiguous — the columnar monitor path (consume before the
-        next push)."""
+        ``copy=True`` goes through the ring's seqlock validate-retry read,
+        so the snapshot is consistent even while the background sampling
+        thread is pushing (the seed's plain gather could pair ts[i] with a
+        half-written column).  ``copy=False`` forwards the ring's
+        zero-copy f32 view when the span is contiguous — the columnar
+        monitor path; under a live writer the caller must bracket it with
+        ``ring.read_begin``/``read_retry`` (or use :meth:`read_window`)."""
         n = int(seconds * self.rate_hz)
-        return self.ring.window(n, copy=copy)
+        if copy:
+            ts, data, _ = self.ring.read_window(n)
+            return ts, data
+        return self.ring.window(n, copy=False)
+
+    def read_window(self, seconds: float,
+                    out_ts: Optional[np.ndarray] = None,
+                    out: Optional[np.ndarray] = None, skip_newest: int = 0,
+                    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Torn-read-safe trailing window straight into caller buffers —
+        the :class:`~repro.monitor.aggregator.FleetAggregator` staging
+        path.  Returns ``(ts, data, torn_retries)``."""
+        n = int(seconds * self.rate_hz)
+        return self.ring.read_window(n, out_ts=out_ts, out=out,
+                                     skip_newest=skip_newest)
 
     @property
     def channels(self) -> List[str]:

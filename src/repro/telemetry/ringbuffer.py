@@ -11,9 +11,29 @@ Columnar fast path: ``push_block`` ingests a whole (C, n) f32 block in two
 slice writes (no per-tick Python), and ``window(n, copy=False)`` hands the
 monitor a zero-copy f32 view of the ring storage whenever the span does not
 wrap — end to end f32 from collector to kernel, no f64 round-trip.
+
+Seqlock protocol (single writer, many readers, no locks): the live
+deployment samples from a background thread while the monitor reads, so
+:class:`MultiChannelRing` carries a monotonically increasing sequence
+counter.  The **writer contract**: every mutation (``push_row`` /
+``push_block``) bumps the counter to odd before touching storage and back
+to even after — the counter is odd exactly while a write is in flight.
+The **reader contract**: take ``read_begin()`` (spins past an in-flight
+write), consume the window — e.g. copy the ``window(copy=False)`` views
+into your own buffer — then check ``read_retry(seq)``; if the sequence
+moved, the snapshot may pair samples from different instants (a torn
+read) and MUST be discarded and retried.  ``read_window`` packages that
+validate-retry loop and always returns a consistent snapshot: the common
+case is one bounded copy of the zero-copy views into a caller-supplied
+(or freshly allocated) buffer; a wrap or a torn read only repeats that
+bounded copy, it never takes a lock.  Under CPython the GIL gives each
+bytecode-level load/store sequential consistency, which is all the
+protocol needs; the counter itself is only ever written by the single
+writer thread.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -105,6 +125,12 @@ class MultiChannelRing:
                              dtype=np.float32)
         self._head = 0
         self._count = 0
+        #: seqlock sequence: odd while the (single) writer is mid-mutation,
+        #: even when storage is stable.  See the module docstring for the
+        #: writer/reader contract.
+        self._seq = 0
+        #: reads that observed a concurrent write and had to retry
+        self.torn_retries = 0
         #: row-key tuple -> (positions into the dict, destination channel
         #: rows); the agent emits identically-keyed dicts every tick, so one
         #: cached layout turns push_row into two vectorized writes.
@@ -126,8 +152,87 @@ class MultiChannelRing:
             self._row_layout[keys] = hit
         return hit
 
+    # ----------------------------------------------------------- seqlock API
+    def _write_begin(self) -> None:
+        self._seq += 1          # odd: mutation in flight
+
+    def _write_end(self) -> None:
+        self._seq += 1          # even: storage stable again
+
+    def read_begin(self) -> int:
+        """Reader entry: returns an even sequence, spinning past any
+        in-flight write (the writer's critical section is microseconds)."""
+        while True:
+            s = self._seq
+            if not (s & 1):
+                return s
+            time.sleep(0)       # yield to the writer thread
+
+    def read_retry(self, seq: int) -> bool:
+        """True if a write overlapped the read that started at ``seq`` —
+        the snapshot may be torn and must be retried."""
+        return self._seq != seq
+
+    def read_window(self, n: int, out_ts: Optional[np.ndarray] = None,
+                    out: Optional[np.ndarray] = None, skip_newest: int = 0,
+                    max_retries: int = 10_000,
+                    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Torn-read-safe consistent snapshot of the newest ``n`` columns.
+
+        Returns ``(ts[k], data[C, k], retries)`` with ``k <= n`` the valid
+        count — chronological, consistent even against a concurrent writer
+        thread.  ``out_ts`` (>= n f64) / ``out`` ((C, >= n) f32) receive
+        the data when given (the returned arrays are views into them), so
+        a monitor can stage straight into a preallocated slab with one
+        bounded copy and zero allocation; omitted, they are allocated.
+        ``skip_newest`` drops that many of the newest columns first (clock
+        alignment across hosts).  The validate-retry loop repeats the copy
+        until a quiescent sequence brackets it; ``retries`` reports how
+        many attempts observed writer contention (also accumulated on
+        :attr:`torn_retries`).
+        """
+        n = int(n)
+        if out is None:
+            out = np.empty((len(self.channels), n), np.float32)
+        if out_ts is None:
+            out_ts = np.empty(n, np.float64)
+        retries = 0
+        while True:
+            s0 = self.read_begin()
+            # _head/_count may themselves be torn — each is always an
+            # in-range int, so the slices below stay valid, and the final
+            # sequence check rejects any inconsistent pairing
+            avail = max(self._count - int(skip_newest), 0)
+            k = min(n, avail)
+            if k:
+                start = (self._head - int(skip_newest) - k) % self.capacity
+                first = min(k, self.capacity - start)
+                out_ts[:first] = self._ts[start:start + first]
+                out[:, :first] = self._data[:, start:start + first]
+                rest = k - first
+                if rest:
+                    out_ts[first:k] = self._ts[:rest]
+                    out[:, first:k] = self._data[:, :rest]
+            if not self.read_retry(s0):
+                return out_ts[:k], out[:, :k], retries
+            retries += 1
+            self.torn_retries += 1
+            if retries >= max_retries:
+                raise RuntimeError(
+                    f"read_window torn {retries} times — is there more "
+                    "than one writer on this ring?")
+            if retries > 32:    # heavy contention: back off a little
+                time.sleep(1e-5)
+
     def push_row(self, ts: float, values: Dict[str, float]) -> None:
+        # everything fallible (layout resolution, dict -> f32 conversion)
+        # happens before write_begin so an exception can never strand the
+        # sequence counter odd
+        sel, dest = self._layout(tuple(values))
+        vals = np.fromiter(values.values(), dtype=np.float32,
+                           count=len(values))
         col = self._head
+        self._write_begin()
         self._ts[col] = ts
         # carry the whole previous column forward in one vectorized copy,
         # then overwrite the channels present at this instant — absent
@@ -136,13 +241,11 @@ class MultiChannelRing:
             self._data[:, col] = self._data[:, (col - 1) % self.capacity]
         else:
             self._data[:, col] = 0.0
-        sel, dest = self._layout(tuple(values))
-        vals = np.fromiter(values.values(), dtype=np.float32,
-                           count=len(values))
         self._data[dest, col] = vals[sel]
         self._head = (self._head + 1) % self.capacity
         if self._count < self.capacity:
             self._count += 1
+        self._write_end()
 
     def push_block(self, ts: np.ndarray, block: np.ndarray) -> None:
         """Columnar bulk append: ``block`` is (C, n) — n sample instants
@@ -161,6 +264,7 @@ class MultiChannelRing:
         if n >= self.capacity:          # only the newest samples survive
             t, b = t[-self.capacity:], b[:, -self.capacity:]
             n = self.capacity
+        self._write_begin()
         first = min(n, self.capacity - self._head)
         self._ts[self._head:self._head + first] = t[:first]
         self._data[:, self._head:self._head + first] = b[:, :first]
@@ -170,27 +274,54 @@ class MultiChannelRing:
             self._data[:, :rest] = b[:, first:]
         self._head = (self._head + n) % self.capacity
         self._count = min(self.capacity, self._count + n)
+        self._write_end()
 
-    def window(self, n: int, copy: bool = True,
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def peek(self) -> Tuple[int, float]:
+        """Consistent ``(count, newest timestamp)`` — seqlock-validated, so
+        safe against the background writer.  ``(0, -inf)`` when empty."""
+        while True:
+            s0 = self.read_begin()
+            cnt = self._count
+            last = (float(self._ts[(self._head - 1) % self.capacity])
+                    if cnt else -np.inf)
+            if not self.read_retry(s0):
+                return cnt, last
+            self.torn_retries += 1
+
+    def window(self, n: int, copy: bool = True, with_seq: bool = False,
+               ):
         """Newest ``n`` columns, chronological: (ts[n], data[C, n]).
 
         ``copy=False`` returns zero-copy f32 views of the ring storage when
         the span is contiguous (no wrap) — the columnar monitor path; the
         views are invalidated by the next push, so consume before pushing.
         A wrapped span is always returned as a copy.
+
+        Against a concurrent writer thread neither variant is safe on its
+        own — even the copying gather can pair a timestamp with a
+        half-written column.  Either wrap the call in ``read_begin`` /
+        ``read_retry`` (``with_seq=True`` appends the read sequence to the
+        tuple for exactly that), or use :meth:`read_window`, which owns the
+        retry loop.
         """
+        # seqlock order: capture an even (stable) sequence before reading
+        # head/count — a raw capture could hand back an odd in-flight
+        # value that read_retry would then wrongly accept
+        seq = self.read_begin() if with_seq else self._seq
         n = min(int(n), self._count)
         if n == 0:
-            return (np.empty(0, np.float64),
-                    np.empty((self.n_channels, 0), np.float32))
-        start = (self._head - n) % self.capacity
-        if start + n <= self.capacity:          # contiguous: plain slices
-            ts = self._ts[start:start + n]
-            d = self._data[:, start:start + n]
-            return (ts.copy(), d.copy()) if copy else (ts, d)
-        idx = (start + np.arange(n)) % self.capacity
-        return self._ts[idx].copy(), self._data[:, idx].copy()
+            out = (np.empty(0, np.float64),
+                   np.empty((self.n_channels, 0), np.float32))
+        else:
+            start = (self._head - n) % self.capacity
+            if start + n <= self.capacity:      # contiguous: plain slices
+                ts = self._ts[start:start + n]
+                d = self._data[:, start:start + n]
+                out = (ts.copy(), d.copy()) if copy else (ts, d)
+            else:
+                idx = (start + np.arange(n)) % self.capacity
+                out = (self._ts[idx].copy(), self._data[:, idx].copy())
+        return out + (seq,) if with_seq else out
 
     def channel(self, name: str, n: Optional[int] = None) -> np.ndarray:
         ts, data = self.window(self._count if n is None else n)

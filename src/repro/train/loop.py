@@ -21,6 +21,7 @@ from repro.checkpoint import Checkpointer, FailureInjector, resume_or_init
 from repro.core.engine import EngineConfig
 from repro.data.pipeline import PipelineConfig, SyntheticLMPipeline
 from repro.models.registry import Model
+from repro.monitor.aggregator import FleetAggregator
 from repro.monitor.fleet import FleetMonitor, Mitigation
 from repro.monitor.hooks import StepTelemetry
 from repro.train.optimizer import OptConfig
@@ -71,8 +72,15 @@ def run_training(model: Model, pipeline: SyntheticLMPipeline,
 
         tele = StepTelemetry(rate_hz=loop_cfg.telemetry_rate_hz) \
             if loop_cfg.telemetry else None
+        agg = None
         if tele:
             tele.start()
+            if monitor is not None:
+                # seqlock staging reader over the live agent ring(s): the
+                # diagnosis pass reads while the background sampler writes,
+                # with one bounded copy into the aggregator's preallocated
+                # slab instead of the seed's defensive full-window copy
+                agg = FleetAggregator([tele.agent], window_s=30.0)
         pipeline.start(start_step=start)
         it = iter(pipeline)
 
@@ -98,13 +106,11 @@ def run_training(model: Model, pipeline: SyntheticLMPipeline,
                     if injector:
                         injector.maybe_fail(step, "mid_checkpoint")
                     ckpt.save(step, state)
-                # fleet diagnosis pass over the trailing telemetry window
-                if (monitor is not None and tele is not None
-                        and (step + 1) % loop_cfg.diagnose_every == 0):
-                    ts, data = tele.agent.window(30.0)
-                    if ts.size > int(10 * loop_cfg.telemetry_rate_hz):
-                        fd = monitor.diagnose_fleet(
-                            ts, data[None], tele.agent.channels)
+                # fleet diagnosis pass over the trailing telemetry window,
+                # staged torn-read-safe by the aggregator (no full copy)
+                if agg is not None and (step + 1) % loop_cfg.diagnose_every == 0:
+                    fd = agg.diagnose(monitor, min_valid_s=10.0)
+                    if fd is not None:
                         diagnoses.append(fd)
                         if fd.mitigation != Mitigation.NONE:
                             log.warning(

@@ -1,0 +1,193 @@
+"""FleetAggregator: live multi-host slab assembly over seqlock rings —
+ragged fleets, wrap-spanning windows, exact parity with copying snapshots,
+and end-to-end fleet RCA through the staged slab."""
+import numpy as np
+import pytest
+
+from repro.core.taxonomy import CauseClass
+from repro.monitor.aggregator import FleetAggregator
+from repro.monitor.fleet import FleetMonitor, Mitigation
+from repro.sim.scenario import make_trial
+from repro.telemetry.agent import TelemetryAgent
+from repro.telemetry.collectors import SimCollector
+
+
+def _agent(trial, history_s=60.0):
+    sim = SimCollector(trial.channels, trial.ts, trial.data)
+    return TelemetryAgent([sim], rate_hz=100.0, history_s=history_s)
+
+
+def _fleet(n_hosts, bad_host, cls="nic", seed=800, history_s=60.0):
+    trials = [make_trial(seed + h, cls,
+                         intensity=(2.0 if h == bad_host else 0.0),
+                         t_on=40.0, confuser_prob=0.0)
+              for h in range(n_hosts)]
+    return trials, [_agent(t, history_s) for t in trials]
+
+
+def test_assembled_slab_parity_with_copying_snapshots():
+    """Virtual clock: every staged host row equals the per-host
+    ``window(copy=True)`` snapshot bit for bit, and the reference clock is
+    the hosts' shared timestamp grid."""
+    _, agents = _fleet(3, bad_host=1)
+    agg = FleetAggregator(agents, window_s=30.0)
+    agg.run_virtual(0.0, 46.0)
+    snap = agg.assemble()
+    assert snap.slab.shape == (3, len(agg.channels), 3000)
+    assert snap.skipped == [] and list(snap.valid) == [3000] * 3
+    for h, a in enumerate(agents):
+        ts, d = a.window(30.0)
+        np.testing.assert_array_equal(snap.slab[h], d)
+        np.testing.assert_array_equal(snap.ts, ts)
+
+
+def test_wrap_spanning_window_stages_consistently():
+    """History shorter than the drive span: the ring wraps mid-window and
+    the staged row must still be the chronological trailing window."""
+    trials, agents = _fleet(2, bad_host=0, history_s=35.0)
+    agg = FleetAggregator(agents, window_s=30.0)
+    agg.run_virtual(0.0, 46.0)          # 4600 pushes into 3500-slot rings
+    snap = agg.assemble()
+    for h, a in enumerate(agents):
+        ts, d = a.window(30.0)
+        np.testing.assert_array_equal(snap.slab[h], d)
+    # the window's absolute position is right: newest sample at ~45.99 s
+    assert snap.ts[-1] == pytest.approx(45.99, abs=1e-6)
+
+
+def test_late_joiner_backfilled_and_valid_reported():
+    trials, agents = _fleet(3, bad_host=2)
+    agg = FleetAggregator(agents, window_s=30.0)
+    for a in agents[:2]:
+        a.run_virtual(0.0, 46.0)
+    agents[2].run_virtual(41.0, 46.0)    # joined 5 s ago
+    snap = agg.assemble()
+    assert snap.skipped == []
+    assert list(snap.valid[:2]) == [3000, 3000]
+    assert snap.valid[2] == 500
+    # the late joiner's head is backfilled flat with its oldest sample
+    row = snap.slab[2]
+    np.testing.assert_array_equal(row[:, :2500],
+                                  np.repeat(row[:, 2500:2501], 2500, axis=1))
+    ts, d = agents[2].window(5.0)
+    np.testing.assert_array_equal(row[:, 2500:], d)
+
+
+def test_dead_agent_masked_out_of_slab():
+    """A host whose agent stopped sampling long ago must not contribute a
+    stale window (its old spike would read as live)."""
+    trials, agents = _fleet(3, bad_host=1, cls="cpu")
+    agg = FleetAggregator(agents, window_s=30.0, dead_after_s=2.0)
+    for h, a in enumerate(agents):
+        a.run_virtual(0.0, 46.0 if h != 0 else 20.0)   # host 0 died at t=20
+    snap = agg.assemble()
+    assert snap.skipped == [0]
+    assert snap.valid[0] == 0
+    assert np.all(snap.slab[0] == 0.0)
+    # the live straggler is still found through the staged slab
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(
+        snap.ts, snap.slab, agg.channels)
+    assert fd.straggler_host == 1
+    assert fd.diagnosis is not None
+    assert fd.diagnosis.top_cause == CauseClass.CPU
+    assert agg.stats.dead_hosts == 1
+
+
+def test_clock_skew_right_aligned_at_common_edge():
+    """One host has sampled a little further than the others: its newest
+    samples past the fleet-common edge are dropped so columns align."""
+    trials, agents = _fleet(2, bad_host=0)
+    agents[0].run_virtual(0.0, 46.5)     # 50 samples ahead
+    agents[1].run_virtual(0.0, 46.0)
+    agg = FleetAggregator(agents, window_s=30.0)
+    snap = agg.assemble()
+    # both rows end at the common edge (host 1's newest sample)
+    assert snap.ts[-1] == pytest.approx(45.99, abs=1e-6)
+    ts1, d1 = agents[1].window(30.0)
+    np.testing.assert_array_equal(snap.slab[1], d1)
+    # host 0's staged row ends at the same instant, not at its own newest:
+    # equal to its own ring read skipped past the 50 newer samples
+    ts0, d0, _ = agents[0].ring.read_window(3000, skip_newest=50)
+    assert ts0[-1] == pytest.approx(snap.ts[-1], abs=1e-9)
+    np.testing.assert_array_equal(snap.slab[0], d0)
+
+
+def test_diagnose_through_aggregator_localizes_straggler():
+    trials, agents = _fleet(4, bad_host=2, cls="nic")
+    agg = FleetAggregator(agents, window_s=30.0)
+    agg.run_virtual(0.0, 46.0)
+    fd = agg.diagnose(FleetMonitor(use_kernels=False), min_valid_s=10.0)
+    assert fd is not None
+    assert fd.straggler_host == 2
+    assert fd.diagnosis.top_cause == CauseClass.NIC
+    assert fd.mitigation == Mitigation.HIERARCHICAL_ALLREDUCE
+    assert agg.stats.assemblies == 1
+
+
+def test_diagnose_clamps_to_accumulated_span_no_backfill_baseline():
+    """Startup: with 12 s of real telemetry in a 30 s window, diagnose()
+    must run on the genuine 12 s span — identical to diagnosing the
+    actual accumulated window directly — so the backfilled flat head
+    never enters the baseline statistics."""
+    trials, agents = _fleet(2, bad_host=1, cls="io", seed=870)
+    agg = FleetAggregator(agents, window_s=30.0)
+    agg.run_virtual(34.0, 46.0)          # joined late: 12 s of real data
+    mon = FleetMonitor(use_kernels=False)
+    fd = agg.diagnose(mon, min_valid_s=10.0)
+    assert fd is not None
+    ref = np.stack([a.window(12.0)[1] for a in agents])
+    ref_fd = FleetMonitor(use_kernels=False).diagnose_fleet(
+        agents[0].window(12.0)[0], ref, agg.channels)
+    assert fd.flagged_hosts == ref_fd.flagged_hosts
+    assert fd.straggler_host == ref_fd.straggler_host
+    np.testing.assert_array_equal(fd.per_host_scores, ref_fd.per_host_scores)
+
+
+def test_diagnose_returns_none_before_enough_telemetry():
+    trials, agents = _fleet(2, bad_host=0)
+    agg = FleetAggregator(agents, window_s=30.0)
+    assert agg.diagnose(FleetMonitor(use_kernels=False)) is None  # empty
+    agg.run_virtual(0.0, 2.0)
+    assert agg.diagnose(FleetMonitor(use_kernels=False),
+                        min_valid_s=10.0) is None                 # too short
+
+
+def test_live_background_agents_stage_aligned_and_consistent():
+    """Real writer threads: assemble() while every agent's sampling thread
+    pushes.  Staged rows must stay mutually aligned at the fleet-common
+    clock edge (within one period) even though samples keep arriving
+    between the probe and the staging read."""
+    src_ts = np.arange(0.0, 64.0, 0.01)
+    src = np.vstack([np.sin(src_ts) + 5.0, np.cos(src_ts)]).astype(np.float32)
+    agents = [TelemetryAgent(
+        [SimCollector(["dev_power", "dev_temp"], src_ts, src)],
+        rate_hz=500.0, history_s=4.0) for _ in range(3)]
+    agg = FleetAggregator(agents, window_s=1.0)
+    agg.start_background()
+    try:
+        import time
+        time.sleep(0.4)
+        for _ in range(20):
+            snap = agg.assemble()
+            live = [h for h in range(3) if h not in snap.skipped]
+            assert live, "all hosts skipped under live sampling"
+            ends = [agg._ts_rows[h, -1] for h in live]
+            # a tight bound is impossible under wall-clock sampling (a
+            # GIL stall right before the common edge legitimately lags
+            # one host by the stall length) — the exact-alignment
+            # contract is proven by the deterministic virtual-clock skew
+            # test above; here assert the spread stays bounded by a
+            # generous scheduling ceiling, catching systematic drift
+            assert max(ends) - min(ends) <= 0.05, ends
+    finally:
+        agg.stop()
+
+
+def test_channel_layout_mismatch_rejected():
+    t = make_trial(990, "io", confuser_prob=0.0)
+    a1 = _agent(t)
+    sim = SimCollector(["dev_power"], t.ts,
+                       np.ones((1, t.ts.size), np.float32))
+    a2 = TelemetryAgent([sim], rate_hz=100.0, history_s=60.0)
+    with pytest.raises(ValueError):
+        FleetAggregator([a1, a2], window_s=10.0)

@@ -45,8 +45,21 @@ def test_fleet_family_smoke():
 
 
 @pytest.mark.bench_smoke
+def test_live_family_smoke():
+    """Aggregator staging + writer-storm retry loop at tiny sizes — the
+    live fleet path's fail-fast canary."""
+    rows = fleetbench.live_rows(n_hosts=2, window_s=10.0, reps=1,
+                                storm_s=0.15)
+    _check(rows, "fleet/live")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["fleet/live_storm_reads_per_s"] > 0
+
+
+@pytest.mark.bench_smoke
 def test_eval_family_smoke():
     rows = fleetbench.eval_rows(n_per_class=1, reps=1)
     _check(rows, "eval/")
     vals = dict((n, v) for n, v, _ in rows)
     assert vals["eval/pred_parity"] == 1.0
+    assert vals["eval/store_pred_parity"] == 1.0
+    assert vals["eval/slice_ops_store"] < vals["eval/slice_ops_per_event"]

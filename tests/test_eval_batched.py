@@ -1,13 +1,17 @@
 """Event-batched Layer 3: the eval stacks every trial's pending event into
 ONE fused dispatch per diagnoser, with per-class accuracy identical to the
-per-event sequential path."""
+per-event sequential path.  The columnar TrialStore path additionally
+replaces the per-event evidence reslicing with slab indexing."""
 import numpy as np
 import pytest
 
+from repro.core import engine as engine_mod
 from repro.core.baselines import make_baseline
 from repro.core.engine import CorrelationEngine
 from repro.kernels.fused import ops as fused_ops
-from repro.sim.scenario import accuracy_by_class, make_trial, run_eval
+from repro.sim.scenario import (
+    TrialStore, accuracy_by_class, make_trial, run_eval,
+)
 
 
 @pytest.fixture(scope="module")
@@ -80,6 +84,79 @@ def test_diagnose_events_batch_matches_scalar_diagnose():
                 [r.confidence for r in db.ranked],
                 [r.confidence for r in ds.ranked], rtol=1e-3, atol=1e-3)
             assert db.event == ds.event
+
+
+def test_trial_store_slab_matches_trials():
+    trials = [make_trial(60 + i, cls, confuser_prob=0.0)
+              for i, cls in enumerate(["io", "nic"])]
+    store = TrialStore.from_trials(trials)
+    assert store.slab.shape == (2,) + trials[0].data.shape
+    assert store.slab.dtype == np.float32
+    for i, t in enumerate(trials):
+        np.testing.assert_array_equal(store.slab[i],
+                                      t.data.astype(np.float32))
+    ts, row, channels = store.rows()[1]
+    assert row.base is store.slab and channels == trials[0].channels
+
+
+def test_store_predictions_identical_with_fewer_slice_ops():
+    """Acceptance: the store path's per-trial predictions equal the
+    per-event batched path's, with *counted* fewer python-level evidence
+    slice ops (O(events) reslices -> 3 fancy-index gathers)."""
+    trials = [make_trial(300 + 7 * ci + k, cls)
+              for ci, cls in enumerate(["io", "cpu", "nic", "gpu"])
+              for k in range(3)]
+    store = TrialStore.from_trials(trials)
+    for name in ("ours", "b3"):
+        dg = make_baseline(name)
+        c0 = engine_mod.SLICE_OPS
+        per_event = dg.diagnose_trials([(t.ts, t.data, t.channels)
+                                        for t in trials])
+        ops_event = engine_mod.SLICE_OPS - c0
+        c0 = engine_mod.SLICE_OPS
+        by_store = dg.diagnose_store(store)
+        ops_store = engine_mod.SLICE_OPS - c0
+        assert [r.pred for r in by_store] == [r.pred for r in per_event], name
+        # 2 reslices per event vs 3 gathers per layout group
+        assert ops_event == 2 * len(trials)
+        assert ops_store == 3
+        assert ops_store < ops_event
+
+
+def test_diagnose_events_slab_matches_diagnose_events_batch():
+    """Slab-indexed gather == per-event reslice gather on the same events
+    (same kernel dispatch; confidences agree to f32 tolerance)."""
+    trials = [make_trial(400 + i, cls, intensity=1.8, t_on=40.0,
+                         confuser_prob=0.0)
+              for i, cls in enumerate(["io", "cpu", "nic", "gpu"])]
+    store = TrialStore.from_trials(trials)
+    eng = CorrelationEngine()
+    items, events = [], []
+    for i, tr in enumerate(trials):
+        evs = eng.detect_events(store.ts, store.slab[i], store.channels)
+        assert evs, "expected a detection in every injected trial"
+        ev, t = evs[0]
+        items.append((store.ts, store.slab[i], store.channels, t, ev))
+        events.append((i, t, ev))
+    batched = eng.diagnose_events_batch(items)
+    by_slab = eng.diagnose_events_slab(store.ts, store.slab, store.channels,
+                                       events)
+    for db, ds in zip(batched, by_slab):
+        assert db.top_cause == ds.top_cause
+        assert [r.cause for r in db.ranked] == [r.cause for r in ds.ranked]
+        np.testing.assert_allclose([r.confidence for r in db.ranked],
+                                   [r.confidence for r in ds.ranked],
+                                   rtol=1e-3, atol=1e-3)
+        assert db.event == ds.event
+
+
+def test_run_eval_store_path_matches_sequential_on_b1():
+    """A non-engine diagnoser (no diagnose_store override) must take the
+    legacy path unchanged under batch_events=True."""
+    dg = lambda: [make_baseline("b1")]
+    a = run_eval(dg(), n_per_class=2, seed=3, batch_events=True)
+    b = run_eval(dg(), n_per_class=2, seed=3, batch_events=False)
+    assert [r.pred for r in a] == [r.pred for r in b]
 
 
 def test_diagnose_events_batch_no_evidence_channels():

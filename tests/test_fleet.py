@@ -119,6 +119,39 @@ def test_no_evidence_channels_degrades_gracefully():
     assert fd.mitigation == Mitigation.NONE
 
 
+@pytest.mark.parametrize("T", [8, 40, 62])
+def test_short_window_returns_quiet_verdict_not_spurious_stragglers(T):
+    """Satellite bug: at tiny T the clamps ``wn = T//2; bn = T - wn`` can
+    leave a baseline below MIN_BASELINE_N, whose sigma-floored z-scores
+    flagged perfectly quiet hosts.  Short snapshots must yield an explicit
+    quiet verdict with the skip marker instead."""
+    ts, data, channels, _ = _fleet_data(3, 1, "cpu", seed=250)
+    ts, data = ts[:T], data[:, :, :T]
+    for fast in (True, False):
+        fd = FleetMonitor(use_kernels=False,
+                          fast_detect=fast).diagnose_fleet(ts, data, channels)
+        assert fd.flagged_hosts == []
+        assert fd.diagnosis is None
+        assert fd.mitigation == Mitigation.NONE
+        assert np.all(fd.per_host_scores == 0.0)
+        assert "short_baseline_skip" in fd.stage_seconds
+
+
+def test_short_window_round_clears_strike_history():
+    """The short-baseline quiet verdict is a 'not flagged this round'
+    round: strike counts must reset exactly as on a quiet full window,
+    or a short snapshot between two flagged rounds would let stale
+    strikes escalate to EXCLUDE_AND_RESCALE."""
+    mon = FleetMonitor(use_kernels=False, persistent_threshold=2)
+    ts, data, channels, _ = _fleet_data(3, 1, "cpu", seed=200)
+    fd1 = mon.diagnose_fleet(ts, data, channels)
+    assert fd1.mitigation == Mitigation.REPIN_CPU     # strike 1
+    mon.diagnose_fleet(ts[:40], data[:, :, :40], channels)  # short round
+    assert mon._strikes == {}
+    fd2 = mon.diagnose_fleet(ts, data, channels)
+    assert fd2.mitigation == Mitigation.REPIN_CPU     # strike restarts at 1
+
+
 def test_quiet_fleet_flags_nothing():
     ts, data, channels, _ = _fleet_data(4, 0, "cpu", seed=900)
     quiet = data.copy()
