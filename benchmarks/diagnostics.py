@@ -14,15 +14,15 @@ from repro.core.baselines import make_baseline
 from repro.core.engine import EngineConfig
 from repro.core.taxonomy import CauseClass
 from repro.sim.scenario import (
-    accuracy_by_class, confusion_matrix, mean_accuracy, rca_time_by_class,
-    run_eval,
+    N_PER_CLASS, accuracy_by_class, confusion_matrix, mean_accuracy,
+    rca_time_by_class, run_eval,
 )
 
 CLASSES = [CauseClass.IO, CauseClass.CPU, CauseClass.NIC, CauseClass.GPU]
 _CACHE: Dict[int, list] = {}
 
 
-def _records(seed: int = 0, n: int = 17):
+def _records(seed: int = 0, n: int = N_PER_CLASS):
     key = (seed, n)
     if key not in _CACHE:
         dgs = [make_baseline(x) for x in ["ours", "b1", "b2", "b3"]]
@@ -156,7 +156,7 @@ def ablation_probes() -> List[Tuple[str, float, str]]:
         allowed = [m for m in METRIC_REGISTRY if m not in drop]
         dg = OurDiagnoser(evidence_channels=allowed)
         dg.name = f"ours-minus-{gname}"
-        recs = _run([dg], n_per_class=17, seed=0)
+        recs = _run([dg], n_per_class=N_PER_CLASS, seed=0)
         a0 = accuracy_by_class(base, "ours")[cls]
         a1 = accuracy_by_class(recs, dg.name).get(cls, 0.0)
         rows.append((f"ablation/drop_{gname}/delta_{cls.value}_pts",

@@ -40,7 +40,9 @@ from repro.core.baselines import make_baseline
 from repro.core.engine import CorrelationEngine, EngineConfig
 from repro.monitor.aggregator import FleetAggregator
 from repro.monitor.fleet import FleetMonitor
-from repro.sim.scenario import TrialStore, make_trial
+from repro.sim.scenario import (
+    N_PER_CLASS, PROTOCOL_CLASSES, TrialStore, make_trial,
+)
 from repro.telemetry.agent import TelemetryAgent
 from repro.telemetry.collectors import SimCollector
 from repro.telemetry.ringbuffer import MultiChannelRing
@@ -79,7 +81,8 @@ def _median_stages(mon: FleetMonitor, ts, data, channels, reps: int,
 def sweep_rows(n_trials: int = 8, reps: int = 3,
                ) -> List[Tuple[str, float, str]]:
     """Rolling-stats engine sweep vs seed scalar path, same trials."""
-    trials = [make_trial(7000 + i, ["io", "cpu", "nic", "gpu"][i % 4])
+    trials = [make_trial(7000 + i,
+                         PROTOCOL_CLASSES[i % len(PROTOCOL_CLASSES)])
               for i in range(n_trials)]
     rows: List[Tuple[str, float, str]] = []
     for tag, cfg in (("boundary", EngineConfig()),
@@ -295,8 +298,8 @@ def eval_rows(n_per_class: int = 4, reps: int = 3,
     the diagnosis path ``run_eval`` drives (detection sweep + Layer 3).
     """
     rows: List[Tuple[str, float, str]] = []
-    trials = [make_trial(7100 + 17 * ci + k, cls)
-              for ci, cls in enumerate(["io", "cpu", "nic", "gpu"])
+    trials = [make_trial(7100 + N_PER_CLASS * ci + k, cls)
+              for ci, cls in enumerate(PROTOCOL_CLASSES)
               for k in range(n_per_class)]
     inputs = [(t.ts, t.data, t.channels) for t in trials]
     dg = make_baseline("ours")

@@ -1,0 +1,159 @@
+"""Parity regression gate — the third CI step.
+
+The invariants PRs 1-4 established are *exact*: batched fleet detection is
+byte-identical to the seed oracle, event-batched / slab Layer 3 predicts
+and timestamps identically to the per-event path, and a no-fault soak
+produces zero verdicts.  This gate makes every commit prove them again:
+
+  1. the committed ``EVAL_scorecard.json`` is structurally sound — every
+     scenario class present, parity bits exactly 1.0, soak clean, latency
+     percentiles finite where events exist;
+  2. a fresh tiny run reproduces them on THIS commit's code: the bench
+     parity rows (``fleet/detect_parity``, ``eval/pred_parity``,
+     ``eval/store_pred_parity``) and a smoke scorecard with the same
+     class set as the committed artifact.
+
+Exit status is nonzero on any break, with one line per failure.  Usage::
+
+  PYTHONPATH=src python -m benchmarks.regress                # full gate
+  PYTHONPATH=src python -m benchmarks.regress --skip-fresh   # artifact only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List
+
+#: bench rows that must be exactly 1.0 (prefix match, any suffix such as
+#: the batch-size tag)
+PARITY_ROW_PREFIXES = (
+    "fleet/detect_parity",
+    "eval/pred_parity",
+    "eval/store_pred_parity",
+)
+
+#: scorecard parity bits that must be present AND exactly 1.0
+SCORECARD_PARITY_KEYS = ("batched_pred", "batched_ts",
+                         "slab_pred", "slab_ts")
+
+
+def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
+    """Structural + invariant checks on one scorecard document."""
+    bad: List[str] = []
+    try:
+        classes = set(doc["protocol"]["classes"])
+        scen_doc = doc["scenarios"]
+        parity = doc["parity"]
+    except (KeyError, TypeError) as e:
+        return [f"{label}: malformed scorecard ({e!r})"]
+
+    from repro.sim.scenarios import SCENARIO_CLASSES
+    want = set(SCENARIO_CLASSES)
+    if classes != want:
+        bad.append(f"{label}: protocol classes {sorted(classes)} != "
+                   f"{sorted(want)}")
+    for name in want:
+        if name not in scen_doc:
+            bad.append(f"{label}: scenario class {name!r} missing")
+    for key in SCORECARD_PARITY_KEYS:
+        if key not in parity:
+            bad.append(f"{label}: parity/{key} missing — invariant no "
+                       "longer recorded")
+    for key, val in parity.items():
+        if val != 1.0:
+            bad.append(f"{label}: parity/{key} = {val} (want 1.0) — "
+                       "batched/slab path diverged from per-event")
+    soak = scen_doc.get("soak")
+    if soak is not None:
+        if soak.get("false_verdicts", -1) != 0 or soak.get("n_verdicts", -1) != 0:
+            bad.append(f"{label}: soak produced verdicts "
+                       f"({soak.get('n_verdicts')}) — false-positive break")
+        if soak.get("n_truth_events", -1) != 0:
+            bad.append(f"{label}: soak has truth events")
+    for name, blk in scen_doc.items():
+        if name == "soak":
+            continue
+        if blk.get("n_truth_events", 0) <= 0:
+            bad.append(f"{label}: {name} has no truth events")
+            continue
+        for lat_key in ("detect_latency_s", "rca_latency_s"):
+            pcts = blk.get(lat_key)
+            if not pcts:
+                bad.append(f"{label}: {name} has no {lat_key} percentiles")
+                continue
+            for p, v in pcts.items():
+                if not (isinstance(v, (int, float)) and math.isfinite(v)):
+                    bad.append(f"{label}: {name}.{lat_key}.{p} = {v!r}")
+        if blk.get("recall") in (None, 0):
+            bad.append(f"{label}: {name} recall = {blk.get('recall')!r} — "
+                       "detector found nothing on an injected class")
+    fleet = doc.get("fleet")
+    if fleet is None:
+        bad.append(f"{label}: fleet block missing")
+    elif fleet.get("flagged_recall") in (None, 0):
+        bad.append(f"{label}: fleet flagged_recall = "
+                   f"{fleet.get('flagged_recall')!r}")
+    return bad
+
+
+def check_bench_parity(rows) -> List[str]:
+    """Exact-1.0 check over the parity rows of a fresh bench run."""
+    bad: List[str] = []
+    seen = {p: False for p in PARITY_ROW_PREFIXES}
+    for name, value, _ in rows:
+        for p in PARITY_ROW_PREFIXES:
+            if name.startswith(p):
+                seen[p] = True
+                if value != 1.0:
+                    bad.append(f"fresh bench: {name} = {value} (want 1.0)")
+    for p, hit in seen.items():
+        if not hit:
+            bad.append(f"fresh bench: no row matched {p}")
+    return bad
+
+
+def fresh_failures() -> List[str]:
+    """Re-prove the invariants on this commit's code at tiny sizes."""
+    from benchmarks import fleetbench, scorecard
+
+    rows = fleetbench.fleet_rows(batch_sizes=(8,), reps=1,
+                                 sequential_baseline=False)
+    rows += fleetbench.eval_rows(n_per_class=1, reps=1)
+    bad = check_bench_parity(rows)
+    doc = scorecard.build_scorecard(n_per_class=1, n_hosts=4, n_affected=2)
+    bad += check_scorecard(doc, label="fresh scorecard")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--artifact", default="EVAL_scorecard.json",
+                    help="committed scorecard to validate")
+    ap.add_argument("--skip-fresh", action="store_true",
+                    help="validate the committed artifact only")
+    args = ap.parse_args(argv)
+
+    failures: List[str] = []
+    try:
+        with open(args.artifact) as f:
+            committed = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        failures.append(f"cannot read {args.artifact}: {e}")
+        committed = None
+    if committed is not None:
+        failures += check_scorecard(committed, label=args.artifact)
+    if not args.skip_fresh:
+        failures += fresh_failures()
+
+    if failures:
+        for msg in failures:
+            print(f"REGRESS FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("regress: all parity/scorecard invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,15 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows and writes per-section JSON
-artifacts (BENCH_kernels.json, BENCH_fleet.json) so the perf trajectory is
-tracked across PRs.  Usage:
+artifacts (BENCH_kernels.json, BENCH_fleet.json, EVAL_scorecard.json) so
+the perf trajectory is tracked across PRs.  Usage:
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table3,fig2a
     PYTHONPATH=src python -m benchmarks.run --only kernel,fleet --json-dir .
     PYTHONPATH=src python -m benchmarks.run --smoke    # <30 s perf canary
 
-``--smoke`` exercises all three perf-path benchmark families (kernel,
-sweep, fleet+eval) at tiny sizes without writing JSON artifacts — the
+``--smoke`` exercises every benchmark family (kernel, sweep, fleet+eval,
+scenario scorecard) at tiny sizes without writing JSON artifacts — the
 fail-fast regression canary tier-1 runs via tests/test_bench_smoke.py.
 """
 from __future__ import annotations
@@ -38,10 +38,11 @@ def _write_json(path: str, rows) -> None:
 
 
 def smoke() -> list:
-    """All three perf-path families at tiny sizes (<30 s total): kernel
-    microbench, engine sweep, fleet + event-batched eval.  Returns the
-    combined rows (also printed as CSV)."""
-    from benchmarks import fleetbench, kernelbench
+    """All perf-path families at tiny sizes: kernel microbench, engine
+    sweep, fleet + event-batched eval, and the scenario scorecard (parity
+    bits + headline operational metrics).  Returns the combined rows (also
+    printed as CSV)."""
+    from benchmarks import fleetbench, kernelbench, scorecard
 
     rows = _emit(kernelbench.kernel_microbench(B=4, M=8, N=256, K=10,
                                                detect_h=64))
@@ -51,6 +52,7 @@ def smoke() -> list:
                                         sequential_baseline=False))
     rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
     rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
+    rows += _emit(scorecard.smoke_rows())
     return rows
 
 
@@ -100,6 +102,12 @@ def main() -> None:
         _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):
         _emit(roofline.roofline_rows())
+    if on("scorecard"):
+        from benchmarks import scorecard
+        doc = scorecard.build_scorecard()
+        _emit(scorecard.scorecard_rows(doc))
+        scorecard.write(doc, os.path.join(args.json_dir,
+                                          "EVAL_scorecard.json"))
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

@@ -257,6 +257,55 @@ class CorrelationEngine:
         return [self._diagnose(ts, data, channels, li, t, ev)
                 for ev, t in events]
 
+    def process_batch(self, trials: Sequence[tuple], fast: bool = True,
+                      use_kernel: bool = False) -> List[List[Diagnosis]]:
+        """:meth:`process` over many trials, Layer 3 batched across ALL
+        their events.
+
+        ``trials`` is ``(ts, data, channels)`` tuples.  The Layer-2 sweep
+        runs per trial exactly as :meth:`process` would (same cooldown /
+        pending machinery, so every event's ``t_onset`` / ``t_detect`` /
+        ``t_ready`` stamps are identical), then every pending event of
+        every trial is stacked as a row into ONE fused Layer-3 dispatch
+        (:meth:`diagnose_events_batch`).  Returns one time-ordered
+        diagnosis list per trial — the multi-fault scenario scorer consumes
+        this to check batched-vs-per-event verdict parity.
+        """
+        items, owner = [], []
+        for k, (ts, data, channels) in enumerate(trials):
+            for ev, t in self.detect_events(ts, data, channels, fast=fast):
+                owner.append(k)
+                items.append((ts, data, list(channels), t, ev))
+        diags = self.diagnose_events_batch(items, use_kernel=use_kernel)
+        out: List[List[Diagnosis]] = [[] for _ in range(len(trials))]
+        for k, d in zip(owner, diags):
+            out[k].append(d)
+        return out
+
+    def process_store(self, ts: np.ndarray, slab: np.ndarray,
+                      channels: Sequence[str], fast: bool = True,
+                      use_kernel: bool = False) -> List[List[Diagnosis]]:
+        """:meth:`process_batch` over a columnar trial slab.
+
+        ``slab`` is the (trials, C, T) f32 store layout (see
+        ``sim.scenario.TrialStore``); detection sweeps each row view, the
+        Layer-3 evidence gather is slab indexing
+        (:meth:`diagnose_events_slab`).  Returns one time-ordered diagnosis
+        list per slab row.
+        """
+        events, owner = [], []
+        for i in range(slab.shape[0]):
+            for ev, t in self.detect_events(ts, slab[i], channels,
+                                            fast=fast):
+                owner.append(i)
+                events.append((i, t, ev))
+        diags = self.diagnose_events_slab(ts, slab, channels, events,
+                                          use_kernel=use_kernel)
+        out: List[List[Diagnosis]] = [[] for _ in range(slab.shape[0])]
+        for i, d in zip(owner, diags):
+            out[i].append(d)
+        return out
+
     # ------------------------------------------------------------- Layer 3+4
     def _diagnose(self, ts: np.ndarray, data: np.ndarray,
                   channels: List[str], li: int, t: int,
@@ -276,7 +325,8 @@ class CorrelationEngine:
         names, idx, orient = self._layout(channels)
         if not names:
             return Diagnosis(event=event, ranked=[], per_metric={},
-                             t_rca=float(ts[t]), analysis_seconds=0.0)
+                             t_rca=float(ts[t]), analysis_seconds=0.0,
+                             t_ready=float(ts[t]))
         # one vectorized slice over all evidence rows: [blo:t] covers both
         # the baseline region and the RCA window
         X = np.asarray(data[idx, blo:t], dtype=np.float64)
@@ -292,7 +342,7 @@ class CorrelationEngine:
         analysis = time.perf_counter() - wall0
         return Diagnosis(event=event, ranked=ranked, per_metric=per_metric,
                          t_rca=float(ts[t]) + analysis,
-                         analysis_seconds=analysis)
+                         analysis_seconds=analysis, t_ready=float(ts[t]))
 
     # ------------------------------------------------- event-batched Layer 3+4
     def diagnose_events_batch(self, items: Sequence[tuple],
@@ -331,7 +381,8 @@ class CorrelationEngine:
             if not names:
                 results[i] = Diagnosis(event=event, ranked=[], per_metric={},
                                        t_rca=float(ts[t]),
-                                       analysis_seconds=0.0)
+                                       analysis_seconds=0.0,
+                                       t_ready=float(ts[t]))
                 continue
             t = int(t)
             onset_idx = int(np.searchsorted(ts, event.t_onset))
@@ -386,7 +437,8 @@ class CorrelationEngine:
                 results[i] = Diagnosis(event=event, ranked=ranked,
                                        per_metric=per_metric,
                                        t_rca=float(ts[t]) + analysis,
-                                       analysis_seconds=analysis)
+                                       analysis_seconds=analysis,
+                                       t_ready=float(ts[t]))
         return results
 
     # -------------------------------------------------- columnar trial store
@@ -417,7 +469,8 @@ class CorrelationEngine:
         names, idx, orient = self._layout(channels)
         if not names:
             return [Diagnosis(event=ev, ranked=[], per_metric={},
-                              t_rca=float(ts[int(t)]), analysis_seconds=0.0)
+                              t_rca=float(ts[int(t)]), analysis_seconds=0.0,
+                              t_ready=float(ts[int(t)]))
                     for _, t, ev in events]
         w0 = time.perf_counter()
         li = channels.index(cfg.latency_metric)
@@ -494,5 +547,6 @@ class CorrelationEngine:
         return [Diagnosis(event=event, ranked=ranked_all[e][0],
                           per_metric=ranked_all[e][1],
                           t_rca=float(ts[int(t)]) + analysis,
-                          analysis_seconds=analysis)
+                          analysis_seconds=analysis,
+                          t_ready=float(ts[int(t)]))
                 for e, (_, t, event) in enumerate(events)]

@@ -41,6 +41,12 @@ class Diagnosis:
     per_metric: Dict[str, Dict[str, float]]  # name -> {spike,corr,conf,lag_s}
     t_rca: float                             # when the diagnosis completed
     analysis_seconds: float                  # pure compute cost of L3+L4
+    #: virtual trial time the verdict's evidence window closed (detection +
+    #: post-detection accumulation).  Deterministic — identical across the
+    #: per-event, event-batched and slab execution paths — unlike ``t_rca``,
+    #: which adds the measured analysis wall on top; operational scoring
+    #: (sim/scoring) stamps RCA latency with it for exactly that reason.
+    t_ready: Optional[float] = None
 
     @property
     def top_cause(self) -> CauseClass:

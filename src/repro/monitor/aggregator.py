@@ -43,6 +43,7 @@ class AggregatorStats:
     torn_retries: int = 0       # seqlock validate-retry loops across hosts
     ragged_hosts: int = 0       # short (late-joiner) rows staged
     dead_hosts: int = 0         # stale rows zeroed out of the slab
+    masked_hosts: int = 0       # young rows masked out of a diagnosis
 
 
 @dataclasses.dataclass
@@ -52,6 +53,10 @@ class FleetSnapshot:
     valid: np.ndarray           # (hosts,) true sample count per row
     skipped: List[int]          # dead/stale hosts (rows zeroed)
     retries: int                # torn-read retries during this assembly
+    #: live hosts too young to fill the diagnosed span — rows zeroed by
+    #: ``diagnose`` for that round (NOT flagged-eligible; an operator must
+    #: not read their zero spike score as "monitored and healthy")
+    masked: List[int] = dataclasses.field(default_factory=list)
 
 
 class FleetAggregator:
@@ -203,17 +208,29 @@ class FleetAggregator:
 
         Returns None when no host has accumulated ``min_valid_s`` seconds
         of telemetry yet (startup / all agents dead).  The diagnosed span
-        is clamped to the longest genuinely accumulated window: during
-        startup the backfilled flat head must not enter the baseline
-        statistics (a replicated startup transient would collapse sigma
-        and flag healthy hosts) — same behavior as diagnosing the actual
-        accumulated window, which is what the training loop used to do."""
+        is the one the most-established host genuinely supports
+        (``valid.max()``, capped by the window); live hosts too young to
+        fill it are masked out of THIS round — rows zeroed, like
+        ``assemble``'s dead-host masking, and reported via
+        ``last_snapshot.masked`` / ``stats.masked_hosts``.  That closes
+        two failure modes at once: a backfilled flat head never enters
+        the diagnosed slab (the constant would hit the sigma floor and
+        flag a perfectly healthy late joiner as a straggler — max-valid
+        clamping *without* masking had exactly that hole), and a single
+        restarting agent can neither narrow every established host's
+        baseline nor collapse the span into ``diagnose_fleet``'s
+        short-baseline quiet verdict (which would wipe a real straggler's
+        strike history fleet-wide while the newcomer refills)."""
         snap = self.assemble()
         if snap.slab.shape[0] == 0 or not snap.valid.size:
             return None
         k = int(snap.valid.max())
         if k < max(int(min_valid_s * self.rate_hz), 1):
             return None
+        for h in np.flatnonzero((snap.valid > 0) & (snap.valid < k)):
+            snap.slab[h] = 0.0      # cannot fill the span: quiet this round
+            snap.masked.append(int(h))
+        self.stats.masked_hosts += len(snap.masked)
         T = self.window_n
         if k < T:
             return monitor.diagnose_fleet(

@@ -305,6 +305,6 @@ class FleetMonitor:
                             metric=cfg.latency_metric)
             out[h] = Diagnosis(event=ev, ranked=ranked,
                                per_metric=per_metric, t_rca=now + analysis,
-                               analysis_seconds=analysis)
+                               analysis_seconds=analysis, t_ready=now)
         stage["assemble"] = time.perf_counter() - t_assemble
         return out

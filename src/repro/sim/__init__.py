@@ -14,6 +14,14 @@ from repro.sim.disturbances import (
 )
 from repro.sim.scenario import (
     Trial, TrialStore, make_trial, run_eval, EvalRecord,
+    N_PER_CLASS, PROTOCOL_CLASSES,
+)
+from repro.sim.scenarios import (
+    FaultEvent, ScenarioTrial, SCENARIO_CLASSES, SCENARIOS,
+    build_suite, compose_trial, make_scenario,
+)
+from repro.sim.scoring import (
+    VerdictEvent, match_events, score_trial, summarize, verdict_events,
 )
 
 __all__ = [
@@ -21,4 +29,9 @@ __all__ = [
     "HostSignalModel", "ChannelModel",
     "Disturbance", "DISTURBANCES", "make_disturbance", "apply_disturbance",
     "Trial", "TrialStore", "make_trial", "run_eval", "EvalRecord",
+    "N_PER_CLASS", "PROTOCOL_CLASSES",
+    "FaultEvent", "ScenarioTrial", "SCENARIO_CLASSES", "SCENARIOS",
+    "build_suite", "compose_trial", "make_scenario",
+    "VerdictEvent", "match_events", "score_trial", "summarize",
+    "verdict_events",
 ]

@@ -32,6 +32,54 @@ from repro.sim.workload import MESSAGE_SIZES, AllReduceWorkload
 LATENCY_CH = "coll_allreduce_ms"
 STEP_CH = "step_latency_ms"
 
+#: the paper's §3 protocol: 17 trials per disturbance class, replayed in
+#: CLASS_ORDER (68 trials total).  THE definition — ``run_eval`` and every
+#: benchmark that reconstructs protocol trials import it from here, so the
+#: scenario suite and the eval cannot drift apart.
+N_PER_CLASS = 17
+PROTOCOL_CLASSES: Sequence[str] = CLASS_ORDER
+
+
+def protocol_seed(seed: int, class_index: int, k: int) -> int:
+    """Per-trial seed of the eval protocol — one definition, used by
+    ``run_eval`` and the scenario suite so instance (seed, ci, k) is
+    reproducible across both."""
+    return seed * 100003 + class_index * 1009 + k
+
+
+def finalize_trial_channels(rng: np.random.Generator, channels: List[str],
+                            data: np.ndarray, mult: np.ndarray,
+                            rate_hz: float,
+                            msg_bytes: Optional[int] = None,
+                            ) -> Tuple[List[str], np.ndarray, int]:
+    """Shared trial-assembly tail for every trial builder.
+
+    Device channels dropped to the 10 Hz NVML cadence (zero-order hold),
+    the W1 all-reduce latency series under the disturbance multiplier, the
+    end-to-end step channel, and the final (C, T) stack.  ``make_trial``
+    and the scenario composer both finish through here, so this half of
+    trial construction cannot drift between the paper protocol and the
+    scenario DSL.  (Same-seed outputs of the two builders still differ:
+    their rng streams diverge earlier — make_trial draws t_on/dur/
+    intensity from the trial rng, the composer takes explicit events.)
+    Returns ``(channels, data, msg_bytes)``.
+    """
+    T = data.shape[1]
+    for i, name in enumerate(channels):
+        if name.startswith("dev_"):
+            k = int(rate_hz // 10)
+            data[i] = np.repeat(data[i][::k], k)[: data.shape[1]]
+    msg = int(msg_bytes if msg_bytes is not None
+              else MESSAGE_SIZES[rng.integers(8, len(MESSAGE_SIZES))])
+    wl = AllReduceWorkload(msg_bytes=msg)
+    L = wl.latency_series(rng, T, multiplier=mult)
+    # end-to-end step latency = collective + compute segment w/ its own noise
+    compute_ms = 18.0 * (1.0 + 0.03 * rng.standard_normal(T))
+    step = L + np.maximum(compute_ms, 0.0)
+    channels = channels + [LATENCY_CH, STEP_CH]
+    data = np.vstack([data, L[None, :], step[None, :]]).astype(np.float64)
+    return channels, data, msg
+
 
 @dataclasses.dataclass
 class Trial:
@@ -77,22 +125,8 @@ def make_trial(seed: int, disturbance: str, *, duration_s: float = 90.0,
         inject_confuser(rng, channels, data, cls, rate_hz, t_on,
                         scale=float(rng.uniform(0.6, 1.4)))
 
-    # device channels are visible only at NVML cadence: 10 Hz zero-order hold
-    for i, name in enumerate(channels):
-        if name.startswith("dev_"):
-            k = int(rate_hz // 10)
-            data[i] = np.repeat(data[i][::k], k)[: data.shape[1]]
-
-    msg = int(msg_bytes if msg_bytes is not None
-              else MESSAGE_SIZES[rng.integers(8, len(MESSAGE_SIZES))])
-    wl = AllReduceWorkload(msg_bytes=msg)
-    L = wl.latency_series(rng, T, multiplier=mult)
-    # end-to-end step latency = collective + compute segment w/ its own noise
-    compute_ms = 18.0 * (1.0 + 0.03 * rng.standard_normal(T))
-    step = L + np.maximum(compute_ms, 0.0)
-
-    channels = channels + [LATENCY_CH, STEP_CH]
-    data = np.vstack([data, L[None, :], step[None, :]]).astype(np.float64)
+    channels, data, msg = finalize_trial_channels(rng, channels, data, mult,
+                                                  rate_hz, msg_bytes)
     return Trial(ts=ts, data=data, channels=channels, truth=dist.kind,
                  t_on=t_on, dur_s=dur, intensity=intensity, msg_bytes=msg)
 
@@ -154,10 +188,10 @@ class EvalRecord:
     wall_seconds: float
 
 
-def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = 17,
+def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = N_PER_CLASS,
              seed: int = 0, duration_s: float = 90.0,
              rate_hz: float = 100.0,
-             classes: Sequence[str] = CLASS_ORDER,
+             classes: Sequence[str] = PROTOCOL_CLASSES,
              batch_events: bool = True) -> List[EvalRecord]:
     """Replay the paper's protocol through every diagnoser.
 
@@ -176,7 +210,7 @@ def run_eval(diagnosers: Sequence[Diagnoser], n_per_class: int = 17,
     trials: List[Trial] = []
     for ci, cls in enumerate(classes):
         for k in range(n_per_class):
-            trial_seed = seed * 100003 + ci * 1009 + k
+            trial_seed = protocol_seed(seed, ci, k)
             trial_seeds.append(trial_seed)
             trials.append(make_trial(trial_seed, cls, duration_s=duration_s,
                                      rate_hz=rate_hz))

@@ -143,6 +143,42 @@ def test_diagnose_clamps_to_accumulated_span_no_backfill_baseline():
     np.testing.assert_array_equal(fd.per_host_scores, ref_fd.per_host_scores)
 
 
+def test_diagnose_late_joiner_not_falsely_flagged():
+    """Mixed valid spans on a quiet fleet: the late joiner's backfilled
+    flat head must never enter the diagnosed slab.  (Max-valid clamping
+    had this hole: the constant backfill hit the sigma floor and flagged
+    the healthy newcomer as a straggler.)"""
+    for seed in (900, 901, 902, 903):
+        trials, agents = _fleet(2, bad_host=-1, seed=seed)   # all quiet
+        agg = FleetAggregator(agents, window_s=30.0)
+        agents[0].run_virtual(0.0, 46.0)
+        agents[1].run_virtual(40.0, 46.0)    # healthy, joined 6 s ago
+        fd = agg.diagnose(FleetMonitor(use_kernels=False), min_valid_s=5.0)
+        assert fd is not None
+        assert fd.flagged_hosts == [], f"seed {seed} falsely flagged"
+        # the joiner is reported masked, not silently "healthy"
+        assert agg.last_snapshot.masked == [1]
+
+
+def test_diagnose_young_host_masked_not_blinding_fleet():
+    """A restarting agent must not blind or narrow the established fleet:
+    hosts younger than ``min_valid_s`` are masked quiet this round while
+    the rest diagnose on their full span."""
+    trials, agents = _fleet(3, bad_host=1, cls="nic", seed=910)
+    agg = FleetAggregator(agents, window_s=30.0)
+    for a in agents[:2]:
+        a.run_virtual(0.0, 46.0)
+    agents[2].run_virtual(43.0, 46.0)    # restarted 3 s ago
+    fd = agg.diagnose(FleetMonitor(use_kernels=False), min_valid_s=10.0)
+    assert fd is not None
+    assert fd.straggler_host == 1        # real straggler still caught
+    assert 2 not in fd.flagged_hosts     # young host quiet, not flagged
+    assert fd.diagnosis.top_cause == CauseClass.NIC
+    # the established hosts kept their full window (span not narrowed)
+    assert agg.last_snapshot.masked == [2]
+    assert agg.stats.masked_hosts == 1
+
+
 def test_diagnose_returns_none_before_enough_telemetry():
     trials, agents = _fleet(2, bad_host=0)
     agg = FleetAggregator(agents, window_s=30.0)

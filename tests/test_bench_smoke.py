@@ -1,5 +1,6 @@
-"""Perf-path regression canary: the three benchmark families (kernel
-microbench, engine sweep, fleet + event-batched eval) at tiny sizes.
+"""Perf-path regression canary: every benchmark family (kernel microbench,
+engine sweep, fleet + event-batched eval, scenario scorecard) at tiny
+sizes.
 
 Marked ``bench_smoke`` so CI can select it (`-m bench_smoke`); it also runs
 in plain tier-1 — the whole module stays well under the 30 s budget of
@@ -53,6 +54,19 @@ def test_live_family_smoke():
     _check(rows, "fleet/live")
     vals = dict((n, v) for n, v, _ in rows)
     assert vals["fleet/live_storm_reads_per_s"] > 0
+
+
+@pytest.mark.bench_smoke
+def test_scorecard_family_smoke():
+    """Tiny scenario-suite scorecard: parity bits exact, soak clean."""
+    from benchmarks import scorecard
+
+    rows = scorecard.smoke_rows()
+    _check(rows, "scorecard/")
+    vals = dict((n, v) for n, v, _ in rows)
+    for key in ("batched_pred", "batched_ts", "slab_pred", "slab_ts"):
+        assert vals[f"scorecard/parity/{key}"] == 1.0
+    assert vals["scorecard/false_verdicts/soak"] == 0.0
 
 
 @pytest.mark.bench_smoke

@@ -1,0 +1,95 @@
+"""Regression gate + protocol-constant hoist: the committed scorecard
+validates, tampering fails, and the eval protocol has ONE definition."""
+import copy
+import inspect
+import json
+import os
+
+import pytest
+
+from benchmarks import diagnostics, fleetbench, regress
+from repro.sim import scenario
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                        "EVAL_scorecard.json")
+
+
+@pytest.fixture(scope="module")
+def committed():
+    with open(ARTIFACT) as f:
+        return json.load(f)
+
+
+def test_committed_scorecard_passes_gate(committed):
+    assert regress.check_scorecard(committed, label="committed") == []
+
+
+def test_committed_scorecard_meets_acceptance(committed):
+    """>= 6 scenario classes with latency percentiles, >= 2 multi-fault,
+    a no-fault soak, and every parity bit exactly 1.0."""
+    scen_doc = committed["scenarios"]
+    with_lat = [n for n, b in scen_doc.items() if b["detect_latency_s"]]
+    assert len(with_lat) >= 6
+    assert sum(1 for b in scen_doc.values() if b.get("multi_fault")) >= 2
+    assert scen_doc["soak"]["n_verdicts"] == 0
+    assert all(v == 1.0 for v in committed["parity"].values())
+    for name in with_lat:
+        assert set(scen_doc[name]["rca_latency_s"]) == {"p50", "p90", "max"}
+
+
+def test_tampered_parity_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["parity"]["batched_ts"] = 0.9
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("parity/batched_ts" in m for m in bad)
+
+
+def test_tampered_soak_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["scenarios"]["soak"]["n_verdicts"] = 1
+    doc["scenarios"]["soak"]["false_verdicts"] = 1
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("soak" in m for m in bad)
+
+
+def test_missing_parity_key_fails(committed):
+    doc = copy.deepcopy(committed)
+    del doc["parity"]["slab_ts"]
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("parity/slab_ts missing" in m for m in bad)
+
+
+def test_missing_class_fails(committed):
+    doc = copy.deepcopy(committed)
+    del doc["scenarios"]["cascade"]
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("cascade" in m for m in bad)
+
+
+def test_check_bench_parity_rows():
+    good = [("fleet/detect_parity/B8", 1.0, ""),
+            ("eval/pred_parity", 1.0, ""),
+            ("eval/store_pred_parity", 1.0, "")]
+    assert regress.check_bench_parity(good) == []
+    bad = regress.check_bench_parity(
+        [("fleet/detect_parity/B8", 0.5, "")] + good[1:])
+    assert any("detect_parity" in m for m in bad)
+    missing = regress.check_bench_parity(good[:2])
+    assert any("store_pred_parity" in m for m in missing)
+
+
+def test_protocol_constants_single_definition():
+    """The 17-per-class protocol exists in exactly one place; the
+    benchmarks reference it instead of restating it."""
+    assert scenario.N_PER_CLASS == 17
+    assert tuple(scenario.PROTOCOL_CLASSES) == ("io", "cpu", "nic", "gpu")
+    sig = inspect.signature(scenario.run_eval)
+    assert sig.parameters["n_per_class"].default == scenario.N_PER_CLASS
+    assert tuple(sig.parameters["classes"].default) == \
+        tuple(scenario.PROTOCOL_CLASSES)
+    # the benchmarks import the constants rather than hard-coding them
+    assert fleetbench.N_PER_CLASS == scenario.N_PER_CLASS
+    assert tuple(fleetbench.PROTOCOL_CLASSES) == \
+        tuple(scenario.PROTOCOL_CLASSES)
+    assert (inspect.signature(diagnostics._records).parameters["n"].default
+            == scenario.N_PER_CLASS)

@@ -1,0 +1,127 @@
+"""Multi-fault scenario generator: timeline shapes, composition, fleet."""
+import numpy as np
+import pytest
+
+from repro.core.engine import CorrelationEngine
+from repro.monitor.fleet import FleetMonitor
+from repro.sim import scenarios as scen
+from repro.sim.disturbances import CLASS_ORDER
+from repro.sim.scenario import TrialStore, make_trial
+
+
+def test_registry_covers_required_classes():
+    # >= 6 classes, incl. >= 2 multi-fault/overlap classes + a no-fault soak
+    assert len(scen.SCENARIO_CLASSES) >= 6
+    assert "soak" in scen.SCENARIO_CLASSES
+    assert "fleet_nic" in scen.SCENARIO_CLASSES
+    multi = [s for s in scen.SCENARIOS.values() if s.multi_fault]
+    assert len(multi) >= 2
+
+
+@pytest.mark.parametrize("name", list(scen.SCENARIOS))
+def test_sampled_timelines_are_well_formed(name):
+    spec = scen.SCENARIOS[name]
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        events = spec.sampler(rng)
+        if name == "soak":
+            assert events == []
+            continue
+        assert all(e.cls in CLASS_ORDER for e in events)
+        assert all(e.intensity > 0 for e in events)
+        # every event fits the scenario duration with detector warm-up room
+        assert all(25.0 < e.t_on and e.t_off < scen.DURATION_S
+                   for e in events)
+        if name == "overlap_pair" or name == "overlap_full":
+            assert len(events) == 2
+            assert events[0].overlaps(events[1])
+            assert events[0].cls != events[1].cls
+        if name == "overlap_full":
+            assert abs(events[0].t_on - events[1].t_on) <= 0.5
+        if name == "cascade":
+            assert len(events) == 3
+            assert len({e.cls for e in events}) == 3
+            srt = sorted(events, key=lambda e: e.t_on)
+            assert all(not a.overlaps(b) for a, b in zip(srt, srt[1:]))
+        if name == "flap":
+            assert len(events) == 3
+            assert len({e.cls for e in events}) == 1
+            srt = sorted(events, key=lambda e: e.t_on)
+            # recurrence spaced past the engine's 15 s cooldown
+            assert all(b.t_on - a.t_off > 15.0 for a, b in zip(srt, srt[1:]))
+
+
+def test_compose_is_deterministic_and_protocol_shaped():
+    ev = [scen.FaultEvent("io", 35.0, 15.0, 1.5)]
+    a = scen.compose_trial(7, ev, duration_s=50.0, scenario="single")
+    b = scen.compose_trial(7, ev, duration_s=50.0, scenario="single")
+    np.testing.assert_array_equal(a.data, b.data)
+    # same channel layout as the paper-protocol trial builder
+    ref = make_trial(7, "io", duration_s=50.0)
+    assert a.channels == ref.channels
+    assert a.data.shape[0] == ref.data.shape[0]
+    assert a.truth == ev
+
+
+def test_compose_multipliers_compound():
+    """Concurrent faults slow the collective more than either alone."""
+    e1 = scen.FaultEvent("io", 30.0, 15.0, 2.0)
+    e2 = scen.FaultEvent("cpu", 33.0, 15.0, 2.0)
+    li = -2  # LATENCY_CH row
+    one = scen.compose_trial(3, [e1], duration_s=60.0, confuser_prob=0.0)
+    both = scen.compose_trial(3, [e1, e2], duration_s=60.0,
+                              confuser_prob=0.0)
+    sl = slice(int(34.0 * 100), int(42.0 * 100))    # both active
+    assert (np.mean(both.data[li, sl]) > np.mean(one.data[li, sl]))
+
+
+def test_suite_stacks_into_trial_store():
+    trials = scen.build_suite(1, seed=5, n_hosts=3, n_affected=2)
+    # one trial per registry class + n_hosts fleet rows
+    assert len(trials) == len(scen.SCENARIOS) + 3
+    store = TrialStore.from_trials(trials)
+    assert store.slab.shape[0] == len(trials)
+    assert store.slab.dtype == np.float32
+    assert store.channels == trials[0].channels
+    by_class = {t.scenario for t in trials}
+    assert by_class == set(scen.SCENARIO_CLASSES)
+
+
+def test_min_duration_enforced():
+    with pytest.raises(ValueError):
+        scen.make_scenario(0, "cascade", duration_s=60.0)
+
+
+def test_fleet_scenario_correlated_burst_and_slab_path():
+    trials = scen.make_scenario(11, "fleet_nic", n_hosts=4, n_affected=2)
+    assert len(trials) == 4
+    # one shared incident id, so a flat suite regroups without seed math
+    assert {t.group for t in trials} == {11}
+    affected = {t.host for t in trials if t.truth}
+    assert len(affected) == 2
+    # the SAME burst on every affected host (cross-host correlation)
+    bursts = [t.truth[0] for t in trials if t.truth]
+    assert all(b == bursts[0] for b in bursts)
+
+    # the fleet monitor, fed the stacked (hosts, C, T) slab clipped just
+    # after the burst, flags exactly the affected hosts and calls NIC
+    burst = bursts[0]
+    t_hi = int((burst.t_on + 6.0) * 100)
+    slab = np.ascontiguousarray(
+        np.stack([t.data[:, :t_hi] for t in trials]), np.float32)
+    fd = FleetMonitor(use_kernels=False).diagnose_fleet(
+        trials[0].ts[:t_hi], slab, trials[0].channels)
+    assert set(fd.flagged_hosts) == affected
+    for h in affected:
+        assert fd.diagnoses[h].top_cause == burst.kind
+        assert fd.diagnoses[h].t_ready is not None
+
+
+def test_single_strong_event_detected_end_to_end():
+    ev = [scen.FaultEvent("nic", 35.0, 15.0, 2.0)]
+    t = scen.compose_trial(9, ev, duration_s=60.0, confuser_prob=0.0)
+    diags = CorrelationEngine().process(t.ts, t.data, t.channels)
+    assert diags, "a clearly-injected fault must be detected"
+    assert diags[0].top_cause == ev[0].kind
+    assert diags[0].t_ready is not None
+    assert diags[0].event.t_detect >= ev[0].t_on

@@ -1,0 +1,145 @@
+"""Operational scoring: nearest-truth matching edge cases, soak behaviour,
+window-edge events, and batched/slab verdict-stream parity."""
+import numpy as np
+
+from repro.core.engine import CorrelationEngine
+from repro.core.taxonomy import CauseClass
+from repro.sim import scenarios as scen
+from repro.sim import scoring
+from repro.sim.scenario import TrialStore
+
+
+def _v(t_onset, pred=CauseClass.NIC, lat=5.0):
+    return scoring.VerdictEvent(t_onset=t_onset, t_detect=t_onset + lat,
+                                t_ready=t_onset + lat + 2.0, pred=pred)
+
+
+def _t(cls, t_on, dur=10.0, intensity=1.5):
+    return scen.FaultEvent(cls, t_on, dur, intensity)
+
+
+# ---------------------------------------------------------------- matcher
+def test_fully_overlapping_truth_single_verdict():
+    """Two events at the same instant, one verdict: exactly one match (the
+    deterministic tie-break), one miss, no spurious verdicts."""
+    truth = [_t("io", 40.0), _t("cpu", 40.1)]
+    m = scoring.match_events(truth, [_v(40.5)])
+    assert len(m.pairs) == 1
+    assert m.pairs[0] == (1, 0)           # nearest truth onset wins
+    assert m.missed == [0]
+    assert m.spurious == []
+
+
+def test_fully_overlapping_truth_two_verdicts_one_to_one():
+    truth = [_t("io", 40.0), _t("cpu", 40.2)]
+    verds = [_v(40.1), _v(40.4)]
+    m = scoring.match_events(truth, verds)
+    assert len(m.pairs) == 2
+    assert {i for i, _ in m.pairs} == {0, 1}
+    assert {j for _, j in m.pairs} == {0, 1}
+    assert not m.missed and not m.spurious
+
+
+def test_nearest_truth_wins():
+    truth = [_t("io", 30.0), _t("cpu", 60.0)]
+    m = scoring.match_events(truth, [_v(58.0)])
+    assert m.pairs == [(1, 0)]
+
+
+def test_out_of_tolerance_verdict_is_spurious():
+    truth = [_t("io", 30.0, dur=10.0)]
+    m = scoring.match_events(truth, [_v(60.0)], tol_s=5.0)
+    assert m.pairs == []
+    assert m.missed == [0]
+    assert m.spurious == [0]
+
+
+def test_verdict_inside_active_span_matches_even_late():
+    """A verdict whose onset estimate lands mid-event (late but inside the
+    widened active span) still matches."""
+    truth = [_t("io", 30.0, dur=20.0)]
+    m = scoring.match_events(truth, [_v(45.0)], tol_s=2.0)
+    assert m.pairs == [(0, 0)]
+
+
+def test_score_trial_latencies_and_accuracy():
+    truth = [_t("nic", 40.0)]
+    verds = [_v(40.5, pred=CauseClass.NIC, lat=4.5)]
+    s = scoring.score_trial(truth, verds)
+    assert s.n_matched == 1 and s.n_correct == 1
+    np.testing.assert_allclose(s.detect_latencies, [5.0])
+    np.testing.assert_allclose(s.rca_latencies, [7.0])
+    agg = scoring.summarize([s])
+    assert agg["precision"] == 1.0 and agg["recall"] == 1.0
+    assert agg["accuracy"] == 1.0
+    assert agg["detect_within_target"] == 1.0
+    assert agg["rca_within_target"] == 1.0
+
+
+def test_summarize_soak_semantics():
+    """No truth: recall/accuracy are null, every verdict is false."""
+    clean = scoring.summarize([scoring.score_trial([], [])])
+    assert clean["false_verdicts"] == 0
+    assert clean["recall"] is None and clean["precision"] is None
+    noisy = scoring.summarize([scoring.score_trial([], [_v(50.0)])])
+    assert noisy["false_verdicts"] == 1
+    assert noisy["precision"] == 0.0
+
+
+# ------------------------------------------------------------- end to end
+def test_soak_produces_zero_verdicts():
+    """The no-fault control: ambient telemetry must not fire the engine."""
+    for seed in (1, 2, 3):
+        t = scen.compose_trial(seed, [], duration_s=90.0, scenario="soak")
+        assert t.truth == []
+        diags = CorrelationEngine().process(t.ts, t.data, t.channels)
+        assert diags == [], f"soak seed {seed} produced a false verdict"
+
+
+def test_event_straddling_trial_edge_scores():
+    """An event whose active window runs past the end of the trial: the
+    pending detection is flushed at the last sample and still matches."""
+    # sustained envelope so the final 5 s window is solidly hot
+    ev = [scen.FaultEvent("cpu", 51.0, 10.0, 2.0)]   # t_off = 61 > 60
+    t = scen.compose_trial(17, ev, duration_s=60.0, confuser_prob=0.0)
+    diags = CorrelationEngine().process(t.ts, t.data, t.channels)
+    assert len(diags) == 1
+    d = diags[0]
+    assert d.t_ready == float(t.ts[-1])     # flushed at the trial edge
+    s = scoring.score_trial(t.truth, scoring.verdict_events(diags))
+    assert s.n_matched == 1
+
+
+def test_batched_and_slab_verdict_streams_identical():
+    """The acceptance invariant: predictions AND timestamps of the
+    event-batched and slab paths match the per-event oracle exactly, on
+    multi-event scenarios."""
+    trials = []
+    for cls in ("overlap_pair", "flap", "soak"):
+        trials += scen.make_scenario(23, cls, confuser_prob=0.15)
+    store = TrialStore.from_trials(trials)
+    eng = CorrelationEngine()
+    rows = store.rows()
+
+    def sig(diags):
+        return [(d.top_cause, d.event.t_onset, d.event.t_detect, d.t_ready)
+                for d in diags]
+
+    oracle = [sig(eng.process(*r)) for r in rows]
+    assert any(len(s) > 1 for s in oracle), "expected a multi-event trial"
+    batched = [sig(ds) for ds in eng.process_batch(rows)]
+    slab = [sig(ds) for ds in
+            eng.process_store(store.ts, store.slab, store.channels)]
+    assert batched == oracle
+    assert slab == oracle
+
+
+def test_verdict_events_prefer_t_ready():
+    ev = [scen.FaultEvent("io", 32.0, 12.0, 2.0)]
+    t = scen.compose_trial(29, ev, duration_s=60.0, confuser_prob=0.0)
+    diags = CorrelationEngine().process(t.ts, t.data, t.channels)
+    assert diags
+    v = scoring.verdict_events(diags)[0]
+    assert v.t_ready == diags[0].t_ready
+    # deterministic virtual stamp: t_rca adds wall clock on top
+    assert diags[0].t_rca >= v.t_ready
