@@ -103,6 +103,98 @@ def sweep_rows(n_trials: int = 8, reps: int = 3,
     return rows
 
 
+# ----------------------------------------------------------- slab sweep bench
+def _event_sig(evs) -> list:
+    """Deterministic signature of one row's (event, rca_index) list."""
+    return [(ev.t_onset, ev.t_detect, ev.score, int(t)) for ev, t in evs]
+
+
+def sweep_slab_rows(n_per_class: int = 4, reps: int = 3,
+                    fleet_hosts: int = 256,
+                    ) -> List[Tuple[str, float, str]]:
+    """Suite-scale Layer-2: per-trial ``detect_events`` loop vs the one-
+    dispatch slab sweep (``detect_events_store``), on the full multi-fault
+    scenario suite (the scorecard's trials), at the boundary cadence and
+    the 10-sample streaming cadence.
+
+    ``eval/sweep_parity`` is the byte-exact invariant CI gates on: the
+    slab path must reproduce the per-row oracle's event sets —
+    ``t_onset`` / ``t_detect`` stamps, scores AND rca indices — across
+    every trial of the suite (cooldown, pending flush and multi-event
+    trials included), at both cadences.  ``fleet/sweep_single_tick``
+    records the fleet-detect reuse of the same sweep core (one tick at
+    the slab edge) against the f64 ``detect_rows`` oracle.
+    """
+    from repro.core.spike import detect_rows
+    from repro.kernels.detect import ops as detect_ops
+    from repro.sim import scenarios as scen
+
+    rows: List[Tuple[str, float, str]] = []
+    trials = scen.build_suite(n_per_class, 41)
+    store = TrialStore.from_trials(trials)
+    parity = 1.0
+    for tag, cfg in (("boundary", EngineConfig()),
+                     ("10ms", EngineConfig(eval_every=10))):
+        eng = CorrelationEngine(cfg)
+
+        def loop():
+            return [eng.detect_events(store.ts, store.slab[i],
+                                      store.channels)
+                    for i in range(len(store))]
+
+        def slab():
+            return eng.detect_events_store(store.ts, store.slab,
+                                           store.channels)
+
+        ref, got = loop(), slab()
+        parity = min(parity, float(
+            [_event_sig(e) for e in ref] == [_event_sig(e) for e in got]))
+        loop_s = _median_wall(loop, reps)
+        slab_s = _median_wall(slab, reps)
+        n_ev = sum(len(e) for e in ref)
+        rows.append((f"eval/sweep_loop_s/{tag}", loop_s,
+                     f"per-trial detect_events loop, {len(store)} trials, "
+                     f"{n_ev} events"))
+        rows.append((f"eval/sweep_slab_s/{tag}", slab_s,
+                     "one batched sweep dispatch + numpy resolve"))
+        rows.append((f"eval/sweep_speedup/{tag}", loop_s / slab_s,
+                     "per-trial loop / slab sweep"))
+    rows.append(("eval/sweep_parity", parity,
+                 "1.0 = slab events byte-exact vs per-row oracle "
+                 "(stamps, scores, rca indices; both cadences)"))
+
+    # fleet reuse: the same sweep core at a single tick IS the streaming
+    # fleet detect — time it on a fleet slab and re-prove detect_rows parity
+    cfg = EngineConfig()
+    wn, bn = cfg.window_n, cfg.baseline_n
+    H = int(fleet_hosts)
+    ts, data, channels = _make_fleet(H, bad_host=H // 2)
+    li = list(channels).index(cfg.latency_metric)
+    T = data.shape[-1]
+    tail = np.ascontiguousarray(data[:, li, T - wn - bn:], np.float32)
+
+    def single_tick():
+        # the CPU deployment path: masked-XLA ref (the Pallas kernel runs
+        # in interpret mode on CPU — a correctness, not a timing, path)
+        return detect_ops.detect_hosts_slab(tail, wn, bn, cfg.threshold,
+                                            cfg.persistence,
+                                            use_kernel=False)
+
+    single_tick()                                          # jit warm-up
+    tick_s = _median_wall(single_tick, reps)
+    fire, _, onset = single_tick()
+    t64 = np.asarray(tail, np.float64)
+    f0, _, o0 = detect_rows(t64[:, bn:], t64[:, :bn], cfg.threshold,
+                            cfg.persistence)
+    rows.append((f"fleet/sweep_single_tick_s/H{H}", tick_s,
+                 "fleet detect through the shared sweep core, one tick"))
+    rows.append((f"fleet/sweep_single_tick_parity/H{H}",
+                 float(np.array_equal(fire, f0)
+                       and np.array_equal(onset, o0)),
+                 "1.0 = fire/onset byte-exact vs f64 detect_rows"))
+    return rows
+
+
 # ---------------------------------------------------------------- fleet bench
 def _make_fleet(n_hosts: int, bad_host: int, seed: int = 0,
                 n_unique: int = 16, cls: str = "nic",

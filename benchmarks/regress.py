@@ -10,8 +10,10 @@ produces zero verdicts.  This gate makes every commit prove them again:
      percentiles finite where events exist;
   2. a fresh tiny run reproduces them on THIS commit's code: the bench
      parity rows (``fleet/detect_parity``, ``eval/pred_parity``,
-     ``eval/store_pred_parity``) and a smoke scorecard with the same
-     class set as the committed artifact.
+     ``eval/store_pred_parity``, and ``eval/sweep_parity`` — the slab
+     detection sweep reproducing the per-row oracle's events and
+     timestamps byte-exactly) and a smoke scorecard with the same class
+     set as the committed artifact.
 
 Exit status is nonzero on any break, with one line per failure.  Usage::
 
@@ -32,6 +34,7 @@ PARITY_ROW_PREFIXES = (
     "fleet/detect_parity",
     "eval/pred_parity",
     "eval/store_pred_parity",
+    "eval/sweep_parity",
 )
 
 #: scorecard parity bits that must be present AND exactly 1.0
@@ -121,6 +124,8 @@ def fresh_failures() -> List[str]:
     rows = fleetbench.fleet_rows(batch_sizes=(8,), reps=1,
                                  sequential_baseline=False)
     rows += fleetbench.eval_rows(n_per_class=1, reps=1)
+    rows += fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
+                                       fleet_hosts=32)
     bad = check_bench_parity(rows)
     doc = scorecard.build_scorecard(n_per_class=1, n_hosts=4, n_affected=2)
     bad += check_scorecard(doc, label="fresh scorecard")

@@ -48,6 +48,8 @@ def smoke() -> list:
                                                detect_h=64))
     rows += _emit(kernelbench.tile_sweep_rows())
     rows += _emit(fleetbench.sweep_rows(n_trials=1, reps=1))
+    rows += _emit(fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
+                                             fleet_hosts=32))
     rows += _emit(fleetbench.fleet_rows(batch_sizes=(16,), reps=1,
                                         sequential_baseline=False))
     rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
@@ -96,6 +98,7 @@ def main() -> None:
         _write_json(os.path.join(args.json_dir, "BENCH_kernels.json"), rows)
     if on("fleet"):
         rows = _emit(fleetbench.sweep_rows())
+        rows += _emit(fleetbench.sweep_slab_rows())
         rows += _emit(fleetbench.fleet_rows())
         rows += _emit(fleetbench.live_rows())
         rows += _emit(fleetbench.eval_rows())

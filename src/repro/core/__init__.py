@@ -10,7 +10,7 @@ Four-layer pipeline (paper Fig 1):
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent, RankedCause
 from repro.core.spike import (
     baseline_stats, spike_score, spike_scores_matrix, detect, detect_rows,
-    detect_sweep, sliding_baseline_stats,
+    detect_sweep, detect_sweep_at, sliding_baseline_stats,
 )
 from repro.core.xcorr import lagged_xcorr, max_abs_xcorr, lagged_xcorr_batch
 from repro.core.confidence import combine_confidence, rank_causes, rank_causes_batch
@@ -23,7 +23,8 @@ from repro.core.baselines import (
 __all__ = [
     "CauseClass", "Diagnosis", "SpikeEvent", "RankedCause",
     "baseline_stats", "spike_score", "spike_scores_matrix", "detect",
-    "detect_rows", "detect_sweep", "sliding_baseline_stats",
+    "detect_rows", "detect_sweep", "detect_sweep_at",
+    "sliding_baseline_stats",
     "lagged_xcorr", "max_abs_xcorr", "lagged_xcorr_batch",
     "combine_confidence", "rank_causes", "rank_causes_batch",
     "CorrelationEngine", "EngineConfig",

@@ -350,32 +350,35 @@ def _relaxed(engine: CorrelationEngine) -> CorrelationEngine:
         sorted(engine.evidence_channels) if engine.evidence_channels is not None else None)
 
 
-def _detect_with_fallback(engine: CorrelationEngine, ts, data, channels):
-    """Layer-2 only counterpart of :func:`_with_forced_fallback`."""
-    events = engine.detect_events(ts, data, channels)
-    if events:
-        return events
-    return _relaxed(engine).detect_events(ts, data, channels)
-
-
 def _first_diagnoses_batched(engine: CorrelationEngine,
                              trials: Sequence[tuple], prep=None):
     """Each trial's first diagnosis (or None), via ONE fused Layer-3
     dispatch across all trials' events.
 
-    Detection (plus the relaxed fallback sweep) still runs per trial —
-    it is the cheap rolling pass — but the per-event ``_diagnose`` replay,
-    which dominates boundary-cadence eval wall time, collapses into a
-    single ``fused_rca_max_ragged`` dispatch with events as rows.  The
-    relaxed fallback shares the dispatch: threshold/persistence do not
-    enter Layer-3 math, so its events batch with the strict ones.
+    Detection is the batched slab sweep (``detect_events_rows``, one
+    dispatch for all trials; trials the strict detector leaves empty get
+    one more batched sweep at the relaxed 2-sigma setting), and the
+    per-event ``_diagnose`` replay, which dominates boundary-cadence eval
+    wall time, collapses into a single ``fused_rca_max_ragged`` dispatch
+    with events as rows.  The relaxed fallback shares that dispatch:
+    threshold/persistence do not enter Layer-3 math, so its events batch
+    with the strict ones.
     """
-    items, owner = [], []
+    prepped = []
     for (ts, data, channels) in trials:
         data = np.asarray(data)
         if prep is not None:
             data = prep(ts, data, channels)
-        events = _detect_with_fallback(engine, ts, data, channels)
+        prepped.append((ts, data, channels))
+    per_trial = engine.detect_events_rows(prepped)
+    empty = [k for k, evs in enumerate(per_trial) if not evs]
+    if empty:
+        relaxed = _relaxed(engine).detect_events_rows(
+            [prepped[k] for k in empty])
+        for k, evs in zip(empty, relaxed):
+            per_trial[k] = evs
+    items, owner = [], []
+    for (ts, data, channels), events in zip(prepped, per_trial):
         if events:
             ev, t = events[0]       # diagnose_trial consumes diags[0]
             owner.append(len(items))
@@ -389,21 +392,28 @@ def _first_diagnoses_batched(engine: CorrelationEngine,
 def _first_diagnoses_store(engine: CorrelationEngine, store, prep=None):
     """Each trial's first diagnosis (or None) over a columnar TrialStore.
 
-    Same structure as :func:`_first_diagnoses_batched` — per-trial
-    detection sweep (with the relaxed fallback), ONE fused Layer-3
-    dispatch — but the evidence gather is slab indexing over the store's
-    contiguous f32 (trials, C, T) array instead of per-event reslicing.
-    ``prep`` (B3's eventizer) transforms each row once, into a second
-    columnar slab, so the gather stays slab-indexed for prepped
+    Same structure as :func:`_first_diagnoses_batched` — batched slab
+    detection sweep (one dispatch for the whole store, one more relaxed
+    sweep over whichever rows stayed empty), ONE fused Layer-3 dispatch —
+    but the evidence gather is slab indexing over the store's contiguous
+    f32 (trials, C, T) array instead of per-event reslicing.  ``prep``
+    (B3's eventizer) transforms each row once, into a second columnar
+    slab, so the sweep and the gather stay slab-shaped for prepped
     diagnosers too.
     """
     slab, ts, channels = store.slab, store.ts, store.channels
     if prep is not None:
         slab = np.stack([prep(ts, slab[i], channels)
                          for i in range(len(store))]).astype(np.float32)
+    per_row = engine.detect_events_store(ts, slab, channels)
+    empty = [i for i, evs in enumerate(per_row) if not evs]
+    if empty:
+        relaxed = _relaxed(engine).detect_events_store(ts, slab, channels,
+                                                       rows=empty)
+        for i, evs in zip(empty, relaxed):
+            per_row[i] = evs
     events, owner = [], []
-    for i in range(len(store)):
-        evs = _detect_with_fallback(engine, ts, slab[i], channels)
+    for i, evs in enumerate(per_row):
         if evs:
             ev, t = evs[0]          # diagnose_trial consumes diags[0]
             owner.append(len(events))

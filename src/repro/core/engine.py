@@ -15,7 +15,12 @@ Time accounting matches the paper's metrics:
 The full-trial replay (``process``) evaluates every cadence tick from one
 vectorized prefix-sum pass (``spike.detect_sweep``) instead of re-slicing
 the 2,500-sample baseline at every tick; ``fast=False`` keeps the original
-scalar per-tick path as the parity oracle.
+scalar per-tick path as the parity oracle.  At suite scale the per-trial
+sweep itself batches: ``detect_events_slab`` / ``detect_events_store`` /
+``detect_events_rows`` run Layer 2 for ALL rows of a (trials, C, T) slab
+in one batched sweep (kernels/sweep) and replay the cooldown/pending
+state machine over the precomputed decisions — byte-exact against the
+per-row path, which remains the oracle.
 """
 from __future__ import annotations
 
@@ -238,6 +243,215 @@ class CorrelationEngine:
             out.append((pending, T - 1))
         return out
 
+    # ------------------------------------------------- suite-scale Layer 2
+    @staticmethod
+    def _resolve_row(ts: np.ndarray, ticks: np.ndarray, fire_row: np.ndarray,
+                     nt_r: int, T_r: int, rca_n: int, cooldown_s: float,
+                     ) -> List[Tuple[int, int]]:
+        """Replay :meth:`detect_events`' cooldown/pending state machine over
+        one row's precomputed tick decisions — jumping fired tick to fired
+        tick instead of walking every tick.
+
+        The stateful machinery consults only the per-tick decisions: a
+        pending event matures at the first tick past its accumulation
+        index (detection is allowed again at that same tick), fired ticks
+        inside the cooldown or a pending span are skipped, and a pending
+        event at row end flushes with whatever data exists.  Returns
+        ``(tick_index, rca_sample_index)`` pairs in maturation order —
+        exactly the per-row loop's output order.
+        """
+        hits = np.flatnonzero(fire_row[:nt_r])
+        out: List[Tuple[int, int]] = []
+        last = -np.inf
+        k = 0
+        while k < hits.size:
+            i = int(hits[k])
+            t = int(ticks[i])
+            now = float(ts[t])
+            if now - last < cooldown_s:
+                k += 1
+                continue
+            rca_at = t + rca_n
+            # maturation happens at the top of a LATER tick's iteration,
+            # so the first eligible tick is strictly after i even when
+            # rca_n is 0 (otherwise a zero-accumulation config would
+            # re-emit the same tick forever, where the oracle advances)
+            j = max(int(np.searchsorted(ticks[:nt_r], rca_at)), i + 1)
+            if j >= nt_r:           # pending past the last tick: end flush
+                out.append((i, T_r - 1))
+                break
+            out.append((i, min(rca_at, T_r - 1)))
+            last = now
+            k = int(np.searchsorted(hits, j))
+        return out
+
+    def _sweep_events(self, ts: np.ndarray, lat64: np.ndarray,
+                      valid_n: Optional[np.ndarray] = None,
+                      use_kernel: bool = False,
+                      ) -> List[List[Tuple[SpikeEvent, int]]]:
+        """Shared slab-sweep core: ONE batched Layer-2 sweep over the
+        (rows, T) latency slab + a numpy resolve per row.
+
+        The rolling baseline moments are computed once for the whole slab
+        in exact f64 — bitwise the per-row oracle's — and the default CPU
+        path is the score-screened exact sweep
+        (``sweep_ops.sweep_rows_exact``): decisions, onsets and scores are
+        byte-identical to the per-row ``detect_events`` oracle *by
+        construction*.  ``use_kernel=True`` dispatches the f32 Pallas
+        sweep instead and re-decides its epsilon-marginal ticks / resolved
+        detection scores through the same f64 moments
+        (``spike.detect_sweep_at``), so the kernel path is byte-exact
+        too: decisions provably agree off the guard band, and on it the
+        oracle itself decides.
+        """
+        from repro.kernels.sweep import ops as sweep_ops
+
+        cfg = self.cfg
+        lat64 = np.asarray(lat64, dtype=np.float64)
+        R, T = lat64.shape
+        wn, bn = cfg.window_n, cfg.baseline_n
+        rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
+        cadence = cfg.eval_every if cfg.eval_every > 0 else wn
+        ticks = np.arange(wn + bn, T, cadence)
+        if ticks.size == 0:
+            return [[] for _ in range(R)]
+        mu64, sd64 = sweep_ops.rolling_moments(lat64, ticks, wn, bn, valid_n)
+
+        def row64(r: int) -> np.ndarray:
+            return (lat64[r] if valid_n is None
+                    else lat64[r, :int(valid_n[r])])
+
+        if use_kernel:
+            # the f32 dispatch slab is only staged on the kernel path —
+            # an f32 source round-trips f64->f32 bit-identically
+            fire, score, onset, marg = sweep_ops.sweep_rows(
+                np.ascontiguousarray(lat64, np.float32), wn, bn, ticks,
+                cfg.threshold, cfg.persistence, valid_n=valid_n,
+                moments=(mu64, sd64), use_kernel=True)
+            for r in np.flatnonzero(marg.any(axis=1)):
+                m = marg[r]
+                f2, s2, o2 = spike_mod.detect_sweep_at(
+                    row64(r), wn, ticks[m], mu64[r, m], sd64[r, m],
+                    cfg.threshold, cfg.persistence)
+                fire[r, m], score[r, m], onset[r, m] = f2, s2, o2
+        else:
+            fire, score, onset = sweep_ops.sweep_rows_exact(
+                lat64, wn, bn, ticks, cfg.threshold, cfg.persistence,
+                valid_n=valid_n, moments=(mu64, sd64))
+
+        out: List[List[Tuple[SpikeEvent, int]]] = []
+        for r in range(R):
+            T_r = T if valid_n is None else int(valid_n[r])
+            # the oracle's tick grid for a row ending at T_r is
+            # arange(t0, T_r, cadence) — strictly below T_r, so a ragged
+            # row must not be evaluated at a tick landing exactly on its
+            # valid length (the sweep's <= masking is the detect_sweep
+            # range convention, wider than the event grid)
+            nt_r = int(np.searchsorted(ticks, T_r, side="left"))
+            resolved = self._resolve_row(ts, ticks, fire[r], nt_r, T_r,
+                                         rca_n, cfg.cooldown_s)
+            if not resolved:
+                out.append([])
+                continue
+            if use_kernel:
+                # stamp the oracle's f64 scores at the detection ticks
+                # (the decisions there are already exact; the f32 max-z
+                # value itself still carries rounding unless recomputed)
+                det = np.asarray([i for i, _ in resolved], np.intp)
+                _, s64, _ = spike_mod.detect_sweep_at(
+                    row64(r), wn, ticks[det], mu64[r, det], sd64[r, det],
+                    cfg.threshold, cfg.persistence)
+                scores = [float(s) for s in s64]
+            else:
+                scores = [float(score[r, i]) for i, _ in resolved]
+            evs: List[Tuple[SpikeEvent, int]] = []
+            for k, (i, rca) in enumerate(resolved):
+                t = int(ticks[i])
+                evs.append((SpikeEvent(
+                    t_onset=float(ts[t - wn + int(onset[r, i])]),
+                    t_detect=float(ts[t]), score=scores[k],
+                    metric=cfg.latency_metric), rca))
+            out.append(evs)
+        return out
+
+    def detect_events_store(self, ts: np.ndarray, slab: np.ndarray,
+                            channels: Sequence[str],
+                            rows: Optional[Sequence[int]] = None,
+                            valid_n: Optional[np.ndarray] = None,
+                            use_kernel: bool = False,
+                            ) -> List[List[Tuple[SpikeEvent, int]]]:
+        """Per-row :meth:`detect_events` over a columnar (trials, C, T)
+        slab — ONE batched sweep dispatch instead of a python loop of
+        per-row sweeps.
+
+        Returns one ``(event, rca_index)`` list per selected row (all rows
+        when ``rows`` is None), byte-exact against calling
+        :meth:`detect_events` on each row view: same events, same
+        ``t_onset`` / ``t_detect`` stamps, same scores, same rca indices.
+        ``valid_n`` marks ragged per-row valid lengths (a row is evaluated
+        as if it ended there); ``use_kernel`` dispatches the Pallas sweep
+        kernel instead of the masked-XLA reference.
+        """
+        cfg = self.cfg
+        channels = list(channels)
+        if cfg.latency_metric not in channels:
+            raise ValueError(f"latency channel {cfg.latency_metric!r} not present")
+        if slab.ndim != 3 or slab.shape[1] != len(channels) \
+                or slab.shape[2] != ts.shape[0]:
+            raise ValueError(f"slab {slab.shape} vs channels {len(channels)}"
+                             f" x T {ts.shape[0]}")
+        li = channels.index(cfg.latency_metric)
+        if rows is None:
+            lat = slab[:, li, :]
+        else:
+            lat = slab[np.asarray(list(rows), np.intp), li, :]
+        return self._sweep_events(ts, lat, valid_n=valid_n,
+                                  use_kernel=use_kernel)
+
+    def detect_events_slab(self, ts: np.ndarray, slab: np.ndarray,
+                           channels: Sequence[str], use_kernel: bool = False,
+                           ) -> List[Tuple[int, SpikeEvent, int]]:
+        """Every event of every slab row from one sweep dispatch + one
+        resolve pass, as ``(row, event, rca_index)`` triples in row-major
+        time order — the suite-scale counterpart of per-trial
+        :meth:`detect_events`, byte-exact against it (same stamps, same
+        scores; the per-row path is kept as the parity oracle)."""
+        per_row = self.detect_events_store(ts, slab, channels,
+                                           use_kernel=use_kernel)
+        return [(r, ev, t) for r, evs in enumerate(per_row)
+                for (ev, t) in evs]
+
+    def detect_events_rows(self, trials: Sequence[tuple],
+                           use_kernel: bool = False,
+                           ) -> List[List[Tuple[SpikeEvent, int]]]:
+        """:meth:`detect_events` over many ``(ts, data, channels)`` trials,
+        batched through the slab sweep.
+
+        Trials sharing a (channels, grid) layout are stacked — latency
+        rows only — into one f32 slab per group and swept in one dispatch;
+        a layout singleton costs the same one dispatch.  Byte-exact
+        against the per-trial loop (the f64 guard re-decides against each
+        trial's own series, so the f32 staging cannot shift a decision).
+        """
+        out: List[Optional[list]] = [None] * len(trials)
+        groups: Dict[tuple, List[int]] = {}
+        for k, (ts, data, channels) in enumerate(trials):
+            # the whole grid is part of the key — trials sharing endpoints
+            # but not interior timestamps must not inherit another
+            # trial's clock for event stamps and cooldown math
+            key = (tuple(channels), ts.shape[0],
+                   hash(np.ascontiguousarray(ts).tobytes()))
+            groups.setdefault(key, []).append(k)
+        for (chans, _, _), idxs in groups.items():
+            ts = trials[idxs[0]][0]
+            li = list(chans).index(self.cfg.latency_metric)
+            lat64 = np.stack([np.asarray(trials[k][1][li], np.float64)
+                              for k in idxs])
+            evs = self._sweep_events(ts, lat64, use_kernel=use_kernel)
+            for k, e in zip(idxs, evs):
+                out[k] = e
+        return out
+
     def process(self, ts: np.ndarray, data: np.ndarray,
                 channels: Sequence[str], fast: bool = True) -> List[Diagnosis]:
         """Run the engine over a full trial; returns diagnoses in time order.
@@ -263,17 +477,25 @@ class CorrelationEngine:
         their events.
 
         ``trials`` is ``(ts, data, channels)`` tuples.  The Layer-2 sweep
-        runs per trial exactly as :meth:`process` would (same cooldown /
-        pending machinery, so every event's ``t_onset`` / ``t_detect`` /
-        ``t_ready`` stamps are identical), then every pending event of
-        every trial is stacked as a row into ONE fused Layer-3 dispatch
-        (:meth:`diagnose_events_batch`).  Returns one time-ordered
-        diagnosis list per trial — the multi-fault scenario scorer consumes
-        this to check batched-vs-per-event verdict parity.
+        runs as ONE batched slab dispatch over all trials' latency rows
+        (:meth:`detect_events_rows` — byte-exact vs the per-trial loop:
+        same cooldown / pending machinery consulting the same decisions,
+        so every event's ``t_onset`` / ``t_detect`` / ``t_ready`` stamps
+        are identical), then every pending event of every trial is
+        stacked as a row into ONE fused Layer-3 dispatch
+        (:meth:`diagnose_events_batch`).  ``fast=False`` replays the
+        scalar per-tick sweep per trial (the parity oracle).  Returns one
+        time-ordered diagnosis list per trial — the multi-fault scenario
+        scorer consumes this to check batched-vs-per-event verdict parity.
         """
         items, owner = [], []
+        if fast:
+            per_trial = self.detect_events_rows(trials)
+        else:
+            per_trial = [self.detect_events(ts, data, channels, fast=False)
+                         for (ts, data, channels) in trials]
         for k, (ts, data, channels) in enumerate(trials):
-            for ev, t in self.detect_events(ts, data, channels, fast=fast):
+            for ev, t in per_trial[k]:
                 owner.append(k)
                 items.append((ts, data, list(channels), t, ev))
         diags = self.diagnose_events_batch(items, use_kernel=use_kernel)
@@ -288,17 +510,24 @@ class CorrelationEngine:
         """:meth:`process_batch` over a columnar trial slab.
 
         ``slab`` is the (trials, C, T) f32 store layout (see
-        ``sim.scenario.TrialStore``); detection sweeps each row view, the
-        Layer-3 evidence gather is slab indexing
-        (:meth:`diagnose_events_slab`).  Returns one time-ordered diagnosis
-        list per slab row.
+        ``sim.scenario.TrialStore``); detection is ONE batched sweep over
+        the latency rows + one resolve pass
+        (:meth:`detect_events_slab` — ``fast=False`` keeps the per-row
+        scalar replay as the parity oracle), the Layer-3 evidence gather
+        is slab indexing (:meth:`diagnose_events_slab`).  Returns one
+        time-ordered diagnosis list per slab row.
         """
         events, owner = [], []
-        for i in range(slab.shape[0]):
-            for ev, t in self.detect_events(ts, slab[i], channels,
-                                            fast=fast):
+        if fast:
+            for i, ev, t in self.detect_events_slab(ts, slab, channels):
                 owner.append(i)
                 events.append((i, t, ev))
+        else:
+            for i in range(slab.shape[0]):
+                for ev, t in self.detect_events(ts, slab[i], channels,
+                                                fast=False):
+                    owner.append(i)
+                    events.append((i, t, ev))
         diags = self.diagnose_events_slab(ts, slab, channels, events,
                                           use_kernel=use_kernel)
         out: List[List[Diagnosis]] = [[] for _ in range(slab.shape[0])]

@@ -21,6 +21,11 @@ SIGMA_FLOOR_ABS = 1e-9
 #: f32 -inf surrogate the kernels use to mask padded lanes out of max/argmax
 #: reductions — one definition so every kernel/ref pair stays in sync.
 MASK_NEG = -3.4e38
+#: evaluation ticks per ``detect_sweep`` chunk — bounds the (#ticks, wn)
+#: z materialization at streaming cadence (a 10-sample-tick sweep over a
+#: long trial would otherwise allocate the full matrix at once); chunking
+#: is bitwise-invisible because every tick's decision is independent.
+SWEEP_TICK_CHUNK = 1024
 
 
 def baseline_stats(baseline: np.ndarray) -> Tuple[float, float]:
@@ -61,7 +66,13 @@ def detect(window: np.ndarray, baseline: np.ndarray,
 
     Returns ``(is_spike, score, onset_index)`` where ``onset_index`` is the
     first sample in ``window`` whose z-score exceeds the threshold (the
-    engine converts it to an onset timestamp).
+    engine converts it to an onset timestamp).  When no sample crosses,
+    ``onset_index`` is ``None`` — the streaming engine has nothing to
+    timestamp.  This deliberately differs from :func:`detect_rows`, whose
+    fleet-monitor convention falls back to the arg-max-z sample so marginal
+    hosts still carry a timestamp estimate; the batched sweep kernels
+    (:mod:`repro.kernels.sweep`) expose both conventions behind an explicit
+    flag so neither caller can drift.
     """
     mu, sigma = baseline_stats(baseline)
     x = np.asarray(window, dtype=np.float64)
@@ -134,10 +145,45 @@ def detect_sweep(x: np.ndarray, window_n: int, baseline_n: int,
     else:  # empty baseline: scalar baseline_stats() convention
         mu = np.zeros(nt)
         sigma = np.full(nt, SIGMA_FLOOR_ABS)
-    # one strided view: row i is the observation window ending at ticks[i];
-    # z is materialized so comparisons round exactly like the scalar path
+    # strided view: row i is the observation window ending at ticks[i];
+    # z is materialized so comparisons round exactly like the scalar path,
+    # but only SWEEP_TICK_CHUNK ticks at a time — per-tick decisions are
+    # independent, so chunking bounds peak memory without changing a bit
+    Wall = np.lib.stride_tricks.sliding_window_view(x, wn)
+    fire = np.empty(nt, bool)
+    score = np.empty(nt)
+    onset = np.empty(nt, np.intp)
+    for lo in range(0, nt, SWEEP_TICK_CHUNK):
+        sl = slice(lo, min(lo + SWEEP_TICK_CHUNK, nt))
+        z = (Wall[ticks[sl] - wn] - mu[sl, None]) / sigma[sl, None]
+        score[sl] = z.max(axis=1)
+        hot = z > threshold
+        frac = hot.mean(axis=1)
+        fire[sl] = (score[sl] > threshold) & (frac >= persistence)
+        onset[sl] = np.where(hot.any(axis=1), hot.argmax(axis=1), -1)
+    return fire, score, onset
+
+
+def detect_sweep_at(x: np.ndarray, window_n: int, ticks: np.ndarray,
+                    mu: np.ndarray, sigma: np.ndarray,
+                    threshold: float = DEFAULT_THRESHOLD,
+                    persistence: float = 0.0,
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """:func:`detect_sweep`'s per-tick decision at given ticks against
+    *given* baseline moments — bitwise the same z / score / fire / onset
+    math, without re-running the prefix-sum pass.
+
+    The batched slab sweep uses this to re-decide its epsilon-marginal
+    ticks and to stamp exact f64 scores at detection ticks: the rolling
+    (mu, sigma) are already computed once for the whole slab
+    (``kernels.sweep.ops.rolling_moments``), so an exactness fix-up
+    costs O(#ticks * wn), not another O(T) pass per row.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    ticks = np.asarray(ticks, dtype=np.intp)
+    wn = int(window_n)
     W = np.lib.stride_tricks.sliding_window_view(x, wn)[ticks - wn]
-    z = (W - mu[:, None]) / sigma[:, None]
+    z = (W - np.asarray(mu)[:, None]) / np.asarray(sigma)[:, None]
     score = z.max(axis=1)
     hot = z > threshold
     frac = hot.mean(axis=1)
@@ -157,6 +203,14 @@ def detect_rows(windows: np.ndarray, baselines: np.ndarray,
     max-z, persistence fraction).  ``onset`` is the first above-threshold
     sample, falling back to the arg-max z when no sample crosses — the
     fleet monitor wants a timestamp estimate even for marginal rows.
+
+    The fallback is a *deliberate divergence* from :func:`detect`, which
+    returns ``None`` when nothing crosses (the streaming engine only
+    timestamps real detections; a fleet operator triaging a near-threshold
+    host wants the most-suspicious instant regardless).  The sweep kernels
+    (:mod:`repro.kernels.sweep`) reproduce whichever convention the caller
+    selects via ``argmax_fallback`` — pinned by tests so neither this
+    function nor the kernels can drift against :func:`detect`.
     """
     w = np.asarray(windows, dtype=np.float64)
     b = np.asarray(baselines, dtype=np.float64)

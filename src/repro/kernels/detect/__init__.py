@@ -1,5 +1,8 @@
-"""Streaming fleet-detect kernel: spike score + persistence gate + onset
-in one pass over the (hosts, window) latency slab."""
-from repro.kernels.detect.ops import detect_hosts, persistence_count
+"""Streaming fleet-detect: spike score + persistence gate + onset in one
+pass over the (hosts, window) latency slab — since PR 5 a single-tick view
+of the shared batched sweep core (:mod:`repro.kernels.sweep`)."""
+from repro.kernels.detect.ops import (
+    detect_hosts, detect_hosts_slab, persistence_count,
+)
 
-__all__ = ["detect_hosts", "persistence_count"]
+__all__ = ["detect_hosts", "detect_hosts_slab", "persistence_count"]

@@ -1,111 +1,121 @@
-"""Jit'd public wrapper for the streaming fleet-detect kernel.
+"""Streaming fleet detect = the batched Layer-2 sweep at a single tick.
 
 This is the ``diagnose_fleet`` Layer-2 hot path: ONE dispatch over the
-(hosts, wn) latency slab yields, per host, the spike score, the
-persistence-gated straggler decision, and the onset estimate — the seed
-needed a spike-kernel dispatch plus an f64 re-slice + scalar-rule
-``detect_rows`` replay over the candidates for the same three outputs.
+(hosts, bn + wn) trailing latency slab yields, per host, the spike score,
+the persistence-gated straggler decision, and the onset estimate.  Since
+PR 5 the implementation IS :mod:`repro.kernels.sweep` — the fleet's
+boundary evaluation is the suite sweep with one evaluation tick at the
+slab edge and the ``detect_rows`` arg-max onset fallback — so the fleet
+and the eval no longer maintain two sweep kernels.
+
+Exactness: baseline moments are computed here in f64 exactly as
+:func:`repro.core.spike.detect_rows` does (direct mean/std + sigma
+floor), and any host whose window holds a z within the sweep's epsilon
+guard of the threshold is re-decided through the f64 oracle — the
+fast-path flagged set and onsets are byte-exact against ``detect_rows``
+by construction, not merely on the tested slabs.
 """
 from __future__ import annotations
 
-import functools
+from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.detect.detect import detect_hosts_pallas
-from repro.kernels.detect.ref import detect_hosts_ref
+from repro.core import spike as spike_mod
+from repro.kernels.sweep import ops as sweep_ops
+from repro.kernels.sweep.ops import persistence_count  # re-export (tests/API)
+
+__all__ = ["detect_hosts", "detect_hosts_slab", "persistence_count"]
 
 
-def persistence_count(n: int, persistence: float) -> int:
-    """Smallest integer c with ``c / n >= persistence`` in f64.
+def _detect_tail(tail32: np.ndarray, patch_win: np.ndarray,
+                 patch_base: np.ndarray, wn: int, bn: int,
+                 threshold: float, persistence: float,
+                 use_kernel: bool, interpret: bool, exact: bool,
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Single-tick sweep over the (H, bn + wn) trailing slab.
 
-    The scalar rule (:func:`repro.core.spike.detect_rows`) gates on
-    ``hot.mean() >= persistence`` computed in f64; comparing an f32
-    fraction against the f64 threshold can flip exactly at the boundary
-    count, so the kernel gates on the integer count instead — decided
-    here, once, in exact f64.
+    ``patch_win``/``patch_base`` are the caller's original (H, Nw)/(H, Nb)
+    arrays, any dtype — only epsilon-marginal rows are ever upcast from
+    them for the exact ``detect_rows`` re-decision.
     """
-    n = int(n)
-    if n <= 0 or persistence <= 0.0:
-        return 0
-    c = min(int(np.ceil(persistence * n)), n)
-    while c > 0 and (c - 1) / n >= persistence:
-        c -= 1
-    while c <= n and c / n < persistence:
-        c += 1
-    return c
-
-
-def _pad128(x: jax.Array, axis: int) -> jax.Array:
-    pad = (-x.shape[axis]) % 128
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "threshold", "min_hot", "use_kernel", "interpret"))
-def _detect_hosts_jit(windows, baselines, threshold, min_hot,
-                      use_kernel, interpret):
-    if not use_kernel:
-        return detect_hosts_ref(windows, baselines, threshold, min_hot)
-    nw, nb = windows.shape[-1], baselines.shape[-1]
-    w = _pad128(windows.astype(jnp.float32), 1)
-    b = _pad128(baselines.astype(jnp.float32), 1)
-    return detect_hosts_pallas(w, b, threshold, min_hot,
-                               nw_valid=nw, nb_valid=nb, interpret=interpret)
-
-
+    H, T = tail32.shape
+    # detect_rows' f64 moments, bit for bit: accumulating the f32 rows in
+    # f64 (dtype=) adds each exactly-representable element in the same
+    # pairwise order as upcasting first, without the (H, Nb) f64 copies
+    mu = patch_base.mean(axis=1, dtype=np.float64)
+    sd = np.maximum(patch_base.std(axis=1, dtype=np.float64),
+                    np.maximum(spike_mod.SIGMA_FLOOR_ABS,
+                               spike_mod.SIGMA_FLOOR_REL * np.abs(mu)))
+    ticks = np.array([T], np.int64)
+    fire, score, onset, marg = sweep_ops.sweep_rows(
+        tail32, wn, bn, ticks, threshold, persistence,
+        moments=(mu[:, None], sd[:, None]), argmax_fallback=True,
+        use_kernel=use_kernel, interpret=interpret)
+    fire, score, onset, marg = (fire[:, 0], score[:, 0], onset[:, 0],
+                                marg[:, 0])
+    if exact and marg.any():
+        # guard band hit: re-decide those hosts through the f64 oracle so
+        # the fast path cannot split from detect_rows at the threshold
+        rows = np.flatnonzero(marg)
+        f2, s2, o2 = spike_mod.detect_rows(
+            np.asarray(patch_win[rows], np.float64),
+            np.asarray(patch_base[rows], np.float64),
+            threshold, persistence)
+        fire[rows], score[rows], onset[rows] = f2, s2, o2
+    return fire, score, onset
 
 
 def detect_hosts(windows, baselines, threshold: float = 3.0,
                  persistence: float = 0.0, use_kernel: bool = True,
-                 interpret: bool = True,
-                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+                 interpret: bool = True, exact: bool = True,
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched Layer-2 decision per host row, one dispatch.
 
     ``windows`` (H, Nw) vs ``baselines`` (H, Nb) -> ``(fire, score, onset)``
     numpy arrays of length H: fire is the full scalar :func:`spike.detect`
     rule (max-z above threshold AND >= ``persistence`` of the window hot),
     onset the first above-threshold sample with arg-max z fallback —
-    exactly :func:`repro.core.spike.detect_rows`, f32, without the
+    exactly :func:`repro.core.spike.detect_rows` (``exact=True`` makes the
+    agreement byte-exact via the marginality guard), without the
     intermediate (H, Nw) z materialization in host memory.
     """
-    windows = jnp.asarray(windows)
-    baselines = jnp.asarray(baselines)
+    windows = np.asarray(windows)
+    baselines = np.asarray(baselines)
     if windows.ndim != 2 or baselines.ndim != 2 \
             or windows.shape[0] != baselines.shape[0]:
         raise ValueError(f"shape mismatch: windows {windows.shape} "
                          f"baselines {baselines.shape}")
-    min_hot = persistence_count(windows.shape[-1], persistence)
-    fire, score, onset = _detect_hosts_jit(
-        windows, baselines, float(threshold), min_hot,
-        bool(use_kernel), bool(interpret))
-    return (np.asarray(fire).astype(bool), np.asarray(score),
-            np.asarray(onset).astype(np.intp))
+    wn, bn = windows.shape[1], baselines.shape[1]
+    tail32 = np.concatenate([np.asarray(baselines, np.float32),
+                             np.asarray(windows, np.float32)], axis=1)
+    fire, score, onset = _detect_tail(
+        tail32, windows, baselines, wn, bn, float(threshold),
+        float(persistence), bool(use_kernel), bool(interpret), bool(exact))
+    return fire.astype(bool), score, onset.astype(np.intp)
 
 
 def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
                       persistence: float = 0.0, use_kernel: bool = True,
-                      interpret: bool = True,
-                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+                      interpret: bool = True, exact: bool = True,
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """:func:`detect_hosts` over a trailing latency slab.
 
     ``tail`` is the (H, bn + wn) slab — baseline columns then window
-    columns, exactly the layout of a trailing ring snapshot.  The split
-    is materialized host-side as two contiguous f32 blocks: jax aliases
-    aligned contiguous f32 numpy on CPU (zero-copy), whereas handing it a
-    strided slab view takes a slow elementwise transfer path, and
-    slicing inside the jit re-materializes both halves on device.
+    columns, exactly the layout of a trailing ring snapshot — staged as
+    ONE contiguous f32 block (jax aliases aligned contiguous f32 numpy on
+    CPU zero-copy, whereas a strided slab view takes the slow elementwise
+    transfer path).
     """
     tail = np.asarray(tail)
     if tail.ndim != 2 or tail.shape[-1] != wn + bn:
         raise ValueError(f"tail {tail.shape} vs bn+wn={bn + wn}")
-    win = np.ascontiguousarray(tail[:, bn:], dtype=np.float32)
-    base = np.ascontiguousarray(tail[:, :bn], dtype=np.float32)
-    return detect_hosts(win, base, threshold, persistence,
-                        use_kernel=use_kernel, interpret=interpret)
+    tail32 = np.ascontiguousarray(tail, np.float32)
+    # the exact re-decision must see the caller's values, not the f32
+    # staging — only a genuinely-f32 tail may reuse the staged copy
+    patch = tail32 if tail.dtype == np.float32 else tail
+    fire, score, onset = _detect_tail(
+        tail32, patch[:, bn:], patch[:, :bn], int(wn), int(bn),
+        float(threshold), float(persistence), bool(use_kernel),
+        bool(interpret), bool(exact))
+    return fire.astype(bool), score, onset.astype(np.intp)

@@ -1,0 +1,7 @@
+"""Suite-scale Layer-2 sweep: per-tick (fire, score, onset) for every row
+of an f32 (rows, T) latency slab in ONE dispatch."""
+from repro.kernels.sweep.ops import (
+    SWEEP_GUARD_EPS, persistence_count, sweep_rows,
+)
+
+__all__ = ["SWEEP_GUARD_EPS", "persistence_count", "sweep_rows"]

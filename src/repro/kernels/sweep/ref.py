@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the batched Layer-2 sweep kernel.
+
+Same per-tick math as :func:`repro.core.spike.detect_sweep` — z against
+precomputed rolling baseline moments, max-z score, integer persistence
+count, first-hot onset — in f32 over ALL rows of the latency slab at once.
+This is the XLA path the CPU eval times, and the AD-friendly path.
+
+Peak memory is bounded: the (rows, #ticks, wn) z-block never exists — a
+``lax.map`` over tick blocks materializes at most (rows, block_t, wn) per
+step, the tick-blocked structure the Pallas kernel mirrors as its grid.
+
+Baseline moments arrive as *inputs* (``mu``/``sd``, (rows, #ticks)): the
+ops layer computes them host-side in f64 with the prefix-sum trick
+(``ops.rolling_moments`` — the oracle's own
+:func:`repro.core.spike.sliding_baseline_stats` per row tile) and
+downcasts.  Keeping the O(rows * T) rolling pass exact and off-kernel is
+what makes the f32 sweep's decisions agree with the f64 oracle to within
+the epsilon guard (see ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spike import MASK_NEG as NEG
+
+
+def _tick_block(x, mu_b, sd_b, t_b, ok_b, valid_n, wn: int, threshold: float,
+                min_hot: int, eps: float, argmax_fallback: bool):
+    """Decisions for one tick block.
+
+    x (R, T) f32; mu_b/sd_b (R, bt); t_b (bt,) i32 tick sample indices;
+    ok_b (bt,) bool padding mask; valid_n (R,) i32 per-row valid lengths.
+    Returns (fire bool, score f32, onset i32, marginal bool), each (R, bt).
+    """
+    idx = jnp.arange(wn, dtype=jnp.int32)
+    cols = t_b[:, None] - wn + idx[None, :]                    # (bt, wn)
+    W = jnp.take(x, cols, axis=1)                              # (R, bt, wn)
+    tick_ok = ok_b[None, :] & (t_b[None, :] <= valid_n[:, None])
+    z = (W - mu_b[..., None]) / sd_b[..., None]
+    zm = jnp.where(tick_ok[..., None], z, NEG)
+    score = jnp.max(zm, axis=-1)
+    hot = zm > threshold
+    cnt = jnp.sum(hot.astype(jnp.int32), axis=-1)
+    fire = (score > threshold) & (cnt >= min_hot) & tick_ok
+    first_hot = jnp.min(jnp.where(hot, idx[None, None, :], wn), axis=-1)
+    if argmax_fallback:
+        none = jnp.argmax(zm, axis=-1).astype(jnp.int32)
+    else:
+        none = jnp.full(cnt.shape, -1, jnp.int32)
+    onset = jnp.where(cnt > 0, first_hot.astype(jnp.int32), none)
+    onset = jnp.where(tick_ok, onset, -1)
+    score = jnp.where(tick_ok, score, 0.0)
+    marginal = jnp.any((jnp.abs(zm - threshold) < eps) & tick_ok[..., None],
+                       axis=-1)
+    if argmax_fallback:
+        # the fallback onset is an arg-max over z: two samples within eps
+        # of the row max can swap order under f32 rounding even far from
+        # the threshold, so near-ties on quiet ticks are marginal too
+        tie = jnp.sum((zm >= score[..., None] - eps) & tick_ok[..., None],
+                      axis=-1) >= 2
+        marginal = marginal | (tie & (cnt == 0) & tick_ok)
+    return fire, score, onset, marginal
+
+
+def sweep_rows_ref(x: jax.Array, mu: jax.Array, sd: jax.Array,
+                   ticks: jax.Array, valid_n: jax.Array, wn: int,
+                   threshold: float, min_hot: int, eps: float,
+                   argmax_fallback: bool, block_t: int,
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """x (R, T), mu/sd (R, nt), ticks (nt,), valid_n (R,) ->
+    (fire bool, score f32, onset i32, marginal bool), each (R, nt)."""
+    R, _ = x.shape
+    nt = ticks.shape[0]
+    bt = max(1, min(int(block_t), nt))
+    pad = (-nt) % bt
+    nb = (nt + pad) // bt
+    # padded ticks point at a safe in-range window; masked out via ok
+    ticks_p = jnp.concatenate(
+        [ticks.astype(jnp.int32), jnp.full(pad, int(wn), jnp.int32)])
+    ok_p = jnp.arange(nt + pad) < nt
+    mu_p = jnp.concatenate([mu, jnp.zeros((R, pad), mu.dtype)], axis=1)
+    sd_p = jnp.concatenate([sd, jnp.ones((R, pad), sd.dtype)], axis=1)
+
+    def step(args):
+        t_b, ok_b, mu_b, sd_b = args
+        return _tick_block(x, mu_b, sd_b, t_b, ok_b, valid_n, wn,
+                           threshold, min_hot, eps, argmax_fallback)
+
+    fire, score, onset, marg = jax.lax.map(step, (
+        ticks_p.reshape(nb, bt), ok_p.reshape(nb, bt),
+        mu_p.reshape(R, nb, bt).transpose(1, 0, 2),
+        sd_p.reshape(R, nb, bt).transpose(1, 0, 2)))
+    out = []
+    for a in (fire, score, onset, marg):               # (nb, R, bt) -> (R, nt)
+        out.append(a.transpose(1, 0, 2).reshape(R, nt + pad)[:, :nt])
+    return tuple(out)

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: batched Layer-2 detection sweep — per-tick spike
+score + persistence gate + onset for EVERY row of the (rows, T) latency
+slab in one dispatch.
+
+The per-trial eval loop ran :func:`repro.core.spike.detect_sweep` once per
+latency row: per-row f64 conversion, per-row prefix sums and a fully
+materialized (#ticks, wn) z-matrix.  Here one grid cell handles
+(``block_r`` rows x ``block_t`` ticks): the cell keeps its rows' full f32
+latency series VMEM-resident, gathers the cell's tick windows from them
+(``W[r, i, k] = x[r, tick_i - wn + k]`` — one gather, the same trick as
+the fused kernel's lag matrix), and computes against *precomputed* rolling
+baseline moments:
+
+  * the window max-z spike score per (row, tick),
+  * the above-threshold sample count (integer persistence gate, decided
+    host-side in exact f64 by ``ops.persistence_count``),
+  * the onset index — first above-threshold sample, with the fleet
+    monitor's arg-max-z fallback behind a flag (``detect_rows`` vs
+    ``detect`` convention, see core.spike),
+  * an epsilon-marginality bit: whether any window z sits within ``eps``
+    of the threshold, i.e. whether f32 rounding could flip this tick's
+    decision against the f64 oracle (the ops layer re-checks flagged
+    ticks exactly).
+
+Baseline moments (mu, sd) arrive as (rows, #ticks) inputs — the rolling
+prefix-sum pass is O(rows * T) scalar work the host does once in exact
+f64 (``ops.rolling_moments``); the kernel spends its
+bandwidth on the O(rows * #ticks * wn) window reductions, tick-blocked so
+the z working set stays bounded at (block_r, block_t, wn) instead of the
+full (rows, #ticks, wn) tensor.  ``MASK_NEG`` lane masking covers padded
+lanes, padded ticks AND ragged per-row valid lengths, so FleetAggregator
+slabs with masked/young hosts feed it directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.spike import MASK_NEG as NEG
+from repro.kernels import tuning
+
+
+def _sweep_kernel(wn: int, n_ticks: int, threshold: float, min_hot: int,
+                  eps: float, argmax_fallback: bool,
+                  ticks_ref, valid_ref, x_ref, mu_ref, sd_ref,
+                  fire_ref, score_ref, onset_ref, marg_ref):
+    """ticks_ref (1, bt) i32; valid_ref (br, 1) i32; x_ref (br, Tp) f32;
+    mu_ref/sd_ref (br, bt) f32; outputs (br, bt)."""
+    br, bt = mu_ref.shape
+    j = pl.program_id(1)
+
+    t = ticks_ref[0, :]                                        # (bt,) i32
+    nv = valid_ref[:, 0]                                       # (br,) i32
+    # padding mask (ticks beyond the true grid) + ragged row mask
+    ok = (j * bt + jax.lax.iota(jnp.int32, bt) < n_ticks)
+    tick_ok = ok[None, :] & (t[None, :] <= nv[:, None])        # (br, bt)
+
+    # one gather builds the cell's window tile from the resident rows
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bt, wn), 1)
+    cols = t[:, None] - wn + idx                               # (bt, wn)
+    W = jnp.take(x_ref[...], cols, axis=1)                     # (br, bt, wn)
+
+    z = (W - mu_ref[...][..., None]) / sd_ref[...][..., None]
+    zm = jnp.where(tick_ok[..., None], z, NEG)
+    score = jnp.max(zm, axis=-1)                               # (br, bt)
+    hot = zm > threshold
+    cnt = jnp.sum(hot.astype(jnp.int32), axis=-1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, zm.shape, 2)
+    first_hot = jnp.min(jnp.where(hot, lane, wn), axis=-1)
+    if argmax_fallback:
+        # arg-max via first index attaining the max (np.argmax tie rule)
+        none = jnp.min(jnp.where(zm == score[..., None], lane, wn), axis=-1)
+    else:
+        none = jnp.full(cnt.shape, -1, jnp.int32)
+    onset = jnp.where(cnt > 0, first_hot, none)
+
+    fire_ref[...] = ((score > threshold) & (cnt >= min_hot)
+                     & tick_ok).astype(jnp.int32)
+    score_ref[...] = jnp.where(tick_ok, score, 0.0)
+    onset_ref[...] = jnp.where(tick_ok, onset, -1)
+    marg = jnp.any((jnp.abs(zm - threshold) < eps) & tick_ok[..., None],
+                   axis=-1)
+    if argmax_fallback:
+        # arg-max fallback onsets can swap under f32 rounding when two
+        # samples near-tie for the row max — flag those ticks marginal
+        tie = jnp.sum((zm >= score[..., None] - eps) & tick_ok[..., None],
+                      axis=-1) >= 2
+        marg = marg | (tie & (cnt == 0) & tick_ok)
+    marg_ref[...] = marg.astype(jnp.int32)
+
+
+def sweep_rows_pallas(x: jax.Array, mu: jax.Array, sd: jax.Array,
+                      ticks: jax.Array, valid_n: jax.Array, wn: int,
+                      threshold: float, min_hot: int, eps: float,
+                      argmax_fallback: bool, block_r: int | None = None,
+                      block_t: int | None = None, interpret: bool = True,
+                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """x (R, T) f32, mu/sd (R, nt) f32, ticks (nt,) i32, valid_n (R,) i32
+    -> (fire i32, score f32, onset i32, marginal i32), each (R, nt).
+
+    One dispatch for the whole slab; grid (rows / block_r, ticks /
+    block_t).  ``interpret`` runs the body on CPU (the bit-accurate
+    validation path); on TPU pass interpret=False.  Tile sizes default to
+    the env-overridable config (kernels.tuning).
+    """
+    R, T = x.shape
+    nt = int(ticks.shape[0])
+    br = tuning.sweep_block_r(block_r)
+    bt = max(1, min(tuning.sweep_block_t(block_t), nt))
+    pad_r = (-R) % br
+    pad_t = (-nt) % bt
+    if T % 128:
+        # lane-align the resident series; ticks never index the pad (every
+        # real window ends at t <= T, pad ticks gather the [0, wn) head)
+        x = jnp.pad(x, ((0, 0), (0, (-T) % 128)))
+    if pad_r:
+        x = jnp.pad(x, ((0, pad_r), (0, 0)))
+        valid_n = jnp.pad(valid_n, (0, pad_r))        # 0 => every tick masked
+    if pad_t:
+        # padded ticks gather a safe in-range window; masked via n_ticks
+        ticks = jnp.pad(ticks, (0, pad_t), constant_values=int(wn))
+    if pad_r or pad_t:
+        mu = jnp.pad(mu, ((0, pad_r), (0, pad_t)))
+        sd = jnp.pad(sd, ((0, pad_r), (0, pad_t)), constant_values=1.0)
+    Rp, ntp = R + pad_r, nt + pad_t
+    Tp = x.shape[1]
+
+    fire, score, onset, marg = pl.pallas_call(
+        functools.partial(_sweep_kernel, int(wn), nt, float(threshold),
+                          int(min_hot), float(eps), bool(argmax_fallback)),
+        grid=(Rp // br, ntp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda i, j: (0, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, Tp), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((br, bt), lambda i, j: (i, j))] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, ntp), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, ntp), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, ntp), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, ntp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ticks.astype(jnp.int32)[None], valid_n.astype(jnp.int32)[:, None],
+      x.astype(jnp.float32), mu.astype(jnp.float32), sd.astype(jnp.float32))
+    return (fire[:R, :nt], score[:R, :nt], onset[:R, :nt], marg[:R, :nt])

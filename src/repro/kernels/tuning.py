@@ -8,7 +8,7 @@ working set far under VMEM); on real TPU hardware the sweet spot depends on
 the generation, so both are overridable without code edits:
 
     REPRO_BLOCK_M=16 REPRO_LAG_PAD=128 python -m benchmarks.run --only kernel
-    REPRO_DETECT_BLOCK_H=32 ...                      # detect kernel host tile
+    REPRO_SWEEP_BLOCK_T=64 REPRO_SWEEP_BLOCK_R=4 ... # sweep kernel tile
 
 ``benchmarks/kernelbench.py`` sweeps the ``block_m`` candidates in interpret
 mode (`kernel/tile_sweep/*` rows) so a hardware run has a starting grid; the
@@ -19,8 +19,9 @@ from __future__ import annotations
 import os
 
 DEFAULT_BLOCK_M = 8      # metric rows per (host, metric-block) grid cell
-DEFAULT_BLOCK_H = 8      # host rows per detect-kernel grid cell
 DEFAULT_LAG_PAD = 64     # lag output lanes (>= 2K+1, lane-aligned)
+DEFAULT_SWEEP_BLOCK_T = 128   # evaluation ticks per sweep tile / ref block
+DEFAULT_SWEEP_BLOCK_R = 8     # latency rows per sweep-kernel grid cell
 
 #: candidates the interpret-mode microbench sweeps (hardware starting grid)
 BLOCK_M_CANDIDATES = (4, 8, 16)
@@ -46,15 +47,36 @@ def block_m(override: int | None = None) -> int:
     return _env_int("REPRO_BLOCK_M", DEFAULT_BLOCK_M)
 
 
-def detect_block_h(override: int | None = None) -> int:
-    """Host-block rows for the streaming detect kernel."""
-    if override is not None:
-        return int(override)
-    return _env_int("REPRO_DETECT_BLOCK_H", DEFAULT_BLOCK_H)
-
-
 def lag_pad(max_lag: int, override: int | None = None) -> int:
     """Lag-axis padding: env/explicit override, floored at 2K+1."""
     pad = (int(override) if override is not None
            else _env_int("REPRO_LAG_PAD", DEFAULT_LAG_PAD))
     return max(pad, 2 * int(max_lag) + 1)
+
+
+def sweep_block_t(override: int | None = None) -> int:
+    """Evaluation ticks per Layer-2 sweep tile (``REPRO_SWEEP_BLOCK_T``).
+
+    Bounds peak memory of the batched detection sweep: the (rows, ticks,
+    wn) z-block is only ever materialized ``block_t`` ticks at a time, both
+    in the masked-XLA reference (a ``lax.map`` step) and as the tick axis
+    of one Pallas grid cell.  Larger tiles amortize dispatch overhead;
+    smaller ones cap the VMEM working set (~``block_r * block_t * wn * 4``
+    bytes per live intermediate).
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_SWEEP_BLOCK_T", DEFAULT_SWEEP_BLOCK_T)
+
+
+def sweep_block_r(override: int | None = None) -> int:
+    """Latency rows per sweep-kernel grid cell (``REPRO_SWEEP_BLOCK_R``).
+
+    Each cell keeps its ``block_r`` full (row, T) latency series VMEM-
+    resident and gathers the cell's tick windows from them, so the row
+    tile bounds the resident-slab footprint (``block_r * T * 4`` bytes) on
+    top of the tick-block working set above.
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_SWEEP_BLOCK_R", DEFAULT_SWEEP_BLOCK_R)

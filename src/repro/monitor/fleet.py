@@ -17,16 +17,17 @@ consumed by the training loop (fault tolerance wiring).
 
 The columnar fast path (default, ``fast_detect=True``) keeps the pipeline
 f32-contiguous from the telemetry ring to the verdict: Layer 2 is ONE
-streaming-detect dispatch (kernels.detect — spike score + persistence gate
-+ onset per host, one read of the (hosts, wn) latency slab) and the Layer-3
-evidence gather stays f32 into the fused kernel.  ``fast_detect=False``
-keeps the seed path — a spike-kernel dispatch, then an f64 re-slice +
-scalar-rule ``detect_rows`` replay over the candidates, and an f64 evidence
-gather — as the parity oracle: on the tested/benchmarked slabs flagged
-hosts and onsets match the fast path byte-exactly (asserted by tests and
-recorded in BENCH_fleet.json; the persistence gate compares an integer
-count, so only a z-score within one f32 ulp of the 3-sigma threshold
-could ever split the two paths).
+streaming-detect dispatch (kernels.detect — since PR 5 a single-tick view
+of the suite-scale sweep core in kernels.sweep, so the fleet and the eval
+share one sweep implementation) and the Layer-3 evidence gather stays f32
+into the fused kernel.  ``fast_detect=False`` keeps the seed path — a
+spike-kernel dispatch, then an f64 re-slice + scalar-rule ``detect_rows``
+replay over the candidates, and an f64 evidence gather — as the parity
+oracle: flagged hosts and onsets match the fast path byte-exactly *by
+construction* (the sweep core's epsilon guard re-decides any host whose
+window holds a z within the guard band of the threshold through the f64
+oracle; the persistence gate compares an integer count), asserted by
+tests and recorded in BENCH_fleet.json.
 
 ``stage_seconds`` reports *disjoint* pipeline stages (detect / gather /
 kernel / rank / assemble) so benchmark attribution sums to the wall total.

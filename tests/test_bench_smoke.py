@@ -35,6 +35,21 @@ def test_sweep_family_smoke():
 
 
 @pytest.mark.bench_smoke
+def test_slab_sweep_family_smoke():
+    """Suite-scale Layer-2 slab sweep vs the per-trial loop: finite rows
+    and the byte-exact event/stamp parity bit at both cadences."""
+    rows = fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
+                                      fleet_hosts=32)
+    assert rows
+    for name, value, _ in rows:
+        assert name.startswith(("eval/sweep", "fleet/sweep")), name
+        assert math.isfinite(value), f"{name} = {value}"
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["eval/sweep_parity"] == 1.0
+    assert vals["fleet/sweep_single_tick_parity/H32"] == 1.0
+
+
+@pytest.mark.bench_smoke
 def test_fleet_family_smoke():
     rows = fleetbench.fleet_rows(batch_sizes=(8,), reps=1,
                                  sequential_baseline=False)

@@ -69,13 +69,28 @@ def test_missing_class_fails(committed):
 def test_check_bench_parity_rows():
     good = [("fleet/detect_parity/B8", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),
-            ("eval/store_pred_parity", 1.0, "")]
+            ("eval/store_pred_parity", 1.0, ""),
+            ("eval/sweep_parity", 1.0, "")]
     assert regress.check_bench_parity(good) == []
     bad = regress.check_bench_parity(
         [("fleet/detect_parity/B8", 0.5, "")] + good[1:])
     assert any("detect_parity" in m for m in bad)
-    missing = regress.check_bench_parity(good[:2])
+    missing = regress.check_bench_parity(good[:2] + good[3:])
     assert any("store_pred_parity" in m for m in missing)
+
+
+def test_tampered_sweep_parity_fails():
+    """The slab detection sweep's byte-exact bit is gated: a drifted
+    sweep (events or timestamps off the per-row oracle) must fail CI."""
+    rows = [("fleet/detect_parity/B8", 1.0, ""),
+            ("eval/pred_parity", 1.0, ""),
+            ("eval/store_pred_parity", 1.0, ""),
+            ("eval/sweep_parity", 0.5, "")]
+    bad = regress.check_bench_parity(rows)
+    assert any("eval/sweep_parity" in m for m in bad)
+    # and a run that silently stops emitting the row fails too
+    gone = regress.check_bench_parity(rows[:3])
+    assert any("eval/sweep_parity" in m for m in gone)
 
 
 def test_protocol_constants_single_definition():

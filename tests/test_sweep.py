@@ -1,0 +1,295 @@
+"""Batched Layer-2 sweep: kernel/ref/exact paths vs the per-row oracle
+(`detect_sweep`), the onset-convention pin, and the slab event resolve
+(`detect_events_store` / `detect_events_slab`) vs per-row `detect_events`."""
+import numpy as np
+import pytest
+
+from repro.core import spike
+from repro.core.engine import CorrelationEngine, EngineConfig
+from repro.kernels.sweep import ops as sweep_ops
+from repro.sim.scenario import TrialStore, make_trial
+
+
+def _mk(R=6, T=4000, wn=300, bn=1000, seed=0, spikes=((0, 2500, 2900, 6.0),)):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(10, 1, (R, T))
+    for r, lo, hi, amp in spikes:
+        X[r, lo:hi] += amp
+    return X.astype(np.float32), wn, bn
+
+
+def _oracle(X32, wn, bn, ticks, thr=3.0, pers=0.3):
+    outs = [spike.detect_sweep(np.asarray(x, np.float64), wn, bn, ticks,
+                               thr, pers) for x in X32]
+    return (np.stack([o[0] for o in outs]), np.stack([o[1] for o in outs]),
+            np.stack([o[2] for o in outs]))
+
+
+# ------------------------------------------------------------ jit sweep paths
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sweep_rows_matches_oracle_off_guard_band(use_kernel):
+    """f32 decisions equal the f64 oracle everywhere the epsilon guard
+    does not fire; scores agree to f32 tolerance (the slab-vs-oracle
+    tolerance contract)."""
+    X32, wn, bn = _mk(spikes=((0, 2500, 2900, 6.0), (3, 1500, 1800, 8.0)))
+    ticks = np.arange(wn + bn, X32.shape[1] + 1, 37)
+    fire, score, onset, marg = sweep_ops.sweep_rows(
+        X32, wn, bn, ticks, 3.0, 0.3, use_kernel=use_kernel)
+    f0, s0, o0 = _oracle(X32, wn, bn, ticks)
+    nm = ~marg
+    np.testing.assert_array_equal(fire[nm], f0[nm])
+    np.testing.assert_array_equal(onset[nm], o0[nm])
+    np.testing.assert_allclose(score, s0, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sweep_rows_marginal_flags_near_threshold(use_kernel):
+    """A window z engineered inside the guard band must be flagged
+    marginal — the exactness contract depends on it."""
+    R, T, wn, bn = 2, 2000, 200, 1000
+    rng = np.random.default_rng(5)
+    X = rng.normal(0, 1, (R, T))
+    # plant one sample whose z sits ~1e-4 over the threshold at tick T
+    # (the tick's baseline is the bn samples preceding its window)
+    mu, sd = spike.baseline_stats(X[0, T - wn - bn:T - wn])
+    X[0, T - 5] = mu + (3.0 + 1e-4) * sd
+    X32 = X.astype(np.float32)
+    ticks = np.array([T])
+    _, _, _, marg = sweep_ops.sweep_rows(X32, wn, bn, ticks, 3.0, 0.0,
+                                         use_kernel=use_kernel)
+    assert bool(marg[0, 0])
+
+
+def test_sweep_rows_onset_convention_pin():
+    """argmax_fallback=True reproduces detect_rows' arg-max fallback;
+    False reproduces detect/detect_sweep's -1 — the documented deliberate
+    divergence between the streaming engine and the fleet monitor."""
+    rng = np.random.default_rng(2)
+    wn, bn = 256, 1024
+    X = rng.normal(5, 0.5, (8, bn + wn))
+    X32 = X.astype(np.float32)
+    ticks = np.array([bn + wn])
+    # "quiet" = no sample crosses at all (max z at or under the
+    # threshold); rows that merely fail persistence still carry a
+    # first-hot onset in both conventions
+    quiet = _oracle(X32, wn, bn, ticks, thr=3.0, pers=0.35)[1][:, 0] <= 3.0
+    assert quiet.any()
+    f_eng, _, o_eng, _ = sweep_ops.sweep_rows(X32, wn, bn, ticks, 3.0, 0.35)
+    f_fl, _, o_fl, _ = sweep_ops.sweep_rows(X32, wn, bn, ticks, 3.0, 0.35,
+                                            argmax_fallback=True)
+    f0, _, o0 = spike.detect_rows(np.asarray(X32[:, bn:], np.float64),
+                                  np.asarray(X32[:, :bn], np.float64),
+                                  3.0, 0.35)
+    np.testing.assert_array_equal(f_fl[:, 0], f0)
+    np.testing.assert_array_equal(o_fl[:, 0], o0)     # arg-max fallback
+    assert all(o_eng[quiet, 0] == -1)                 # engine convention
+    # and the scalar engine rule returns None for the same quiet windows
+    for r in np.flatnonzero(quiet):
+        is_spike, _, onset = spike.detect(X32[r, bn:], X32[r, :bn],
+                                          3.0, 0.35)
+        assert not is_spike and onset is None
+
+
+# ----------------------------------------------------------- exact CPU path
+def test_sweep_rows_exact_bitwise_at_fired_ticks():
+    X32, wn, bn = _mk(R=8, spikes=((0, 2500, 2900, 6.0), (5, 1400, 1450, 9.0)))
+    X64 = np.asarray(X32, np.float64)
+    ticks = np.arange(wn + bn, X32.shape[1] + 1, 23)
+    fire, score, onset = sweep_ops.sweep_rows_exact(X64, wn, bn, ticks,
+                                                    3.0, 0.3)
+    f0, s0, o0 = _oracle(X32, wn, bn, ticks)
+    np.testing.assert_array_equal(fire, f0)           # fire exact everywhere
+    hit = fire
+    assert np.array_equal(score[hit], s0[hit])        # bitwise at fired
+    assert np.array_equal(onset[hit], o0[hit])
+
+
+@pytest.mark.parametrize("case", ["cadence_gt_wn", "final_tick_at_T",
+                                  "single_tick", "bn0"])
+def test_sweep_edge_cases(case):
+    """cadence > wn (disjoint windows), the final tick landing exactly at
+    T, a single-tick trial, and the bn=0 empty-baseline convention."""
+    R, T, wn, bn = 3, 3000, 200, 800
+    if case == "bn0":
+        bn = 0
+    X32, wn, bn = _mk(R=R, T=T, wn=wn, bn=bn,
+                      spikes=((1, 2000, 2400, 7.0),))[0], wn, bn
+    if case == "cadence_gt_wn":
+        ticks = np.arange(wn + bn, T + 1, 3 * wn)
+    elif case == "final_tick_at_T":
+        ticks = np.concatenate([np.arange(wn + bn, T, 700), [T]])
+    elif case == "single_tick":
+        ticks = np.array([wn + bn])
+    else:                                   # bn0: scalar floor convention
+        ticks = np.arange(wn, T + 1, 500)
+    f0, s0, o0 = _oracle(X32, wn, bn, ticks)
+    for use_kernel in (False, True):
+        fire, score, onset, marg = sweep_ops.sweep_rows(
+            X32, wn, bn, ticks, 3.0, 0.3, use_kernel=use_kernel)
+        nm = ~marg
+        np.testing.assert_array_equal(fire[nm], f0[nm])
+        np.testing.assert_array_equal(onset[nm], o0[nm])
+        np.testing.assert_allclose(score, s0, rtol=1e-4, atol=1e-4)
+    fire, score, onset = sweep_ops.sweep_rows_exact(
+        np.asarray(X32, np.float64), wn, bn, ticks, 3.0, 0.3)
+    np.testing.assert_array_equal(fire, f0)
+    assert np.array_equal(score[fire], s0[fire])
+    assert np.array_equal(onset[fire], o0[fire])
+
+
+def test_sweep_ragged_valid_lengths():
+    """Rows with ragged valid lengths are swept as if truncated: masked
+    ticks never fire, valid ticks match the truncated-row oracle."""
+    X32, wn, bn = _mk(R=4, spikes=((0, 2500, 2900, 6.0),
+                                   (2, 2500, 2900, 6.0)))
+    T = X32.shape[1]
+    valid = np.array([T, 2200, 3500, 1500])
+    ticks = np.arange(wn + bn, T + 1, 171)
+    for path in ("jit", "kernel", "exact"):
+        if path == "exact":
+            fire, score, onset = sweep_ops.sweep_rows_exact(
+                np.asarray(X32, np.float64), wn, bn, ticks, 3.0, 0.3,
+                valid_n=valid)
+            marg = np.zeros_like(fire)
+        else:
+            fire, score, onset, marg = sweep_ops.sweep_rows(
+                X32, wn, bn, ticks, 3.0, 0.3, valid_n=valid,
+                use_kernel=(path == "kernel"))
+        for r in range(4):
+            nv = int(valid[r])
+            live = ticks <= nv
+            assert not fire[r, ~live].any()
+            assert (onset[r, ~live] == -1).all()
+            if not live.any():
+                continue
+            f0, s0, o0 = spike.detect_sweep(
+                np.asarray(X32[r, :nv], np.float64), wn, bn, ticks[live],
+                3.0, 0.3)
+            keep = (~marg[r, live]) if path != "exact" else f0
+            np.testing.assert_array_equal(fire[r, live][keep], f0[keep])
+
+
+def test_detect_sweep_chunking_is_invisible(monkeypatch):
+    """The SWEEP_TICK_CHUNK memory bound must not change a bit."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(10, 1, 6000)
+    x[4000:4400] += 6.0
+    wn, bn = 500, 2000
+    ticks = np.arange(wn + bn, x.size, 7)       # 500 ticks, several chunks
+    ref = spike.detect_sweep(x, wn, bn, ticks, 3.0, 0.3)
+    monkeypatch.setattr(spike, "SWEEP_TICK_CHUNK", 64)
+    got = spike.detect_sweep(x, wn, bn, ticks, 3.0, 0.3)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------- event resolve
+def _events_sig(evs):
+    return [(ev.t_onset, ev.t_detect, ev.score, int(t)) for ev, t in evs]
+
+
+@pytest.mark.parametrize("eval_every", [0, 10])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_detect_events_store_byte_exact(eval_every, use_kernel):
+    """Slab detection reproduces per-row detect_events byte-exactly —
+    stamps, scores and rca indices — on multi-event trials (cascade/flap
+    exercise cooldown + pending machinery, the trailing event the
+    end-of-trial pending flush)."""
+    trials = [make_trial(900 + i, cls, confuser_prob=0.0)
+              for i, cls in enumerate(("nic", "cpu", "io", "gpu"))]
+    # recurring + trailing faults: multi-event rows and a pending flush
+    trials += [make_trial(77, "nic", t_on=84.0, intensity=2.0,
+                          confuser_prob=0.0)]
+    store = TrialStore.from_trials(trials)
+    eng = CorrelationEngine(EngineConfig(eval_every=eval_every))
+    ref = [eng.detect_events(store.ts, store.slab[i], store.channels)
+           for i in range(len(store))]
+    got = eng.detect_events_store(store.ts, store.slab, store.channels,
+                                  use_kernel=use_kernel)
+    assert [_events_sig(e) for e in ref] == [_events_sig(e) for e in got]
+    triples = eng.detect_events_slab(store.ts, store.slab, store.channels,
+                                     use_kernel=use_kernel)
+    flat = [(r, ev.t_detect, t) for r, evs in enumerate(ref)
+            for ev, t in evs]
+    assert [(r, ev.t_detect, t) for r, ev, t in triples] == flat
+
+
+def test_detect_events_store_ragged_matches_truncated_oracle():
+    """A ragged row is evaluated exactly as detect_events on the
+    truncated row — including when the shared tick grid lands exactly on
+    a row's valid length (the oracle's arange(t0, T_r) grid excludes it;
+    an off-by-one here produced phantom events)."""
+    cfg = EngineConfig(eval_every=10)
+    eng = CorrelationEngine(cfg)
+    trials = [make_trial(50 + i, cls, t_on=40.0, intensity=2.0,
+                         confuser_prob=0.0)
+              for i, cls in enumerate(("nic", "cpu", "io"))]
+    store = TrialStore.from_trials(trials)
+    t0 = cfg.window_n + cfg.baseline_n
+    # one valid length ON the tick grid, one off it, one full
+    T = store.ts.shape[0]
+    valid = np.array([t0 + 2000, t0 + 2005, T])
+    got = eng.detect_events_store(store.ts, store.slab, store.channels,
+                                  valid_n=valid)
+    for r in range(3):
+        nv = int(valid[r])
+        ref = eng.detect_events(store.ts[:nv], store.slab[r][:, :nv],
+                                store.channels)
+        assert _events_sig(ref) == _events_sig(got[r]), r
+
+
+def test_detect_events_rows_groups_trials():
+    """process_batch's grouped slab sweep equals the per-trial loop even
+    with heterogeneous trial layouts in one call."""
+    a = make_trial(11, "nic", confuser_prob=0.0)
+    b = make_trial(12, "cpu", confuser_prob=0.0)
+    c = make_trial(13, "io", duration_s=60.0, confuser_prob=0.0)  # 2nd group
+    eng = CorrelationEngine()
+    trials = [(t.ts, t.data, t.channels) for t in (a, b, c)]
+    got = eng.detect_events_rows(trials)
+    ref = [eng.detect_events(*t) for t in trials]
+    assert [_events_sig(e) for e in ref] == [_events_sig(e) for e in got]
+
+
+def test_resolve_row_cooldown_and_pending_jumps():
+    """The hit-to-hit resolve replays the tick loop's state machine:
+    fires inside cooldown are skipped, a pending event blocks detection
+    until its accumulation tick, and a pending event at row end flushes
+    with T-1."""
+    cfg = EngineConfig(eval_every=10)
+    eng = CorrelationEngine(cfg)
+    rate = cfg.rate_hz
+    T = 9000
+    ts = np.arange(T) / rate
+    ticks = np.arange(cfg.window_n + cfg.baseline_n, T, 10)
+    rca_n = int(cfg.rca_extra_s * rate)
+    fire = np.ones(ticks.size, bool)       # every tick fires
+    out = eng._resolve_row(ts, ticks, fire, ticks.size, T, rca_n,
+                           cfg.cooldown_s)
+    assert len(out) >= 2
+    t_first = int(ticks[out[0][0]])
+    assert out[0][1] == t_first + rca_n
+    # consecutive detections at least a cooldown apart
+    for (i, _), (j, _) in zip(out, out[1:]):
+        assert ts[int(ticks[j])] - ts[int(ticks[i])] >= cfg.cooldown_s
+    # a single fire so late no tick reaches its accumulation index: flush
+    fire2 = np.zeros(ticks.size, bool)
+    fire2[-1] = True
+    out2 = eng._resolve_row(ts, ticks, fire2, ticks.size, T, rca_n,
+                            cfg.cooldown_s)
+    assert out2 == [(ticks.size - 1, T - 1)]
+
+
+def test_zero_accumulation_zero_cooldown_matches_oracle():
+    """rca_extra_s=0 + cooldown_s=0 (detection-latency-only experiments):
+    the resolve must advance tick to tick like the oracle loop, not spin
+    on the same maturation index forever."""
+    cfg = EngineConfig(eval_every=10, rca_extra_s=0.0, cooldown_s=0.0)
+    eng = CorrelationEngine(cfg)
+    trial = make_trial(21, "nic", t_on=40.0, intensity=2.0,
+                       confuser_prob=0.0)
+    store = TrialStore.from_trials([trial])
+    ref = eng.detect_events(store.ts, store.slab[0], store.channels)
+    got = eng.detect_events_store(store.ts, store.slab, store.channels)[0]
+    assert len(ref) > 1
+    assert _events_sig(ref) == _events_sig(got)
