@@ -380,6 +380,88 @@ def live_rows(n_hosts: int = 8, window_s: float = 20.0, reps: int = 5,
     return rows
 
 
+# ---------------------------------------------------------------- chaos bench
+def chaos_rows(reps: int = 3) -> List[Tuple[str, float, str]]:
+    """Chaos-hardening invariants + clean-path sanitization overhead.
+
+    Three rows CI gates on (``benchmarks/regress.py``):
+
+      chaos/soak_false_verdicts   verdict count over one trial of each
+                                  pure-corruption chaos class — a poisoned
+                                  telemetry stream must yield ZERO
+                                  GPU/host-fault verdicts;
+      chaos/masked_parity         sweep_rows / sweep_rows_exact with an
+                                  all-true validity mask vs no mask —
+                                  must be byte-identical (the clean path
+                                  pays for chaos hardening with nothing);
+      chaos/sanitize_overhead_frac  wall cost of the per-row validity
+                                  scan relative to the detection sweep it
+                                  guards, on clean suite rows — bounded
+                                  so sanitization stays a rounding error.
+    """
+    from repro.core import sanitize
+    from repro.core.spike import MASK_NEG  # noqa: F401  (kernel sentinel)
+    from repro.kernels.sweep import ops as sweep_ops
+    from repro.sim import scenarios as scen
+    from repro.sim.scenario import protocol_seed
+
+    rows: List[Tuple[str, float, str]] = []
+    cfg = EngineConfig()
+    eng = CorrelationEngine(cfg)
+
+    # 1) pure-corruption trio through the full engine: zero verdicts
+    classes = list(scen.SCENARIO_CLASSES)
+    n_verd = n_trials = 0
+    for name in ("chaos_soak", "frozen_channel", "crash_restart"):
+        t = scen.make_scenario(
+            protocol_seed(41, classes.index(name), 0), name)[0]
+        n_verd += len(eng.process(t.ts, t.data, t.channels))
+        n_trials += 1
+    rows.append(("chaos/soak_false_verdicts", float(n_verd),
+                 f"verdicts over {n_trials} pure-corruption chaos trials "
+                 "(must be 0)"))
+
+    # 2) all-true mask vs no mask: byte-identical sweep outputs
+    rng = np.random.default_rng(17)
+    wn, bn = cfg.window_n, cfg.baseline_n
+    T = bn + 3 * wn
+    lat = rng.normal(10.0, 1.0, (8, T))
+    lat[3, bn + wn:bn + 2 * wn] += 8.0          # one genuine spike
+    ticks = np.arange(bn + wn, T + 1, wn, dtype=np.int64)
+    ones = np.ones_like(lat, bool)
+    parity = 1.0
+    for exact in (False, True):
+        fn = sweep_ops.sweep_rows_exact if exact else sweep_ops.sweep_rows
+        a = fn(lat, wn, bn, ticks, cfg.threshold, cfg.persistence)
+        b = fn(lat, wn, bn, ticks, cfg.threshold, cfg.persistence,
+               valid=ones)
+        parity = min(parity, float(all(
+            np.array_equal(x, y) for x, y in zip(a, b))))
+    rows.append(("chaos/masked_parity", parity,
+                 "1.0 = all-true validity mask byte-identical to no mask "
+                 "(sweep_rows + sweep_rows_exact)"))
+
+    # 3) clean-path sanitization overhead vs the sweep it guards
+    big = rng.normal(10.0, 1.0, (16, T))
+
+    def scan() -> None:
+        for r in range(big.shape[0]):
+            sanitize.validity_mask(big[r])
+            sanitize.forward_fill(big[r])
+
+    def sweep() -> None:
+        sweep_ops.sweep_rows(big, wn, bn, ticks, cfg.threshold,
+                             cfg.persistence)
+
+    sweep()                                     # jit warm-up
+    scan_s = _median_wall(scan, reps)
+    sweep_s = _median_wall(sweep, reps)
+    rows.append(("chaos/sanitize_overhead_frac", scan_s / sweep_s,
+                 "validity scan + fill wall / detection sweep wall, "
+                 "clean rows (CI bound: <= 0.9)"))
+    return rows
+
+
 # ----------------------------------------------------------------- eval bench
 def eval_rows(n_per_class: int = 4, reps: int = 3,
               ) -> List[Tuple[str, float, str]]:

@@ -6,14 +6,18 @@ and timestamps identically to the per-event path, and a no-fault soak
 produces zero verdicts.  This gate makes every commit prove them again:
 
   1. the committed ``EVAL_scorecard.json`` is structurally sound — every
-     scenario class present, parity bits exactly 1.0, soak clean, latency
+     scenario class present, parity bits exactly 1.0, soak AND the
+     pure-corruption chaos classes verdict-free, chaos_overlap inside the
+     5 s / 8 s latency targets at single-fault recall, latency
      percentiles finite where events exist;
   2. a fresh tiny run reproduces them on THIS commit's code: the bench
      parity rows (``fleet/detect_parity``, ``eval/pred_parity``,
      ``eval/store_pred_parity``, and ``eval/sweep_parity`` — the slab
      detection sweep reproducing the per-row oracle's events and
-     timestamps byte-exactly) and a smoke scorecard with the same class
-     set as the committed artifact.
+     timestamps byte-exactly), the chaos invariants
+     (``fleetbench.chaos_rows``: zero verdicts under pure corruption,
+     all-true-mask byte-parity, bounded sanitize overhead) and a smoke
+     scorecard with the same class set as the committed artifact.
 
 Exit status is nonzero on any break, with one line per failure.  Usage::
 
@@ -40,6 +44,22 @@ PARITY_ROW_PREFIXES = (
 #: scorecard parity bits that must be present AND exactly 1.0
 SCORECARD_PARITY_KEYS = ("batched_pred", "batched_ts",
                          "slab_pred", "slab_ts")
+
+#: classes with NO injected host fault — any verdict is a false positive.
+#: ``soak`` is the ambient control; the chaos trio corrupts the telemetry
+#: itself (NaN/freeze/drop), so a verdict there means a broken probe was
+#: diagnosed as a broken host.
+SOAK_LIKE_CLASSES = ("soak", "chaos_soak", "frozen_channel",
+                     "crash_restart")
+
+#: chaos_overlap operational gates: a real fault under telemetry
+#: corruption must still be caught — with recall no worse than the clean
+#: single-fault control and every event inside the paper's latency targets
+CHAOS_DETECT_MAX_S = 5.0
+CHAOS_RCA_MAX_S = 8.0
+
+#: clean-path sanitization must cost less than the sweep it guards
+SANITIZE_OVERHEAD_MAX = 0.9
 
 
 def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
@@ -68,15 +88,31 @@ def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
         if val != 1.0:
             bad.append(f"{label}: parity/{key} = {val} (want 1.0) — "
                        "batched/slab path diverged from per-event")
-    soak = scen_doc.get("soak")
-    if soak is not None:
-        if soak.get("false_verdicts", -1) != 0 or soak.get("n_verdicts", -1) != 0:
-            bad.append(f"{label}: soak produced verdicts "
-                       f"({soak.get('n_verdicts')}) — false-positive break")
-        if soak.get("n_truth_events", -1) != 0:
-            bad.append(f"{label}: soak has truth events")
+    for name in SOAK_LIKE_CLASSES:
+        blk = scen_doc.get(name)
+        if blk is None:
+            continue
+        if blk.get("false_verdicts", -1) != 0 or blk.get("n_verdicts", -1) != 0:
+            bad.append(f"{label}: {name} produced verdicts "
+                       f"({blk.get('n_verdicts')}) — false-positive break")
+        if blk.get("n_truth_events", -1) != 0:
+            bad.append(f"{label}: {name} has truth events")
+    overlap = scen_doc.get("chaos_overlap")
+    if overlap is not None:
+        single = scen_doc.get("single", {})
+        sr, orr = single.get("recall"), overlap.get("recall")
+        if sr is not None and (orr is None or orr < sr):
+            bad.append(f"{label}: chaos_overlap recall {orr!r} < single "
+                       f"recall {sr!r} — corruption degraded detection")
+        for lat_key, bound in (("detect_latency_s", CHAOS_DETECT_MAX_S),
+                               ("rca_latency_s", CHAOS_RCA_MAX_S)):
+            pcts = overlap.get(lat_key) or {}
+            worst = pcts.get("max")
+            if not (isinstance(worst, (int, float)) and worst <= bound):
+                bad.append(f"{label}: chaos_overlap {lat_key} max = "
+                           f"{worst!r} (target <= {bound} s)")
     for name, blk in scen_doc.items():
-        if name == "soak":
+        if name in SOAK_LIKE_CLASSES:
             continue
         if blk.get("n_truth_events", 0) <= 0:
             bad.append(f"{label}: {name} has no truth events")
@@ -98,6 +134,35 @@ def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
     elif fleet.get("flagged_recall") in (None, 0):
         bad.append(f"{label}: fleet flagged_recall = "
                    f"{fleet.get('flagged_recall')!r}")
+    return bad
+
+
+def check_chaos_rows(rows) -> List[str]:
+    """Chaos-hardening invariants over fresh ``fleetbench.chaos_rows``."""
+    bad: List[str] = []
+    seen = {"chaos/soak_false_verdicts": False, "chaos/masked_parity": False,
+            "chaos/sanitize_overhead_frac": False}
+    for name, value, _ in rows:
+        if name == "chaos/soak_false_verdicts":
+            seen[name] = True
+            if value != 0.0:
+                bad.append(f"fresh bench: {name} = {value} (want 0) — "
+                           "corrupted telemetry produced a fault verdict")
+        elif name == "chaos/masked_parity":
+            seen[name] = True
+            if value != 1.0:
+                bad.append(f"fresh bench: {name} = {value} (want 1.0) — "
+                           "all-true mask no longer byte-identical")
+        elif name == "chaos/sanitize_overhead_frac":
+            seen[name] = True
+            if not (math.isfinite(value)
+                    and value <= SANITIZE_OVERHEAD_MAX):
+                bad.append(f"fresh bench: {name} = {value} (bound "
+                           f"{SANITIZE_OVERHEAD_MAX}) — sanitization cost "
+                           "regressed")
+    for name, hit in seen.items():
+        if not hit:
+            bad.append(f"fresh bench: no row matched {name}")
     return bad
 
 
@@ -127,6 +192,7 @@ def fresh_failures() -> List[str]:
     rows += fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
                                        fleet_hosts=32)
     bad = check_bench_parity(rows)
+    bad += check_chaos_rows(fleetbench.chaos_rows(reps=1))
     doc = scorecard.build_scorecard(n_per_class=1, n_hosts=4, n_affected=2)
     bad += check_scorecard(doc, label="fresh scorecard")
     return bad

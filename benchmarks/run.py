@@ -54,6 +54,7 @@ def smoke() -> list:
                                         sequential_baseline=False))
     rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
     rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
+    rows += _emit(fleetbench.chaos_rows(reps=1))
     rows += _emit(scorecard.smoke_rows())
     return rows
 
@@ -102,6 +103,7 @@ def main() -> None:
         rows += _emit(fleetbench.fleet_rows())
         rows += _emit(fleetbench.live_rows())
         rows += _emit(fleetbench.eval_rows())
+        rows += _emit(fleetbench.chaos_rows())
         _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):
         _emit(roofline.roofline_rows())

@@ -138,11 +138,8 @@ def build_scorecard(n_per_class: int = 4, seed: int = SUITE_SEED, *,
             scoring.score_trial(t.truth, verds, tol_s))
     scenarios_doc = {
         name: dict(scoring.summarize(by_class[name]),
-                   description=(scen.SCENARIOS[name].description
-                                if name in scen.SCENARIOS
-                                else "cross-host correlated NIC burst"),
-                   multi_fault=(scen.SCENARIOS[name].multi_fault
-                                if name in scen.SCENARIOS else False))
+                   description=scen.scenario_spec(name).description,
+                   multi_fault=scen.scenario_spec(name).multi_fault)
         for name in by_class
     }
     return {

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import confidence as conf_mod
+from repro.core import sanitize as sanitize_mod
 from repro.core import spike as spike_mod
 from repro.core import xcorr as xcorr_mod
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent
@@ -193,6 +194,11 @@ class CorrelationEngine:
             raise ValueError(f"latency channel {cfg.latency_metric!r} not present")
         li = channels.index(cfg.latency_metric)
         L = np.asarray(data[li], dtype=np.float64)
+        # chaos hardening: a corrupted latency row (non-finite cells,
+        # frozen runs) flips detection to the validity-masked oracle —
+        # poisoned cells enter neither baselines nor decisions.  Clean
+        # rows get None back and keep the original path bit for bit.
+        Lv = sanitize_mod.validity_mask(L)
         T = ts.shape[0]
         wn, bn = cfg.window_n, cfg.baseline_n
         rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
@@ -207,8 +213,12 @@ class CorrelationEngine:
         if fast and ticks.size:
             # Layer-2 decisions for the whole sweep in one rolling pass; the
             # stateful cooldown/pending machinery below merely consults them.
-            fire_v, score_v, onset_v = spike_mod.detect_sweep(
-                L, wn, bn, ticks, cfg.threshold, cfg.persistence)
+            if Lv is None:
+                fire_v, score_v, onset_v = spike_mod.detect_sweep(
+                    L, wn, bn, ticks, cfg.threshold, cfg.persistence)
+            else:
+                fire_v, score_v, onset_v = spike_mod.detect_sweep_masked(
+                    L, Lv, wn, bn, ticks, cfg.threshold, cfg.persistence)
         for i, t in enumerate(ticks):
             t = int(t)
             now = float(ts[t])
@@ -229,8 +239,13 @@ class CorrelationEngine:
             else:
                 obs = L[t - wn:t]
                 base = L[t - wn - bn:t - wn]
-                is_spike, score, onset_idx = spike_mod.detect(
-                    obs, base, cfg.threshold, cfg.persistence)
+                if Lv is None:
+                    is_spike, score, onset_idx = spike_mod.detect(
+                        obs, base, cfg.threshold, cfg.persistence)
+                else:
+                    is_spike, score, onset_idx = spike_mod.detect_masked(
+                        obs, base, Lv[t - wn:t], Lv[t - wn - bn:t - wn],
+                        cfg.threshold, cfg.persistence)
             if is_spike:
                 onset_t = float(ts[t - wn + int(onset_idx)])
                 ev = SpikeEvent(t_onset=onset_t, t_detect=now, score=score,
@@ -315,29 +330,62 @@ class CorrelationEngine:
         ticks = np.arange(wn + bn, T, cadence)
         if ticks.size == 0:
             return [[] for _ in range(R)]
-        mu64, sd64 = sweep_ops.rolling_moments(lat64, ticks, wn, bn, valid_n)
+        nt = ticks.size
 
         def row64(r: int) -> np.ndarray:
             return (lat64[r] if valid_n is None
                     else lat64[r, :int(valid_n[r])])
 
-        if use_kernel:
-            # the f32 dispatch slab is only staged on the kernel path —
-            # an f32 source round-trips f64->f32 bit-identically
-            fire, score, onset, marg = sweep_ops.sweep_rows(
-                np.ascontiguousarray(lat64, np.float32), wn, bn, ticks,
-                cfg.threshold, cfg.persistence, valid_n=valid_n,
-                moments=(mu64, sd64), use_kernel=True)
-            for r in np.flatnonzero(marg.any(axis=1)):
-                m = marg[r]
-                f2, s2, o2 = spike_mod.detect_sweep_at(
-                    row64(r), wn, ticks[m], mu64[r, m], sd64[r, m],
+        # chaos hardening: rows with corrupted cells (non-finite, frozen
+        # runs) are carved out of the batched sweep and decided by the
+        # masked oracle — the same function the per-trial path uses, so
+        # all eval paths stay bitwise identical under chaos.  The mask is
+        # derived per truncated row, exactly as detect_events sees it.
+        row_mask: List[Optional[np.ndarray]] = [None] * R
+        for r in range(R):
+            row_mask[r] = sanitize_mod.validity_mask(row64(r))
+        dirty = np.asarray([m is not None for m in row_mask])
+        clean_idx = np.flatnonzero(~dirty)
+
+        fire = np.zeros((R, nt), bool)
+        score = np.zeros((R, nt))
+        onset = np.full((R, nt), -1, np.intp)
+        mu64 = np.zeros((R, nt))
+        sd64 = np.ones((R, nt))
+        if clean_idx.size:
+            latC = lat64[clean_idx]
+            vnC = (None if valid_n is None
+                   else np.asarray(valid_n)[clean_idx])
+            muC, sdC = sweep_ops.rolling_moments(latC, ticks, wn, bn, vnC)
+            mu64[clean_idx], sd64[clean_idx] = muC, sdC
+            if use_kernel:
+                # the f32 dispatch slab is only staged on the kernel path —
+                # an f32 source round-trips f64->f32 bit-identically
+                fC, sC, oC, margC = sweep_ops.sweep_rows(
+                    np.ascontiguousarray(latC, np.float32), wn, bn, ticks,
+                    cfg.threshold, cfg.persistence, valid_n=vnC,
+                    moments=(muC, sdC), use_kernel=True)
+                for j in np.flatnonzero(margC.any(axis=1)):
+                    m = margC[j]
+                    r = int(clean_idx[j])
+                    f2, s2, o2 = spike_mod.detect_sweep_at(
+                        row64(r), wn, ticks[m], muC[j, m], sdC[j, m],
+                        cfg.threshold, cfg.persistence)
+                    fC[j, m], sC[j, m], oC[j, m] = f2, s2, o2
+            else:
+                fC, sC, oC = sweep_ops.sweep_rows_exact(
+                    latC, wn, bn, ticks, cfg.threshold, cfg.persistence,
+                    valid_n=vnC, moments=(muC, sdC))
+            fire[clean_idx], score[clean_idx], onset[clean_idx] = fC, sC, oC
+        for r in np.flatnonzero(dirty):
+            x = row64(r)
+            k = int(np.searchsorted(ticks, x.size, side="right"))
+            if k == 0:
+                continue
+            fire[r, :k], score[r, :k], onset[r, :k] = \
+                spike_mod.detect_sweep_masked(
+                    x, row_mask[r], wn, bn, ticks[:k],
                     cfg.threshold, cfg.persistence)
-                fire[r, m], score[r, m], onset[r, m] = f2, s2, o2
-        else:
-            fire, score, onset = sweep_ops.sweep_rows_exact(
-                lat64, wn, bn, ticks, cfg.threshold, cfg.persistence,
-                valid_n=valid_n, moments=(mu64, sd64))
 
         out: List[List[Tuple[SpikeEvent, int]]] = []
         for r in range(R):
@@ -353,7 +401,7 @@ class CorrelationEngine:
             if not resolved:
                 out.append([])
                 continue
-            if use_kernel:
+            if use_kernel and not dirty[r]:
                 # stamp the oracle's f64 scores at the detection ticks
                 # (the decisions there are already exact; the f32 max-z
                 # value itself still carries rounding unless recomputed)
@@ -468,6 +516,14 @@ class CorrelationEngine:
         channels = list(channels)
         events = self.detect_events(ts, data, channels, fast=fast)
         li = channels.index(self.cfg.latency_metric)
+        if events:
+            # Layer 3 must not correlate against NaN/Inf evidence cells:
+            # forward-fill non-finite cells row-wise (identity — same
+            # array object — on clean data, so the clean path is
+            # untouched).  Detection above already ran on the RAW data
+            # with validity masks; only the explanation windows are
+            # smoothed.
+            data = sanitize_mod.forward_fill(np.asarray(data))
         return [self._diagnose(ts, data, channels, li, t, ev)
                 for ev, t in events]
 
@@ -495,6 +551,10 @@ class CorrelationEngine:
             per_trial = [self.detect_events(ts, data, channels, fast=False)
                          for (ts, data, channels) in trials]
         for k, (ts, data, channels) in enumerate(trials):
+            if per_trial[k]:
+                # same Layer-3 fill policy as process() — identity on
+                # clean trials, so per-event/batched parity holds
+                data = sanitize_mod.forward_fill(np.asarray(data))
             for ev, t in per_trial[k]:
                 owner.append(k)
                 items.append((ts, data, list(channels), t, ev))
@@ -528,6 +588,11 @@ class CorrelationEngine:
                                                 fast=False):
                     owner.append(i)
                     events.append((i, t, ev))
+        if events:
+            # Layer-3 fill over the whole store — per-row independent, so
+            # gathered windows match the per-trial fill bit for bit;
+            # identity (no copy) when the slab is clean
+            slab = sanitize_mod.forward_fill(slab)
         diags = self.diagnose_events_slab(ts, slab, channels, events,
                                           use_kernel=use_kernel)
         out: List[List[Diagnosis]] = [[] for _ in range(slab.shape[0])]

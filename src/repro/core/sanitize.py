@@ -1,0 +1,119 @@
+"""Telemetry validity screening (chaos hardening, Layer 1.5).
+
+Production telemetry lies in two ways the detection math must survive:
+non-numeric corruption (NaN/Inf bursts from crashed probes, dropped ticks
+surfacing as gaps) and *plausible-looking* corruption — a stuck collector
+repeating its last value forever.  The first is cheap to find
+(``isfinite``); the second needs run-length analysis: a real 100 Hz
+latency series is continuous noise and never repeats the same f32 value
+64 times in a row, while a frozen channel does nothing else.
+
+This module derives per-tick validity masks from raw series and provides
+the Layer-3 counterpart (``forward_fill``) that replaces non-finite
+evidence cells with the last valid value so correlation windows stay
+finite.  Contract shared with the masked detectors
+(:mod:`repro.core.spike`): **a clean input is returned untouched** —
+``validity_mask`` returns ``None`` and ``forward_fill`` returns the very
+same array object — so the sanitized pipeline is byte-exact with the
+pre-chaos pipeline whenever nothing is wrong, and the scan itself is the
+only overhead (benchmarked in ``benchmarks/fleetbench.chaos_rows``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+#: a run of at least this many *identical consecutive* finite values is a
+#: frozen (stuck-at) channel.  Longer than any legitimate zero-order hold
+#: in the pipeline (device channels repeat 10 samples at 100 Hz), shorter
+#: than the detector's persistence requirement (0.35 * 500 = 175 hot
+#: samples), so a frozen-at-elevated channel is masked long before it
+#: could fire a spike.
+FREEZE_RUN_N = 64
+
+
+def freeze_runs(x: np.ndarray, run_n: int = FREEZE_RUN_N) -> np.ndarray:
+    """Bool mask of cells inside a frozen run (1D or 2D, time last axis).
+
+    A maximal run of ``>= run_n`` identical consecutive values is flagged
+    *in full* — including its head.  Retroactive flagging matters: the
+    run's head samples carry the stuck value too, and leaving them valid
+    would let a frozen-at-elevated channel poison baselines (sigma
+    collapses to the floor and every later ambient sample looks like a
+    3-sigma spike).  NaN breaks runs (NaN != NaN) and is handled by the
+    finiteness check instead.
+    """
+    x = np.asarray(x)
+    one_d = x.ndim == 1
+    if one_d:
+        x = x[None, :]
+    R, T = x.shape
+    out = np.zeros((R, T), bool)
+    if T >= run_n > 0:
+        same = x[:, 1:] == x[:, :-1]
+        for r in range(R):
+            # run ids via boundary cumsum, then per-run lengths
+            boundary = np.empty(T, bool)
+            boundary[0] = True
+            boundary[1:] = ~same[r]
+            run_id = np.cumsum(boundary) - 1
+            run_len = np.bincount(run_id)
+            out[r] = run_len[run_id] >= run_n
+    return out[0] if one_d else out
+
+
+def validity_mask(x: np.ndarray, run_n: int = FREEZE_RUN_N,
+                  check_freeze: bool = True) -> Optional[np.ndarray]:
+    """Per-tick validity of a series (1D) or row-batch (2D).
+
+    ``None`` means *every* cell is valid — the caller keeps its original
+    unmasked code path, which is what makes clean inputs byte-exact.
+    Otherwise a bool mask of the input's shape: finite AND (when
+    ``check_freeze``) outside any frozen run.
+    """
+    x = np.asarray(x)
+    finite = np.isfinite(x)
+    clean = bool(finite.all())
+    if clean and not check_freeze:
+        return None
+    if check_freeze:
+        frozen = freeze_runs(x, run_n)
+        if clean and not frozen.any():
+            return None
+        valid = finite & ~frozen
+    else:
+        valid = finite
+    return valid
+
+
+def forward_fill(x: np.ndarray) -> np.ndarray:
+    """Replace non-finite cells with the last finite value (time axis last).
+
+    Returns ``x`` itself (no copy) when everything is finite.  Leading
+    invalid cells take the first finite value (backfill); a fully invalid
+    row becomes zeros.  Frozen-but-finite cells are left alone — flat
+    evidence scores ~zero spike and ~zero correlation, so it cannot
+    manufacture a cause.
+    """
+    x = np.asarray(x)
+    finite = np.isfinite(x)
+    if finite.all():
+        return x
+    shape = x.shape
+    T = shape[-1]
+    x2 = x.reshape(-1, T)
+    f2 = finite.reshape(-1, T)
+    idx = np.where(f2, np.arange(T)[None, :], 0)
+    np.maximum.accumulate(idx, axis=1, out=idx)
+    rows = np.arange(x2.shape[0])[:, None]
+    y = x2[rows, idx]
+    # leading cells before the first finite sample: backfill from the right
+    still = ~np.isfinite(y)
+    if still.any():
+        ridx = np.where(f2[:, ::-1], np.arange(T)[None, :], 0)
+        np.maximum.accumulate(ridx, axis=1, out=ridx)
+        yb = x2[:, ::-1][rows, ridx][:, ::-1]
+        y = np.where(still, yb, y)
+        y[~np.isfinite(y)] = 0.0    # fully invalid row
+    return np.ascontiguousarray(y.reshape(shape), dtype=x.dtype)

@@ -228,6 +228,215 @@ def detect_rows(windows: np.ndarray, baselines: np.ndarray,
     return fire, score, onset.astype(np.intp)
 
 
+# ---------------------------------------------------------------------------
+# Validity-masked detection (chaos hardening)
+#
+# Same Layer-2 rule, but every cell carries a validity bit (from
+# repro.core.sanitize or the fleet aggregator's staging mask).  Invalid
+# cells contribute to NOTHING: not the baseline moments, not the max-z
+# score, not the persistence fraction's numerator, not the onset.  The
+# persistence denominator stays the FULL window length — an anomaly must
+# still fill 35% of real time before firing, so corruption can only make
+# the detector more conservative, never less.  Ticks whose baseline has
+# fewer than MIN_VALID_BASELINE_N valid samples are refused outright
+# (fire=False, score=0, onset=-1): a baseline you cannot estimate is not
+# a baseline you may fire against.
+# ---------------------------------------------------------------------------
+
+#: minimum valid baseline samples before a masked tick may fire — mirrors
+#: the engine's MIN_BASELINE_N warm-up gate (kept separate to avoid a
+#: core -> engine import cycle; test-pinned equal).
+MIN_VALID_BASELINE_N = 32
+
+
+def masked_sliding_baseline_stats(x: np.ndarray, valid: np.ndarray,
+                                  starts: np.ndarray, n: int,
+                                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Masked :func:`sliding_baseline_stats`: ``(mu, sigma, n_valid)`` of the
+    valid cells of ``x[s:s+n]`` for every start.
+
+    Invalid cells are zeroed out of the prefix sums and the count prefix
+    divides per-span, so a NaN/frozen cell shifts no moment.  The global
+    shift is the mean of the valid cells (same cancellation guard as the
+    unmasked path).  Spans with zero valid cells return (0, floor, 0).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    v = np.asarray(valid, dtype=bool)
+    if v.shape != x.shape:
+        raise ValueError(f"valid shape {v.shape} != x shape {x.shape}")
+    starts = np.asarray(starts, dtype=np.intp)
+    n = int(n)
+    if n <= 0 or (starts.size and (starts.min() < 0 or starts.max() + n > x.size)):
+        raise ValueError(f"invalid baseline spans: n={n}, x.size={x.size}")
+    vf = v.astype(np.float64)
+    y = np.where(v, x, 0.0)
+    tot = vf.sum()
+    shift = float(y.sum() / tot) if tot > 0 else 0.0
+    yc = np.where(v, x - shift, 0.0)
+    c0 = np.concatenate(([0.0], np.cumsum(vf)))
+    c1 = np.concatenate(([0.0], np.cumsum(yc)))
+    c2 = np.concatenate(([0.0], np.cumsum(yc * yc)))
+    cnt = c0[starts + n] - c0[starts]
+    denom = np.maximum(cnt, 1.0)
+    m = (c1[starts + n] - c1[starts]) / denom
+    var = np.maximum((c2[starts + n] - c2[starts]) / denom - m * m, 0.0)
+    mu = np.where(cnt > 0, m + shift, 0.0)
+    sigma = np.sqrt(var)
+    floor = np.maximum(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * np.abs(mu))
+    return mu, np.maximum(sigma, floor), cnt.astype(np.intp)
+
+
+def detect_sweep_at_masked(x: np.ndarray, valid: np.ndarray, window_n: int,
+                           ticks: np.ndarray, mu: np.ndarray, sigma: np.ndarray,
+                           threshold: float = DEFAULT_THRESHOLD,
+                           persistence: float = 0.0,
+                           baseline_count: Optional[np.ndarray] = None,
+                           min_baseline_n: int = MIN_VALID_BASELINE_N,
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Masked :func:`detect_sweep_at`: per-tick decisions against given
+    baseline moments, with invalid window cells pinned to -inf z.
+
+    ``baseline_count`` (when given) gates each tick on
+    ``>= min_baseline_n`` valid baseline samples; gated or all-invalid
+    ticks report ``(False, 0.0, -1)``.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    v = np.asarray(valid, dtype=bool)
+    ticks = np.asarray(ticks, dtype=np.intp)
+    wn = int(window_n)
+    W = np.lib.stride_tricks.sliding_window_view(x, wn)[ticks - wn]
+    V = np.lib.stride_tricks.sliding_window_view(v, wn)[ticks - wn]
+    mu = np.asarray(mu, dtype=np.float64)
+    sigma = np.asarray(sigma, dtype=np.float64)
+    with np.errstate(invalid="ignore"):
+        z = np.where(V, (np.where(V, W, 0.0) - mu[:, None]) / sigma[:, None],
+                     -np.inf)
+    score = z.max(axis=1)
+    hot = z > threshold
+    # full-window denominator: invalid cells can never count as hot, so
+    # corruption only lowers the fraction
+    frac = hot.sum(axis=1) / float(wn)
+    ok = V.any(axis=1)
+    if baseline_count is not None:
+        ok &= np.asarray(baseline_count) >= int(min_baseline_n)
+    fire = ok & (score > threshold) & (frac >= persistence)
+    score = np.where(ok, score, 0.0)
+    onset = np.where(ok & hot.any(axis=1), hot.argmax(axis=1), -1)
+    return fire, score, onset.astype(np.intp)
+
+
+def detect_sweep_masked(x: np.ndarray, valid: np.ndarray, window_n: int,
+                        baseline_n: int, ticks: np.ndarray,
+                        threshold: float = DEFAULT_THRESHOLD,
+                        persistence: float = 0.0,
+                        min_baseline_n: int = MIN_VALID_BASELINE_N,
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Masked :func:`detect_sweep` — the poisoned-input detection oracle.
+
+    All three engine eval paths route corrupted latency rows through this
+    one function, which is what keeps their verdict streams bitwise
+    identical under chaos.  With an all-true mask the *decisions* match
+    :func:`detect_sweep` (scores of non-firing all-valid ticks too).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    v = np.asarray(valid, dtype=bool)
+    ticks = np.asarray(ticks, dtype=np.intp)
+    wn, bn = int(window_n), int(baseline_n)
+    nt = ticks.size
+    if nt == 0:
+        e = np.empty(0)
+        return e.astype(bool), e, e.astype(np.intp)
+    if ticks.min() < wn + bn or ticks.max() > x.size:
+        raise ValueError(f"ticks must lie in [{wn + bn}, {x.size}]")
+    if bn > 0:
+        mu, sigma, cnt = masked_sliding_baseline_stats(x, v, ticks - wn - bn, bn)
+    else:
+        mu = np.zeros(nt)
+        sigma = np.full(nt, SIGMA_FLOOR_ABS)
+        cnt = np.full(nt, np.iinfo(np.intp).max, np.intp)
+    fire = np.empty(nt, bool)
+    score = np.empty(nt)
+    onset = np.empty(nt, np.intp)
+    for lo in range(0, nt, SWEEP_TICK_CHUNK):
+        sl = slice(lo, min(lo + SWEEP_TICK_CHUNK, nt))
+        fire[sl], score[sl], onset[sl] = detect_sweep_at_masked(
+            x, v, wn, ticks[sl], mu[sl], sigma[sl], threshold, persistence,
+            baseline_count=cnt[sl], min_baseline_n=min_baseline_n)
+    return fire, score, onset
+
+
+def detect_masked(window: np.ndarray, baseline: np.ndarray,
+                  window_valid: np.ndarray, baseline_valid: np.ndarray,
+                  threshold: float = DEFAULT_THRESHOLD,
+                  persistence: float = 0.0,
+                  min_baseline_n: int = MIN_VALID_BASELINE_N,
+                  ) -> Tuple[bool, float, Optional[int]]:
+    """Masked scalar :func:`detect` (the per-tick slow-path oracle).
+
+    Same decision rule as one tick of :func:`detect_sweep_masked`; baseline
+    moments are computed directly (no prefix shift), so scores can differ
+    in the last ulp from the sweep — decisions agree, as on the unmasked
+    fast/slow pair.
+    """
+    b = np.asarray(baseline, dtype=np.float64)
+    bv = np.asarray(baseline_valid, dtype=bool)
+    x = np.asarray(window, dtype=np.float64)
+    wv = np.asarray(window_valid, dtype=bool)
+    nb = int(bv.sum())
+    if x.size == 0 or nb < int(min_baseline_n) or not wv.any():
+        return False, 0.0, None
+    bb = b[bv]
+    mu = float(np.mean(bb))
+    sigma = float(np.std(bb))
+    sigma = max(sigma, max(SIGMA_FLOOR_ABS, SIGMA_FLOOR_REL * abs(mu)))
+    with np.errstate(invalid="ignore"):
+        z = np.where(wv, (np.where(wv, x, 0.0) - mu) / sigma, -np.inf)
+    score = float(np.max(z))
+    hot = z > threshold
+    frac = float(hot.sum()) / float(x.size)
+    if score > threshold and frac >= persistence:
+        return True, score, int(np.argmax(hot))
+    return False, score, None
+
+
+def detect_rows_masked(windows: np.ndarray, baselines: np.ndarray,
+                       window_valid: np.ndarray, baseline_valid: np.ndarray,
+                       threshold: float = DEFAULT_THRESHOLD,
+                       persistence: float = 0.0,
+                       min_baseline_n: int = MIN_VALID_BASELINE_N,
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Masked :func:`detect_rows` (fleet-monitor convention: argmax-z onset
+    fallback over *valid* cells; rows failing the baseline gate or with no
+    valid window cell report ``(False, 0.0, 0)``)."""
+    w = np.asarray(windows, dtype=np.float64)
+    b = np.asarray(baselines, dtype=np.float64)
+    wv = np.asarray(window_valid, dtype=bool)
+    bv = np.asarray(baseline_valid, dtype=bool)
+    if w.ndim != 2 or b.ndim != 2 or w.shape[0] != b.shape[0]:
+        raise ValueError(f"shape mismatch: windows {w.shape} baselines {b.shape}")
+    cnt = bv.sum(axis=1)
+    denom = np.maximum(cnt, 1)
+    bz = np.where(bv, b, 0.0)
+    mu = bz.sum(axis=1) / denom
+    var = np.where(bv, (bz - mu[:, None]) ** 2, 0.0).sum(axis=1) / denom
+    mu = np.where(cnt > 0, mu, 0.0)
+    sigma = np.maximum(np.sqrt(var),
+                       np.maximum(SIGMA_FLOOR_ABS,
+                                  SIGMA_FLOOR_REL * np.abs(mu)))
+    with np.errstate(invalid="ignore"):
+        z = np.where(wv, (np.where(wv, w, 0.0) - mu[:, None]) / sigma[:, None],
+                     -np.inf)
+    score = z.max(axis=1)
+    hot = z > threshold
+    frac = hot.sum(axis=1) / float(w.shape[1])
+    ok = wv.any(axis=1) & (cnt >= int(min_baseline_n))
+    fire = ok & (score > threshold) & (frac >= persistence)
+    score = np.where(ok, score, 0.0)
+    onset = np.where(hot.any(axis=1), hot.argmax(axis=1), z.argmax(axis=1))
+    onset = np.where(ok, onset, 0)
+    return fire, score, onset.astype(np.intp)
+
+
 def spike_scores_matrix(windows: np.ndarray, baselines: np.ndarray) -> np.ndarray:
     """Per-row spike scores for a (M, N) window matrix vs (M, Nb) baselines.
 

@@ -17,7 +17,7 @@ by construction, not merely on the tested slabs.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -98,6 +98,7 @@ def detect_hosts(windows, baselines, threshold: float = 3.0,
 def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
                       persistence: float = 0.0, use_kernel: bool = True,
                       interpret: bool = True, exact: bool = True,
+                      valid: Optional[np.ndarray] = None,
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """:func:`detect_hosts` over a trailing latency slab.
 
@@ -106,10 +107,29 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
     ONE contiguous f32 block (jax aliases aligned contiguous f32 numpy on
     CPU zero-copy, whereas a strided slab view takes the slow elementwise
     transfer path).
+
+    ``valid`` (H, bn + wn) bool adds per-tick validity (chaos
+    hardening): masked decisions route through the f64 oracle
+    ``spike.detect_rows_masked`` — poisoned cells enter neither the
+    moments nor the max/argmax, and hosts whose baseline keeps fewer
+    than ``MIN_VALID_BASELINE_N`` valid samples stay quiet.  Corruption
+    is the exceptional path, so it takes the oracle, not the kernel: the
+    two can then never disagree.  An all-true mask is dropped and the
+    call is byte-identical to ``valid=None``.
     """
     tail = np.asarray(tail)
     if tail.ndim != 2 or tail.shape[-1] != wn + bn:
         raise ValueError(f"tail {tail.shape} vs bn+wn={bn + wn}")
+    if valid is not None:
+        v = np.asarray(valid, bool)
+        if v.shape != tail.shape:
+            raise ValueError(f"valid {v.shape} vs tail {tail.shape}")
+        if not v.all():
+            t64 = np.asarray(tail, np.float64)
+            fire, score, onset = spike_mod.detect_rows_masked(
+                t64[:, bn:], t64[:, :bn], v[:, bn:], v[:, :bn],
+                float(threshold), float(persistence))
+            return fire.astype(bool), score, onset.astype(np.intp)
     tail32 = np.ascontiguousarray(tail, np.float32)
     # the exact re-decision must see the caller's values, not the f32
     # staging — only a genuinely-f32 tail may reuse the staged copy

@@ -113,11 +113,47 @@ def rolling_moments(lat64: np.ndarray, ticks: np.ndarray, wn: int, bn: int,
     return mu, sd
 
 
+def rolling_moments_masked(lat64: np.ndarray, valid: np.ndarray,
+                           ticks: np.ndarray, wn: int, bn: int,
+                           valid_n: Optional[np.ndarray] = None,
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Validity-masked :func:`rolling_moments`: ``(mu, sd, n_valid)``.
+
+    Same per-row prefix-sum pass as the masked oracle
+    (``spike.masked_sliding_baseline_stats`` — bitwise identical), so a
+    kernel dispatch staged on these moments agrees with
+    ``spike.detect_sweep_masked`` decision for decision.  ``n_valid`` is
+    the per-(row, tick) valid baseline sample count the caller gates on.
+    """
+    lat64 = np.asarray(lat64, np.float64)
+    v = np.asarray(valid, bool)
+    R = lat64.shape[0]
+    nt = ticks.size
+    if bn <= 0:
+        return (np.zeros((R, nt)),
+                np.full((R, nt), spike_mod.SIGMA_FLOOR_ABS),
+                np.full((R, nt), np.iinfo(np.intp).max, np.intp))
+    starts = ticks - wn - bn
+    mu = np.zeros((R, nt))
+    sd = np.ones((R, nt))
+    cnt = np.zeros((R, nt), np.intp)
+    for r in range(R):
+        nv = lat64.shape[1] if valid_n is None else int(valid_n[r])
+        k = int(np.searchsorted(ticks, nv, side="right"))
+        if k == 0:
+            continue
+        mu[r, :k], sd[r, :k], cnt[r, :k] = \
+            spike_mod.masked_sliding_baseline_stats(
+                lat64[r, :nv], v[r, :nv], starts[:k], bn)
+    return mu, sd, cnt
+
+
 def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
                      threshold: float = 3.0, persistence: float = 0.0,
                      valid_n: Optional[np.ndarray] = None,
                      moments: Optional[Tuple[np.ndarray, np.ndarray]] = None,
                      chunk: int = 4096,
+                     valid: Optional[np.ndarray] = None,
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """The batched sweep's exact-f64 CPU path: score-screened, no guard.
 
@@ -142,6 +178,15 @@ def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
     ``detect_events`` consumes score/onset only for fired ticks);
     screened-out ticks report score 0 / onset -1, as do masked ragged
     ticks (``valid_n``).
+
+    ``valid`` (rows, T) bool adds per-tick validity (chaos hardening):
+    invalid cells enter neither moments nor the screen (they are staged
+    -inf, so no block containing only poison can look hot), survivors are
+    re-decided through ``spike.detect_sweep_at_masked``, and ticks with
+    under ``MIN_VALID_BASELINE_N`` valid baseline samples are refused —
+    the exact path then matches ``spike.detect_sweep_masked`` fire for
+    fire.  An all-true mask is dropped, keeping the clean path
+    byte-identical.
     """
     lat64 = np.asarray(lat, np.float64)
     R, T = lat64.shape
@@ -155,9 +200,23 @@ def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
         raise ValueError(f"ticks must lie in [{wn + bn}, {T}]")
     vn = (np.full(R, T, np.int64) if valid_n is None
           else np.asarray(valid_n, np.int64))
+    vmask = None
+    if valid is not None:
+        vmask = np.asarray(valid, bool)
+        if vmask.shape != (R, T):
+            raise ValueError(f"valid {vmask.shape} vs lat {lat64.shape}")
+        if vmask.all():
+            vmask = None
+    bcnt = None
     if moments is None:
-        moments = rolling_moments(lat64, ticks, wn, bn,
-                                  None if valid_n is None else vn)
+        if vmask is None:
+            moments = rolling_moments(lat64, ticks, wn, bn,
+                                      None if valid_n is None else vn)
+        else:
+            mm, ss, bcnt = rolling_moments_masked(
+                lat64, vmask, ticks, wn, bn,
+                None if valid_n is None else vn)
+            moments = (mm, ss)
     mu, sd = moments
     tick_ok = ticks[None, :] <= vn[:, None]
     score = np.zeros((R, nt))
@@ -168,7 +227,7 @@ def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
     g = 64
     nB = -(-T // g)
     Bpad = np.full((R, nB * g), -np.inf)
-    Bpad[:, :T] = lat64
+    Bpad[:, :T] = lat64 if vmask is None else np.where(vmask, lat64, -np.inf)
     Bmax = Bpad.reshape(R, nB, g).max(axis=2)              # (R, nB)
     m = wn // g + 2
     k0 = (ticks - wn) // g
@@ -179,6 +238,8 @@ def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
     bound = g * ((zb > threshold) & inwin[None, :, :]).sum(axis=2)
     min_hot = persistence_count(wn, persistence)
     cand_mask = (bound >= max(min_hot, 1)) & tick_ok
+    if bcnt is not None:
+        cand_mask &= bcnt >= spike_mod.MIN_VALID_BASELINE_N
     # surviving ticks: the oracle's exact rule, per row so the window
     # gather is a strided view of an L2-resident series
     for r in np.flatnonzero(cand_mask.any(axis=1)):
@@ -186,9 +247,17 @@ def sweep_rows_exact(lat, wn: int, bn: int, ticks: np.ndarray,
         row = lat64[r, :int(vn[r])] if valid_n is not None else lat64[r]
         for lo in range(0, ci.size, chunk):
             sl = ci[lo:lo + chunk]
-            f, s, o = spike_mod.detect_sweep_at(
-                row, wn, ticks[sl], mu[r, sl], sd[r, sl],
-                threshold, persistence)
+            if vmask is None:
+                f, s, o = spike_mod.detect_sweep_at(
+                    row, wn, ticks[sl], mu[r, sl], sd[r, sl],
+                    threshold, persistence)
+            else:
+                vrow = vmask[r, :int(vn[r])] if valid_n is not None \
+                    else vmask[r]
+                f, s, o = spike_mod.detect_sweep_at_masked(
+                    row, vrow, wn, ticks[sl], mu[r, sl], sd[r, sl],
+                    threshold, persistence,
+                    baseline_count=None if bcnt is None else bcnt[r, sl])
             fire[r, sl], score[r, sl], onset[r, sl] = f, s, o
     return fire, score, onset
 
@@ -200,6 +269,7 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
                argmax_fallback: bool = False, eps: float = SWEEP_GUARD_EPS,
                use_kernel: bool = False, interpret: bool = True,
                block_t: Optional[int] = None,
+               valid: Optional[np.ndarray] = None,
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Batched :func:`repro.core.spike.detect_sweep` over a latency slab.
 
@@ -226,6 +296,16 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
     False / onset -1).  ``moments`` overrides the exact-f64 rolling
     (mu, sd) prep — the fleet detect path passes ``detect_rows``-style
     direct moments so the single-tick decision matches its oracle.
+
+    ``valid`` (rows, T) bool adds per-tick validity (chaos hardening):
+    invalid cells are staged as ``MASK_NEG`` — the same sentinel the
+    kernels already use for padded lanes — so their z is astronomically
+    negative and they can neither look hot nor win the max/argmax;
+    rolling moments come from the masked prefix pass, and ticks whose
+    baseline holds fewer than ``MIN_VALID_BASELINE_N`` valid samples (or
+    whose window holds no valid cell) are forced quiet host-side after
+    the dispatch.  An all-true mask is dropped before staging, so the
+    clean path is byte-identical to ``valid=None``.
     """
     lat = np.asarray(lat)
     if lat.ndim != 2:
@@ -246,18 +326,52 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
         vn = np.asarray(valid_n, np.int64)
         if vn.shape != (R,):
             raise ValueError(f"valid_n {vn.shape} vs rows {R}")
+    vmask = None
+    if valid is not None:
+        vmask = np.asarray(valid, bool)
+        if vmask.shape != (R, T):
+            raise ValueError(f"valid {vmask.shape} vs lat {lat.shape}")
+        if vmask.all():
+            vmask = None
+    bcnt = None
     if moments is None:
-        moments = rolling_moments(np.asarray(lat, np.float64), ticks,
-                                  wn, bn, None if valid_n is None else vn)
+        if vmask is None:
+            moments = rolling_moments(np.asarray(lat, np.float64), ticks,
+                                      wn, bn,
+                                      None if valid_n is None else vn)
+        else:
+            mm, ss, bcnt = rolling_moments_masked(
+                np.asarray(lat, np.float64), vmask, ticks, wn, bn,
+                None if valid_n is None else vn)
+            moments = (mm, ss)
     mu, sd = moments
     min_hot = persistence_count(wn, persistence)
+    lat32 = np.ascontiguousarray(lat, np.float32)
+    if vmask is not None:
+        lat32 = np.where(vmask, lat32, np.float32(spike_mod.MASK_NEG))
     fire, score, onset, marg = _sweep_jit(
-        jnp.asarray(np.ascontiguousarray(lat, np.float32)),
+        jnp.asarray(lat32),
         jnp.asarray(np.asarray(mu, np.float32)),
         jnp.asarray(np.asarray(sd, np.float32)),
         jnp.asarray(ticks, jnp.int32), jnp.asarray(vn, jnp.int32),
         wn, float(threshold), int(min_hot), float(eps),
         bool(argmax_fallback), bool(use_kernel), bool(interpret),
         tuning.sweep_block_t(block_t))
-    return (np.asarray(fire).astype(bool), np.array(score, np.float64),
-            np.asarray(onset).astype(np.intp), np.asarray(marg).astype(bool))
+    fire = np.asarray(fire).astype(bool)
+    score = np.array(score, np.float64)
+    onset = np.asarray(onset).astype(np.intp)
+    marg = np.asarray(marg).astype(bool)
+    if vmask is not None:
+        # host-side validity gate: a baseline you cannot estimate (or a
+        # window with zero valid cells) may never fire, whatever the
+        # staged sentinel z came out to
+        cv = np.concatenate([np.zeros((R, 1)), np.cumsum(vmask, axis=1)],
+                            axis=1)
+        wcnt = cv[:, ticks] - cv[:, ticks - wn]
+        ok = wcnt > 0
+        if bcnt is not None:
+            ok &= bcnt >= spike_mod.MIN_VALID_BASELINE_N
+        fire &= ok
+        score = np.where(ok, score, 0.0)
+        onset = np.where(ok, onset, -1)
+    return fire, score, onset, marg

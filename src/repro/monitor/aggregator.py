@@ -41,9 +41,11 @@ from repro.telemetry.agent import TelemetryAgent
 class AggregatorStats:
     assemblies: int = 0
     torn_retries: int = 0       # seqlock validate-retry loops across hosts
+    torn_giveups: int = 0       # reads that exhausted retries (host skipped)
     ragged_hosts: int = 0       # short (late-joiner) rows staged
     dead_hosts: int = 0         # stale rows zeroed out of the slab
     masked_hosts: int = 0       # young rows masked out of a diagnosis
+    hung_agents: int = 0        # agent threads that outlived stop()'s join
 
 
 @dataclasses.dataclass
@@ -53,6 +55,11 @@ class FleetSnapshot:
     valid: np.ndarray           # (hosts,) true sample count per row
     skipped: List[int]          # dead/stale hosts (rows zeroed)
     retries: int                # torn-read retries during this assembly
+    #: (hosts, C, T) bool — per-cell validity of the staged slab.  False
+    #: marks cells a collector failed to deliver (the agent writes NaN for
+    #: crashed/backoff-skipped collectors); zeroed dead/skipped rows stay
+    #: all-True — their zeros are deliberate quiet, not corruption.
+    valid_mask: Optional[np.ndarray] = None
     #: live hosts too young to fill the diagnosed span — rows zeroed by
     #: ``diagnose`` for that round (NOT flagged-eligible; an operator must
     #: not read their zero spike score as "monitored and healthy")
@@ -91,18 +98,33 @@ class FleetAggregator:
         self._ts_rows = np.zeros((H, T), np.float64)
         self._scratch = np.empty((C, T), np.float32)
         self._ts_scratch = np.empty(T, np.float64)
+        self._valid = np.ones((H, C, T), bool)
         self.stats = AggregatorStats()
         self.last_snapshot: Optional[FleetSnapshot] = None
+        self._stopped = False
 
     # ------------------------------------------------------------ lifecycle
     def start_background(self) -> None:
         """Start every agent's sampling thread (live deployment mode)."""
+        self._stopped = False
         for a in self.agents:
             a.run_background()
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 5.0) -> None:
+        """Stop every agent; idempotent and bounded.
+
+        Each agent's join waits at most ``timeout`` seconds — a collector
+        wedged in a syscall cannot hang fleet shutdown; such threads are
+        counted in ``stats.hung_agents`` and left daemonized.  A second
+        ``stop`` is a no-op.
+        """
+        if self._stopped:
+            return
+        self._stopped = True
         for a in self.agents:
-            a.stop()
+            a.stop(timeout=timeout)
+            if a.hung:
+                self.stats.hung_agents += 1
 
     def run_virtual(self, t_start: float, t_end: float) -> None:
         """Drive every agent over the span on the shared virtual clock."""
@@ -121,6 +143,7 @@ class FleetAggregator:
         H, T = len(self.agents), self.window_n
         period = 1.0 / self.rate_hz
         retries = 0
+        giveups0 = sum(a.ring.torn_giveups for a in self.agents)
 
         # phase 1: consistent (count, newest-ts) probe per host to pick the
         # common right edge of the fleet window
@@ -149,6 +172,7 @@ class FleetAggregator:
                 # live telemetry — zero the row (flat => never flagged)
                 self._slab[h] = 0.0
                 self._ts_rows[h] = 0.0
+                self._valid[h] = True
                 skipped.append(h)
                 self.stats.dead_hosts += int(have[h])
                 continue
@@ -170,6 +194,7 @@ class FleetAggregator:
             ts_h, d_h = ts_h[:k], d_h[:, :k]
             if k < self.min_samples:
                 self._slab[h] = 0.0
+                self._valid[h] = True
                 skipped.append(h)
                 continue
             row = self._slab[h]
@@ -191,13 +216,19 @@ class FleetAggregator:
                     ts_h[0] - period * np.arange(T - k, 0, -1))
                 self.stats.ragged_hosts += 1
             valid[h] = k
+            # per-cell validity: the agent marks failed/backoff-skipped
+            # collectors' channels NaN, so finiteness IS the delivery mask
+            np.isfinite(row, out=self._valid[h])
             if ref_host < 0 or k > valid[ref_host]:
                 ref_host = h
 
         self.stats.assemblies += 1
         self.stats.torn_retries += retries
+        self.stats.torn_giveups += (
+            sum(a.ring.torn_giveups for a in self.agents) - giveups0)
         snap = FleetSnapshot(ts=self._ts_rows[ref_host], slab=self._slab,
-                             valid=valid, skipped=skipped, retries=retries)
+                             valid=valid, skipped=skipped, retries=retries,
+                             valid_mask=self._valid)
         self.last_snapshot = snap
         return snap
 
@@ -229,10 +260,15 @@ class FleetAggregator:
             return None
         for h in np.flatnonzero((snap.valid > 0) & (snap.valid < k)):
             snap.slab[h] = 0.0      # cannot fill the span: quiet this round
+            if snap.valid_mask is not None:
+                snap.valid_mask[h] = True   # zeros are deliberate quiet
             snap.masked.append(int(h))
         self.stats.masked_hosts += len(snap.masked)
         T = self.window_n
+        vm = snap.valid_mask
         if k < T:
             return monitor.diagnose_fleet(
-                snap.ts[T - k:], snap.slab[:, :, T - k:], self.channels)
-        return monitor.diagnose_fleet(snap.ts, snap.slab, self.channels)
+                snap.ts[T - k:], snap.slab[:, :, T - k:], self.channels,
+                valid=None if vm is None else vm[:, :, T - k:])
+        return monitor.diagnose_fleet(snap.ts, snap.slab, self.channels,
+                                      valid=vm)

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import confidence as conf_mod
+from repro.core import sanitize as sanitize_mod
 from repro.core.engine import (
     MIN_BASELINE_N, EngineConfig, evidence_layout,
     orient_about_baseline, pick_baseline_slice,
@@ -61,6 +62,7 @@ class Mitigation(str, enum.Enum):
     HIERARCHICAL_ALLREDUCE = "fallback_hierarchical_allreduce"  # NIC/DCN
     EXCLUDE_AND_RESCALE = "checkpoint_exclude_host_rescale"     # persistent
     THROTTLE_REVIEW = "review_power_thermal_policy"             # GPU verdict
+    RESTART_TELEMETRY = "restart_telemetry_agent"  # telemetry-fault verdict
 
 
 VERDICT_TO_MITIGATION = {
@@ -68,6 +70,7 @@ VERDICT_TO_MITIGATION = {
     CauseClass.CPU: Mitigation.REPIN_CPU,
     CauseClass.NIC: Mitigation.HIERARCHICAL_ALLREDUCE,
     CauseClass.GPU: Mitigation.THROTTLE_REVIEW,
+    CauseClass.TELEMETRY: Mitigation.RESTART_TELEMETRY,
     CauseClass.UNKNOWN: Mitigation.NONE,
 }
 
@@ -87,6 +90,10 @@ class FleetDiagnosis:
     #: wall seconds per pipeline stage, disjoint (detect / gather / kernel /
     #: rank / assemble) — they sum to the diagnose_fleet wall total
     stage_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: hosts whose telemetry is quarantined this round (persistently-bad
+    #: validity) — fire suppressed, score zeroed, mitigation
+    #: RESTART_TELEMETRY; never reported as stragglers
+    quarantined: List[int] = dataclasses.field(default_factory=list)
 
 
 class FleetMonitor:
@@ -95,7 +102,12 @@ class FleetMonitor:
     def __init__(self, config: Optional[EngineConfig] = None,
                  use_kernels: bool = True,
                  persistent_threshold: int = 3,
-                 fast_detect: bool = True):
+                 fast_detect: bool = True,
+                 quarantine_enter_frac: float = 0.25,
+                 quarantine_exit_frac: float = 0.05,
+                 quarantine_enter_rounds: int = 2,
+                 quarantine_backoff_init: int = 2,
+                 quarantine_backoff_max: int = 16):
         self.cfg = config or EngineConfig()
         self.use_kernels = use_kernels
         self.persistent_threshold = persistent_threshold
@@ -103,6 +115,22 @@ class FleetMonitor:
         #: False = seed spike-dispatch + f64 detect_rows replay (oracle)
         self.fast_detect = fast_detect
         self._strikes: Dict[int, int] = {}
+        # telemetry quarantine (hysteresis): a host whose latency-channel
+        # invalid fraction exceeds `enter_frac` for `enter_rounds`
+        # consecutive rounds is quarantined — its telemetry is the fault,
+        # so it must never fire as a straggler.  Re-admission needs
+        # `backoff` consecutive clean rounds (invalid fraction at or below
+        # `exit_frac`); the backoff doubles on every re-quarantine up to
+        # `backoff_max`, so a flapping agent converges to quarantined.
+        self.quarantine_enter_frac = float(quarantine_enter_frac)
+        self.quarantine_exit_frac = float(quarantine_exit_frac)
+        self.quarantine_enter_rounds = int(quarantine_enter_rounds)
+        self.quarantine_backoff_init = int(quarantine_backoff_init)
+        self.quarantine_backoff_max = int(quarantine_backoff_max)
+        self._quarantined: set = set()
+        self._bad_streak: Dict[int, int] = {}    # candidate bad rounds
+        self._clean_streak: Dict[int, int] = {}  # quarantined clean rounds
+        self._quar_backoff: Dict[int, int] = {}  # clean rounds required
 
     # ------------------------------------------------------------- batched L2
     def host_spike_scores(self, latency_windows: np.ndarray,
@@ -125,18 +153,77 @@ class FleetMonitor:
             np.asarray(metric_windows, np.float32),
             max_lag=self.cfg.max_lag, use_kernel=self.use_kernels))
 
+    # ----------------------------------------------------------- quarantine
+    def _update_quarantine(self, bad_frac: np.ndarray) -> np.ndarray:
+        """Advance the per-host quarantine state machine one round.
+
+        ``bad_frac`` (hosts,) is the invalid fraction of each host's
+        latency channel over the detection tail.  Returns the (hosts,)
+        bool mask of hosts quarantined THIS round."""
+        H = int(bad_frac.size)
+        quar = np.zeros(H, bool)
+        for h in range(H):
+            bf = float(bad_frac[h])
+            if h in self._quarantined:
+                if bf <= self.quarantine_exit_frac:
+                    self._clean_streak[h] = self._clean_streak.get(h, 0) + 1
+                    need = self._quar_backoff.get(
+                        h, self.quarantine_backoff_init)
+                    if self._clean_streak[h] >= need:
+                        # re-admitted: participates again from this round
+                        self._quarantined.discard(h)
+                        self._clean_streak.pop(h, None)
+                        self._bad_streak.pop(h, None)
+                        continue
+                else:
+                    self._clean_streak[h] = 0
+                quar[h] = True
+            elif bf > self.quarantine_enter_frac:
+                self._bad_streak[h] = self._bad_streak.get(h, 0) + 1
+                if self._bad_streak[h] >= self.quarantine_enter_rounds:
+                    self._quarantined.add(h)
+                    self._clean_streak[h] = 0
+                    prev = self._quar_backoff.get(h)
+                    self._quar_backoff[h] = (
+                        self.quarantine_backoff_init if prev is None
+                        else min(prev * 2, self.quarantine_backoff_max))
+                    quar[h] = True
+            else:
+                self._bad_streak.pop(h, None)
+        return quar
+
     # ------------------------------------------------------------- fleet RCA
     def diagnose_fleet(self, ts: np.ndarray, host_data: np.ndarray,
-                       channels: Sequence[str]) -> FleetDiagnosis:
+                       channels: Sequence[str],
+                       valid: Optional[np.ndarray] = None) -> FleetDiagnosis:
         """host_data: (hosts, C, T) aligned windows; finds every straggler
         above threshold and explains all of them in one batched dispatch.
 
         A window too short to leave ``MIN_BASELINE_N`` baseline samples
         after clamping returns a quiet verdict carrying a zero-valued
         ``short_baseline_skip`` entry in ``stage_seconds`` — detection on a
-        sigma-floored micro-baseline would flag quiet hosts."""
+        sigma-floored micro-baseline would flag quiet hosts.
+
+        ``valid`` (hosts, C, T) bool marks per-cell telemetry validity
+        (chaos hardening).  Invalid latency cells are excluded from
+        detection via the masked oracle (never enter baselines, never
+        fire); invalid evidence cells are forward-filled before the RCA
+        gather.  Hosts whose latency channel stays persistently invalid
+        are *quarantined* by a hysteresis state machine: their telemetry
+        is the fault, so they are suppressed from straggler detection and
+        reported in ``FleetDiagnosis.quarantined`` with mitigation
+        ``RESTART_TELEMETRY`` — a telemetry fault must never surface as a
+        GPU/host-interference verdict.  An all-true (or absent) mask
+        leaves the clean path byte-identical."""
         hosts, C, T = host_data.shape
         li = list(channels).index(self.cfg.latency_metric)
+        vfull = None
+        if valid is not None:
+            v = np.asarray(valid, bool)
+            if v.shape != host_data.shape:
+                raise ValueError(f"valid {v.shape} vs data {host_data.shape}")
+            if not v.all():
+                vfull = v
         wn, bn = self.cfg.window_n, self.cfg.baseline_n
         wn = min(wn, T // 2)
         bn = min(bn, T - wn)
@@ -155,24 +242,44 @@ class FleetMonitor:
                 stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0})
         t_detect = time.perf_counter()
         lat = host_data[:, li, :]
+        # telemetry quarantine: invalid fraction of the latency channel
+        # over the detection tail drives the hysteresis state machine; the
+        # update runs every full round (clean rounds advance re-admission)
+        lvt = None
+        if vfull is not None:
+            lvt = np.ascontiguousarray(vfull[:, li, T - wn - bn:T])
+            if lvt.all():
+                lvt = None
+        bad_frac = (np.zeros(hosts) if lvt is None
+                    else 1.0 - lvt.mean(axis=1))
+        quar = self._update_quarantine(bad_frac)
+        qhosts = np.flatnonzero(quar)
         # persistence gate, the scalar spike.detect rule batched over hosts:
         # a host is a straggler only if `persistence` of its window sits
         # above mu + thr*sigma — bare max-z over 500 correlated ambient
         # samples trips routinely.  The gate also yields each survivor's
         # onset estimate for Layer 3.
-        if self.fast_detect:
+        if self.fast_detect or lvt is not None:
             # one streaming-detect dispatch over the trailing slab view:
             # score + gate + onset per host, one host->device copy, no
-            # candidate re-slice
+            # candidate re-slice.  A masked round routes through this call
+            # on BOTH detect paths — the mask branch IS the f64 oracle, so
+            # fast and oracle stay trivially byte-identical under chaos.
             fire, scores, onset_all = detect_ops.detect_hosts_slab(
                 lat[:, T - wn - bn:T], wn, bn,
                 self.cfg.threshold, self.cfg.persistence,
-                use_kernel=self.use_kernels)
+                use_kernel=self.use_kernels, valid=lvt)
+            if qhosts.size:
+                fire[qhosts] = False
+                scores[qhosts] = 0.0
             cand = np.flatnonzero(fire)
             onset_rel = onset_all[cand]
         else:
             scores = self.host_spike_scores(lat[:, T - wn:],
                                             lat[:, T - wn - bn:T - wn])
+            if qhosts.size:
+                scores = np.array(scores)   # kernel output may be readonly
+                scores[qhosts] = 0.0
             cand = np.flatnonzero(scores > self.cfg.threshold)
             onset_rel = np.empty(0, dtype=np.intp)
             if cand.size:
@@ -196,7 +303,8 @@ class FleetMonitor:
         if flagged.size:
             diagnoses = self._diagnose_hosts(ts, host_data, channels, li,
                                              flagged, (T - wn) + onset_rel,
-                                             scores, wn, bn, stage)
+                                             scores, wn, bn, stage,
+                                             valid=vfull)
             for h in flagged:
                 h = int(h)
                 d = diagnoses.get(h)
@@ -208,6 +316,12 @@ class FleetMonitor:
                     mitigations[h] = Mitigation.EXCLUDE_AND_RESCALE
                 else:
                     mitigations[h] = VERDICT_TO_MITIGATION[d.top_cause]
+        # quarantined hosts carry the telemetry-fault verdict: fire was
+        # suppressed and score zeroed above, so they can neither lead the
+        # flagged list nor accrue strikes — the only actionable output is
+        # "restart that host's telemetry agent"
+        for h in qhosts:
+            mitigations[int(h)] = Mitigation.RESTART_TELEMETRY
         # the worst *persistent* host; bare arg-max only as the quiet-fleet
         # readout (a transient max-z glitch must not name a straggler)
         straggler = int(flagged[0]) if flagged.size else int(np.argmax(scores))
@@ -219,14 +333,17 @@ class FleetMonitor:
             per_host_scores=scores,
             flagged_hosts=[int(h) for h in flagged],
             diagnoses=diagnoses, mitigations=mitigations,
-            stage_seconds=stage)
+            stage_seconds=stage,
+            quarantined=[int(h) for h in qhosts])
 
     # ----------------------------------------------------- batched Layer 3+4
     def _diagnose_hosts(self, ts: np.ndarray, host_data: np.ndarray,
                         channels: Sequence[str], li: int,
                         flagged: np.ndarray, onset_idx: np.ndarray,
                         scores: np.ndarray, wn: int, bn: int,
-                        stage: Dict[str, float]) -> Dict[int, Diagnosis]:
+                        stage: Dict[str, float],
+                        valid: Optional[np.ndarray] = None,
+                        ) -> Dict[int, Diagnosis]:
         """Explain every flagged host with one fused-kernel dispatch.
 
         All flagged hosts share the trailing RCA window [T-rn, T): an onset
@@ -258,8 +375,16 @@ class FleetMonitor:
         # dtype) — no f64 round-trip of the evidence slab; the oracle path
         # keeps the seed's f64 gather
         gather_dtype = np.float32 if self.fast_detect else np.float64
-        X = host_data[np.ix_(flagged, rows, np.arange(T - rn - nb, T))
+        cols = np.arange(T - rn - nb, T)
+        X = host_data[np.ix_(flagged, rows, cols)
                       ].astype(gather_dtype)                    # (H, 1+M, nb+rn)
+        if valid is not None:
+            # invalid evidence cells (crashed collector, frozen channel)
+            # must not skew orientation means or correlations: NaN them
+            # out, then carry the last valid reading forward — degraded
+            # evidence, never fabricated spikes
+            X[~valid[np.ix_(flagged, rows, cols)]] = np.nan
+        X = sanitize_mod.forward_fill(X)
         L_win = X[:, 0, nb:]                                    # (H, rn)
         Xm = X[:, 1:, :]                                        # (H, M, nb+rn)
 

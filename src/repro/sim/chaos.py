@@ -1,0 +1,234 @@
+"""Chaos injection: telemetry-fault timelines for robustness hardening.
+
+The eval's D1-D4 disturbances corrupt the *host* (contention the monitor
+must diagnose); chaos events corrupt the *telemetry itself* (faults the
+monitor must survive without lying).  The paper's premise — host-side
+telemetry as diagnostic ground — holds only if a broken probe cannot
+masquerade as a broken host, so this module injects the probe failures a
+fleet actually sees and the rest of the stack is hardened against:
+
+  ``nan`` / ``inf``     burst of non-finite readings on one channel
+  ``freeze``            stuck-at channel: one value repeats for the span
+                        (optionally elevated — the nastiest case, a frozen
+                        spike that *looks* persistent)
+  ``drop``              dropped ticks: every channel unreadable (NaN) for
+                        the span — also models an agent crash/restart gap
+  ``counter_reset``     cumulative counter restarts from zero mid-run
+                        (negative delta at the seam)
+  ``clock_jump``        sampling clock steps forward/backward mid-run
+  ``exception``         collector raises instead of returning a sample
+  ``slow``              collector blocks past the sampling deadline
+
+The first four corrupt telemetry *values* and apply directly to a trial
+matrix (:func:`apply_chaos`) — composable with any D1-D4 fault timeline.
+The last four are *behavioral* and only make sense at the collector/agent
+boundary: :class:`ChaosCollector` wraps any :class:`Collector` and acts
+them out, and :func:`apply_clock_jumps` warps a timestamp grid for the
+rate-conversion guards.  Everything is seeded through the caller's
+``numpy`` generator — a chaos timeline is exactly reproducible from
+``(seed, scenario)`` like every fault timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.telemetry.collectors import Collector
+
+#: chaos kinds that rewrite trial-matrix values (handled by apply_chaos)
+VALUE_KINDS = ("nan", "inf", "freeze", "drop")
+#: chaos kinds acted out at the collector/agent boundary
+BEHAVIOR_KINDS = ("counter_reset", "clock_jump", "exception", "slow")
+CHAOS_KINDS = VALUE_KINDS + BEHAVIOR_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One telemetry fault on a chaos timeline (exact ground truth).
+
+    ``channel`` None targets every channel (mandatory for ``drop``);
+    ``magnitude`` is kind-specific: freeze elevation factor (value held at
+    ``x * (1 + magnitude)``), inf sign (negative -> -inf), clock-jump
+    seconds (negative -> backward), slow-collector stall seconds.
+    """
+
+    kind: str
+    t_on: float
+    dur_s: float
+    channel: Optional[str] = None
+    magnitude: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in CHAOS_KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r}")
+
+    @property
+    def t_off(self) -> float:
+        return self.t_on + self.dur_s
+
+    def active(self, t: float) -> bool:
+        return self.t_on <= t < self.t_off
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosPolicy:
+    """A composable, immutable set of chaos events.
+
+    ``compose`` merges two policies (time-sorted), so scenario builders
+    can layer e.g. a freeze policy over a drop policy the same way fault
+    timelines compose out of FaultEvents.
+    """
+
+    events: Tuple[ChaosEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(
+            sorted(self.events, key=lambda e: e.t_on)))
+
+    def compose(self, other: "ChaosPolicy") -> "ChaosPolicy":
+        return ChaosPolicy(self.events + other.events)
+
+    def active(self, t: float,
+               kinds: Optional[Sequence[str]] = None) -> List[ChaosEvent]:
+        return [e for e in self.events if e.active(t)
+                and (kinds is None or e.kind in kinds)]
+
+    def overlaps(self, t0: float, t1: float) -> bool:
+        return any(e.t_on < t1 and t0 < e.t_off for e in self.events)
+
+
+def _span(ts_or_rate, T: int, ev: ChaosEvent) -> Tuple[int, int]:
+    rate = float(ts_or_rate)
+    i0 = max(0, int(round(ev.t_on * rate)))
+    i1 = min(T, int(round(ev.t_off * rate)))
+    return i0, i1
+
+
+def apply_chaos(data: np.ndarray, channels: Sequence[str], rate_hz: float,
+                events: Sequence[ChaosEvent]) -> np.ndarray:
+    """Corrupt a (C, T) trial matrix in place with every value-kind event.
+
+    Behavioral kinds are ignored here (they have no matrix encoding).
+    Returns the (C, T) bool mask of corrupted cells — the ground truth a
+    test can hand to the masked detection paths, and exactly the cells
+    ``sanitize.validity_mask`` must refuse (nan/inf/drop) or retroactively
+    invalidate (freeze runs).
+    """
+    C, T = data.shape
+    index = {c: i for i, c in enumerate(channels)}
+    hit = np.zeros((C, T), bool)
+    for ev in events:
+        if ev.kind not in VALUE_KINDS:
+            continue
+        i0, i1 = _span(rate_hz, T, ev)
+        if i1 <= i0:
+            continue
+        rows = (range(C) if ev.channel is None or ev.kind == "drop"
+                else [index[ev.channel]])
+        for ci in rows:
+            if ev.kind == "nan" or ev.kind == "drop":
+                data[ci, i0:i1] = np.nan
+            elif ev.kind == "inf":
+                data[ci, i0:i1] = -np.inf if ev.magnitude < 0 else np.inf
+            else:  # freeze: stuck at (optionally elevated) first value
+                data[ci, i0:i1] = data[ci, i0] * (1.0 + ev.magnitude)
+            hit[ci, i0:i1] = True
+    return hit
+
+
+def apply_clock_jumps(ts: np.ndarray,
+                      events: Sequence[ChaosEvent]) -> np.ndarray:
+    """Warp a timestamp grid with every ``clock_jump`` event.
+
+    Samples at or after ``t_on`` shift by ``magnitude`` seconds (negative
+    = backward step, producing the non-monotonic dt <= 0 sequences the
+    rate-conversion guards must survive).  Returns a new array.
+    """
+    out = np.asarray(ts, np.float64).copy()
+    for ev in events:
+        if ev.kind != "clock_jump":
+            continue
+        out[np.asarray(ts) >= ev.t_on] += ev.magnitude
+    return out
+
+
+class ChaosCollector(Collector):
+    """Wrap any collector and act out a chaos policy at its boundary.
+
+    Value kinds corrupt the inner sample's readings (named channel, or
+    all); ``exception`` raises instead of returning (exercising the
+    agent's crash isolation + backoff), ``slow`` stalls past the sampling
+    deadline (exercising the watchdog), ``counter_reset`` re-bases the
+    named channel to zero at ``t_on`` so the agent sees a negative delta.
+    ``sample_block`` refuses any grid a chaos event overlaps — the agent
+    falls back to the per-tick path, where chaos actually applies.
+    """
+
+    def __init__(self, inner: Collector, policy: ChaosPolicy):
+        self.inner = inner
+        self.policy = policy
+        self.metrics = inner.metrics
+        self._frozen: Dict[Tuple[int, Optional[str]], float] = {}
+        self._reset_base: Dict[str, float] = {}
+        #: chaos bookkeeping (ground truth for tests)
+        self.exceptions_raised = 0
+        self.stalls = 0
+
+    def sample(self, now: float) -> Dict[str, float]:
+        active = self.policy.active(now)
+        for ev in active:
+            if ev.kind == "exception":
+                self.exceptions_raised += 1
+                raise RuntimeError(
+                    f"chaos: collector exception at t={now:.3f}")
+        for ev in active:
+            if ev.kind == "slow":
+                self.stalls += 1
+                time.sleep(max(float(ev.magnitude), 0.0))
+        out = self.inner.sample(now)
+        for ev in active:
+            targets = (list(out) if ev.channel is None
+                       else ([ev.channel] if ev.channel in out else []))
+            if ev.kind == "nan" or ev.kind == "drop":
+                for c in targets:
+                    out[c] = float("nan")
+            elif ev.kind == "inf":
+                v = float("-inf") if ev.magnitude < 0 else float("inf")
+                for c in targets:
+                    out[c] = v
+            elif ev.kind == "freeze":
+                key = (id(ev), ev.channel)
+                for c in targets:
+                    k = (id(ev), c)
+                    if k not in self._frozen:
+                        self._frozen[k] = out[c] * (1.0 + ev.magnitude)
+                    out[c] = self._frozen[k]
+                del key
+        # counter resets persist past the event window: a restarted
+        # counter stays re-based, it does not un-reset at t_off
+        for ev in self.policy.events:
+            if ev.kind != "counter_reset" or now < ev.t_on:
+                continue
+            for c in ([ev.channel] if ev.channel else list(out)):
+                if c not in out:
+                    continue
+                if c not in self._reset_base:
+                    self._reset_base[c] = out[c]
+                out[c] = out[c] - self._reset_base[c]
+        return out
+
+    def sample_block(self, grid: np.ndarray,
+                     ) -> Optional[Dict[str, np.ndarray]]:
+        g = np.asarray(grid, np.float64)
+        if g.size and self.policy.overlaps(float(g[0]), float(g[-1])):
+            return None
+        if g.size and any(e.kind == "counter_reset" and float(g[-1]) >= e.t_on
+                          for e in self.policy.events):
+            return None
+        return self.inner.sample_block(grid)
+
+    def close(self) -> None:
+        self.inner.close()

@@ -24,6 +24,23 @@ Scenario classes (``SCENARIO_CLASSES``):
                     slab (cross-host correlated incident); unaffected
                     hosts soak.
 
+Chaos classes (telemetry corruption via :mod:`repro.sim.chaos`, appended
+AFTER ``fleet_nic`` so existing class indices — and therefore every
+committed trial's ``protocol_seed`` — stay byte-identical):
+
+  ``chaos_soak``      no host fault; NaN burst + elevated freeze + dropped
+                      ticks on the telemetry.  Zero-false-verdict control
+                      for the chaos-hardened pipeline.
+  ``chaos_overlap``   one real fault *while* the telemetry is corrupted
+                      (baseline freeze + in-window NaN burst) — the fault
+                      must still be detected within latency targets.
+  ``frozen_channel``  latency channel stuck at an elevated value for tens
+                      of seconds (plus a frozen evidence channel): the
+                      canonical "broken probe imitates a persistent
+                      incident" trap.  Zero verdicts expected.
+  ``crash_restart``   agent crash/restart: every channel unreadable for a
+                      multi-second gap mid-run.  Zero verdicts expected.
+
 ``compose_trial`` is the shared builder: ambient host signals generated
 once, every :class:`FaultEvent` applied through the *same* envelope /
 leakage machinery as ``make_trial`` (additive host-channel effects, lagged
@@ -41,9 +58,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.taxonomy import CauseClass
+from repro.sim import chaos as chaos_mod
+from repro.sim.chaos import ChaosEvent
 from repro.sim.disturbances import (
     CLASS_ORDER, DISTURBANCES, apply_disturbance, inject_confuser,
 )
+from repro.telemetry.schema import LATENCY_METRIC
 from repro.sim.hostmodel import HostSignalModel
 from repro.sim.scenario import finalize_trial_channels, protocol_seed
 
@@ -98,6 +118,9 @@ class ScenarioTrial:
     #: consumers can regroup a flat suite into (hosts, C, T) slabs without
     #: reverse-engineering per-host seed derivation
     group: int = 0
+    #: telemetry-corruption ground truth (chaos classes); ``data`` already
+    #: carries the corruption — this records what was injected where
+    chaos: List[ChaosEvent] = dataclasses.field(default_factory=list)
 
     @property
     def rate_hz(self) -> float:
@@ -238,6 +261,73 @@ class ScenarioSpec:
     confuser_prob: float = 0.6
 
 
+# ---------------------------------------------------------------------------
+# chaos classes: telemetry corruption, composable with fault timelines
+# ---------------------------------------------------------------------------
+
+def _sample_chaos_overlap_fault(rng: np.random.Generator) -> List[FaultEvent]:
+    """One strong fault, onset phase-pinned against the 5 s eval cadence.
+
+    Onset in [30.6, 31.4] puts first detection at the 35 s boundary tick
+    with 3.6-4.4 s detection latency — inside the 5 s target with margin
+    left for the injector's ramp/lag AND the in-window NaN burst the
+    chaos sampler adds (>= 175 valid hot samples must survive the
+    persistence gate even with both eating into the window)."""
+    cls = CLASS_ORDER[int(rng.integers(len(CLASS_ORDER)))]
+    intensity = float(np.clip(rng.lognormal(0.5, 0.25), 1.2, 3.0))
+    return [FaultEvent(cls, float(rng.uniform(30.6, 31.4)),
+                       float(rng.uniform(12.0, 16.0)), intensity)]
+
+
+def _chaos_soak_sampler(rng: np.random.Generator,
+                        events: List[FaultEvent]) -> List[ChaosEvent]:
+    del events
+    return [
+        ChaosEvent("nan", float(rng.uniform(30.0, 50.0)),
+                   float(rng.uniform(2.0, 4.0)), channel=LATENCY_METRIC),
+        ChaosEvent("freeze", float(rng.uniform(60.0, 75.0)),
+                   float(rng.uniform(8.0, 12.0)), channel=LATENCY_METRIC,
+                   magnitude=float(rng.uniform(0.5, 1.5))),
+        ChaosEvent("drop", float(rng.uniform(90.0, 105.0)),
+                   float(rng.uniform(1.0, 2.0))),
+    ]
+
+
+def _chaos_overlap_sampler(rng: np.random.Generator,
+                           events: List[FaultEvent]) -> List[ChaosEvent]:
+    t_on = events[0].t_on
+    return [
+        # ambient-value freeze in the pre-onset baseline: retroactive run
+        # invalidation must drop it without starving the >= 32-valid gate
+        ChaosEvent("freeze", float(rng.uniform(8.0, 16.0)),
+                   float(rng.uniform(3.0, 5.0)), channel=LATENCY_METRIC),
+        # NaN burst *inside* the detection window, short enough that the
+        # fault's hot run still clears the persistence count
+        ChaosEvent("nan", t_on + float(rng.uniform(0.2, 0.6)),
+                   float(rng.uniform(0.3, 0.6)), channel=LATENCY_METRIC),
+    ]
+
+
+def _frozen_channel_sampler(rng: np.random.Generator,
+                            events: List[FaultEvent]) -> List[ChaosEvent]:
+    del events
+    return [
+        ChaosEvent("freeze", float(rng.uniform(40.0, 70.0)),
+                   float(rng.uniform(15.0, 25.0)), channel=LATENCY_METRIC,
+                   magnitude=float(rng.uniform(0.5, 1.5))),
+        ChaosEvent("freeze", float(rng.uniform(40.0, 70.0)),
+                   float(rng.uniform(10.0, 20.0)),
+                   channel="cpu_util_other"),
+    ]
+
+
+def _crash_restart_sampler(rng: np.random.Generator,
+                           events: List[FaultEvent]) -> List[ChaosEvent]:
+    del events
+    return [ChaosEvent("drop", float(rng.uniform(40.0, 80.0)),
+                       float(rng.uniform(8.0, 14.0)))]
+
+
 SCENARIOS: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         ScenarioSpec("single", _sample_single,
@@ -259,8 +349,51 @@ SCENARIOS: Dict[str, ScenarioSpec] = {
     )
 }
 
-#: every scenario class, registry samplers first, the fleet class last
-SCENARIO_CLASSES: Tuple[str, ...] = tuple(SCENARIOS) + ("fleet_nic",)
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenarioSpec(ScenarioSpec):
+    """A scenario class whose trials also carry telemetry corruption."""
+
+    chaos_sampler: Optional[Callable[
+        [np.random.Generator, List[FaultEvent]], List[ChaosEvent]]] = None
+
+
+CHAOS_SCENARIOS: Dict[str, ChaosScenarioSpec] = {
+    s.name: s for s in (
+        ChaosScenarioSpec("chaos_soak", _sample_soak,
+                          "no fault; NaN/freeze/drop telemetry corruption",
+                          chaos_sampler=_chaos_soak_sampler),
+        ChaosScenarioSpec("chaos_overlap", _sample_chaos_overlap_fault,
+                          "one real fault under telemetry corruption",
+                          confuser_prob=0.15,
+                          chaos_sampler=_chaos_overlap_sampler),
+        ChaosScenarioSpec("frozen_channel", _sample_soak,
+                          "latency channel stuck at an elevated value",
+                          chaos_sampler=_frozen_channel_sampler),
+        ChaosScenarioSpec("crash_restart", _sample_soak,
+                          "agent crash: all channels dark for a gap",
+                          chaos_sampler=_crash_restart_sampler),
+    )
+}
+
+#: every scenario class: registry samplers first, the fleet class next,
+#: chaos classes LAST — appending after fleet_nic keeps every pre-chaos
+#: class index (and so every committed trial's protocol seed) stable
+SCENARIO_CLASSES: Tuple[str, ...] = (tuple(SCENARIOS) + ("fleet_nic",)
+                                     + tuple(CHAOS_SCENARIOS))
+
+
+def scenario_spec(name: str) -> ScenarioSpec:
+    """Spec lookup across the fault, fleet and chaos registries."""
+    if name in SCENARIOS:
+        return SCENARIOS[name]
+    if name in CHAOS_SCENARIOS:
+        return CHAOS_SCENARIOS[name]
+    if name == "fleet_nic":
+        return ScenarioSpec(
+            "fleet_nic", _sample_soak,
+            "correlated NIC burst across a fleet slab", confuser_prob=0.15)
+    raise KeyError(f"unknown scenario class {name!r}")
 
 
 def make_scenario(seed: int, name: str, *,
@@ -293,13 +426,24 @@ def make_scenario(seed: int, name: str, *,
         for t in trials:
             t.group = seed
         return trials
-    spec = SCENARIOS[name]
+    spec = SCENARIOS.get(name) or CHAOS_SCENARIOS.get(name)
+    if spec is None:
+        raise KeyError(f"unknown scenario class {name!r}")
     rng = np.random.default_rng(seed * 7919 + 13)
     events = spec.sampler(rng)
     cp = spec.confuser_prob if confuser_prob is None else confuser_prob
-    return [compose_trial(seed, events, duration_s=duration_s,
-                          rate_hz=rate_hz, confuser_prob=cp,
-                          scenario=name)]
+    trial = compose_trial(seed, events, duration_s=duration_s,
+                          rate_hz=rate_hz, confuser_prob=cp, scenario=name)
+    chaos_sampler = getattr(spec, "chaos_sampler", None)
+    if chaos_sampler is not None:
+        # chaos gets its own stream: corruption layout never perturbs the
+        # fault/ambient draw, so a chaos class stays comparable with its
+        # fault-only counterpart at the same seed
+        crng = np.random.default_rng(seed * 104729 + 7)
+        chaos = chaos_sampler(crng, events)
+        chaos_mod.apply_chaos(trial.data, trial.channels, rate_hz, chaos)
+        trial.chaos = list(chaos)
+    return [trial]
 
 
 def build_suite(n_per_class: int = 4, seed: int = 0, *,

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +42,11 @@ class AgentStats:
     samples: int = 0
     busy_seconds: float = 0.0      # CPU time inside the sampling path
     overruns: int = 0              # ticks where sampling exceeded the period
+    collector_errors: int = 0      # collector.sample raised (crash isolated)
+    backoff_skips: int = 0         # collector ticks skipped while backing off
+    watchdog_trips: int = 0        # collector samples over the tick deadline
+    counter_resets: int = 0        # negative counter deltas seen (and zeroed)
+    clock_anomalies: int = 0       # non-positive dt ticks (clock jumped back)
     #: wall seconds of *completed* live/virtual segments; the in-flight
     #: background segment is accounted by ``live_t0``
     wall_accum: float = 0.0
@@ -90,6 +95,20 @@ class TelemetryAgent:
         self.stats = AgentStats()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # crash isolation (chaos hardening): per-collector consecutive
+        # failure streaks drive an exponential sampling backoff, and the
+        # collector's channels are written as NaN (explicitly invalid)
+        # instead of silently carrying stale values forward
+        self._fail_streak = [0] * len(self.collectors)
+        self._backoff_left = [0] * len(self.collectors)
+        self._chan_names = [[m.name for m in c.metrics
+                             if not m.name.startswith("_")]
+                            for c in self.collectors]
+        #: sampling watchdog: a collector answering slower than one tick
+        #: period trips the watchdog and sits out the next tick
+        self.watchdog_s = 1.0 / self.rate_hz
+        #: last stop() join timed out (sampling thread hung)
+        self.hung = False
 
     # ------------------------------------------------------------------ core
     def step(self, now: Optional[float] = None) -> Dict[str, float]:
@@ -97,14 +116,39 @@ class TelemetryAgent:
         t0 = time.perf_counter()
         now = t0 if now is None else now
         raw: Dict[str, float] = {}
-        for c in self.collectors:
+        invalid: set = set()
+        for ci, c in enumerate(self.collectors):
+            if self._backoff_left[ci] > 0:
+                # crash isolation: a recently-failed (or deadline-blowing)
+                # collector sits out its backoff; its channels are marked
+                # invalid, not carried stale
+                self._backoff_left[ci] -= 1
+                self.stats.backoff_skips += 1
+                invalid.update(self._chan_names[ci])
+                continue
+            tc = time.perf_counter()
             try:
                 raw.update(c.sample(now))
             except Exception:
                 # A failing probe must never take the agent down (paper's
-                # deployability constraint) — skip and keep sampling.
+                # deployability constraint) — isolate, back off, mark its
+                # channels invalid, keep sampling everything else.
+                self.stats.collector_errors += 1
+                self._fail_streak[ci] += 1
+                self._backoff_left[ci] = min(
+                    1 << min(self._fail_streak[ci], 8), 256)
+                invalid.update(self._chan_names[ci])
                 continue
+            self._fail_streak[ci] = 0
+            if time.perf_counter() - tc > self.watchdog_s:
+                # sampling watchdog: the values arrived (keep them) but
+                # the probe blew the tick budget — sit out the next tick
+                # so one slow device node cannot starve the whole agent
+                self.stats.watchdog_trips += 1
+                self._backoff_left[ci] = 1
         row = self._postprocess(now, raw)
+        for name in invalid:
+            row[name] = float("nan")
         self.ring.push_row(now, row)
         self.stats.samples += 1
         self.stats.busy_seconds += time.perf_counter() - t0
@@ -115,7 +159,14 @@ class TelemetryAgent:
         row: Dict[str, float] = {}
         dt = None
         if self._prev_ts is not None:
-            dt = max(now - self._prev_ts, 1e-9)
+            dt_raw = now - self._prev_ts
+            if dt_raw <= 0.0:
+                # backward/stalled clock jump: a rate over a non-positive
+                # dt is garbage (inf or negative) — emit 0.0 this tick,
+                # flag it, and let the timeline resume from here
+                self.stats.clock_anomalies += 1
+            else:
+                dt = max(dt_raw, 1e-9)
         for name, v in raw.items():
             if name.startswith("_"):
                 continue
@@ -124,6 +175,10 @@ class TelemetryAgent:
                 if prev is None or dt is None:
                     row[name] = 0.0
                 else:
+                    if v < prev:
+                        # counter reset (agent/exporter restart): the
+                        # delta is meaningless — clamp to 0 and count it
+                        self.stats.counter_resets += 1
                     row[name] = max(v - prev, 0.0) / dt
             else:
                 row[name] = v
@@ -178,6 +233,21 @@ class TelemetryAgent:
             # exist on the per-tick path
             return None
         n = grid.size
+        # shared per-block clock geometry: non-positive dts (backward or
+        # frozen clock inside the grid) zero the rate at that tick — the
+        # same guard as _postprocess, counted once per anomalous tick
+        dts = np.diff(np.asarray(grid, np.float64)) if n > 1 else \
+            np.empty(0, np.float64)
+        dts_ok = dts > 0.0
+        if dts.size:
+            self.stats.clock_anomalies += int((~dts_ok).sum())
+        dt0 = None
+        if self._prev_ts is not None:
+            dt0_raw = float(grid[0]) - self._prev_ts
+            if dt0_raw <= 0.0:
+                self.stats.clock_anomalies += 1
+            else:
+                dt0 = max(dt0_raw, 1e-9)
         block = np.empty((self.ring.n_channels, n), np.float32)
         for i, name in enumerate(self.ring.channels):
             v = cols.get(name)
@@ -193,12 +263,16 @@ class TelemetryAgent:
                 raw = np.asarray(v, np.float64)
                 rates = np.zeros(n, np.float64)
                 if n > 1:
-                    dts = np.maximum(np.diff(np.asarray(grid, np.float64)),
-                                     1e-9)
-                    rates[1:] = np.maximum(np.diff(raw), 0.0) / dts
+                    d = np.diff(raw)
+                    self.stats.counter_resets += int(
+                        ((d < 0) & dts_ok).sum())
+                    rates[1:] = np.where(
+                        dts_ok,
+                        np.maximum(d, 0.0) / np.maximum(dts, 1e-9), 0.0)
                 prev = self._prev_raw.get(name)
-                if prev is not None and self._prev_ts is not None:
-                    dt0 = max(float(grid[0]) - self._prev_ts, 1e-9)
+                if prev is not None and dt0 is not None:
+                    if float(raw[0]) < prev:
+                        self.stats.counter_resets += 1
                     rates[0] = max(float(raw[0]) - prev, 0.0) / dt0
                 block[i] = rates
             else:
@@ -260,10 +334,19 @@ class TelemetryAgent:
                                         daemon=True)
         self._thread.start()
 
-    def stop(self) -> AgentStats:
+    def stop(self, timeout: float = 5.0) -> AgentStats:
+        """Stop the background thread (bounded join; idempotent).
+
+        A hung collector cannot hang the caller: after ``timeout`` the
+        daemon thread is abandoned (it dies with the process) and the
+        stats are folded regardless.  Double-stop is a no-op.
+        """
         if self._thread is not None:
             self._stop.set()
-            self._thread.join(timeout=5.0)
+            self._thread.join(timeout=timeout)
+            #: True when the join timed out — the sampling thread is hung
+            #: (the aggregator's bounded stop() counts these)
+            self.hung = self._thread.is_alive()
             self._thread = None
         # fold the live segment into the accumulator exactly once — a
         # second stop() (or stop without start) is a no-op, and repeated

@@ -131,6 +131,10 @@ class MultiChannelRing:
         self._seq = 0
         #: reads that observed a concurrent write and had to retry
         self.torn_retries = 0
+        #: reads that exhausted their retry budget and returned empty —
+        #: the degraded give-up path (a pinned writer must cost one
+        #: host-round, never a blocked aggregator)
+        self.torn_giveups = 0
         #: row-key tuple -> (positions into the dict, destination channel
         #: rows); the agent emits identically-keyed dicts every tick, so one
         #: cached layout turns push_row into two vectorized writes.
@@ -159,19 +163,27 @@ class MultiChannelRing:
     def _write_end(self) -> None:
         self._seq += 1          # even: storage stable again
 
-    def read_begin(self) -> int:
+    def read_begin(self, max_spins: int = 100) -> int:
         """Reader entry: returns an even sequence, spinning past any
-        in-flight write (the writer's critical section is microseconds)."""
-        while True:
+        in-flight write (the writer's critical section is microseconds).
+
+        Bounded: after ``max_spins`` yields the in-flight (odd) sequence
+        is returned as-is.  ``read_retry`` treats an odd entry sequence as
+        torn, so a reader stuck above a writer that died or got pinned
+        mid-write degrades through its own retry/give-up path instead of
+        spinning here forever."""
+        for _ in range(int(max_spins)):
             s = self._seq
             if not (s & 1):
                 return s
             time.sleep(0)       # yield to the writer thread
+        return self._seq
 
     def read_retry(self, seq: int) -> bool:
         """True if a write overlapped the read that started at ``seq`` —
-        the snapshot may be torn and must be retried."""
-        return self._seq != seq
+        the snapshot may be torn and must be retried.  An odd ``seq``
+        (bounded ``read_begin`` gave up mid-write) is always torn."""
+        return bool(seq & 1) or self._seq != seq
 
     def read_window(self, n: int, out_ts: Optional[np.ndarray] = None,
                     out: Optional[np.ndarray] = None, skip_newest: int = 0,
@@ -190,6 +202,12 @@ class MultiChannelRing:
         until a quiescent sequence brackets it; ``retries`` reports how
         many attempts observed writer contention (also accumulated on
         :attr:`torn_retries`).
+
+        Bounded: after ``max_retries`` torn attempts the read GIVES UP and
+        returns an empty ``(ts[:0], data[:, :0], retries)`` snapshot,
+        counting :attr:`torn_giveups` — the caller treats the host as
+        torn-this-round (degraded) instead of spinning forever under a
+        pinned or runaway writer.
         """
         n = int(n)
         if out is None:
@@ -218,9 +236,8 @@ class MultiChannelRing:
             retries += 1
             self.torn_retries += 1
             if retries >= max_retries:
-                raise RuntimeError(
-                    f"read_window torn {retries} times — is there more "
-                    "than one writer on this ring?")
+                self.torn_giveups += 1
+                return out_ts[:0], out[:, :0], retries
             if retries > 32:    # heavy contention: back off a little
                 time.sleep(1e-5)
 
@@ -276,9 +293,15 @@ class MultiChannelRing:
         self._count = min(self.capacity, self._count + n)
         self._write_end()
 
-    def peek(self) -> Tuple[int, float]:
+    def peek(self, max_retries: int = 1000) -> Tuple[int, float]:
         """Consistent ``(count, newest timestamp)`` — seqlock-validated, so
-        safe against the background writer.  ``(0, -inf)`` when empty."""
+        safe against the background writer.  ``(0, -inf)`` when empty.
+
+        Bounded like :meth:`read_window`: after ``max_retries`` torn
+        attempts it gives up with ``(0, -inf)`` (counting
+        :attr:`torn_giveups`), which the aggregator reads as a host with
+        nothing fresh to stage — degraded, not wedged."""
+        retries = 0
         while True:
             s0 = self.read_begin()
             cnt = self._count
@@ -287,6 +310,10 @@ class MultiChannelRing:
             if not self.read_retry(s0):
                 return cnt, last
             self.torn_retries += 1
+            retries += 1
+            if retries >= max_retries:
+                self.torn_giveups += 1
+                return 0, -np.inf
 
     def window(self, n: int, copy: bool = True, with_seq: bool = False,
                ):

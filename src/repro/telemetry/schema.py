@@ -35,6 +35,10 @@ class CauseClass(str, enum.Enum):
     NIC = "nic_contention"
     GPU = "gpu_throttling"
     UNKNOWN = "unknown"
+    #: The telemetry itself is broken (frozen/NaN channels, crashed
+    #: collectors) — never a GPU/host interference verdict.  Emitted by
+    #: FleetMonitor's quarantine path, not by the evidence ranker.
+    TELEMETRY = "telemetry_fault"
 
 
 #: Which signal groups are *evidence for* which cause class.  The paper's

@@ -85,6 +85,19 @@ def test_scorecard_family_smoke():
 
 
 @pytest.mark.bench_smoke
+def test_chaos_family_smoke():
+    """Chaos-hardening invariant rows: pure corruption yields zero
+    verdicts, the all-true mask stays byte-identical, sanitization cost
+    stays bounded."""
+    rows = fleetbench.chaos_rows(reps=1)
+    _check(rows, "chaos/")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["chaos/soak_false_verdicts"] == 0.0
+    assert vals["chaos/masked_parity"] == 1.0
+    assert vals["chaos/sanitize_overhead_frac"] <= 0.9
+
+
+@pytest.mark.bench_smoke
 def test_eval_family_smoke():
     rows = fleetbench.eval_rows(n_per_class=1, reps=1)
     _check(rows, "eval/")

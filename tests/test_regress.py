@@ -66,6 +66,57 @@ def test_missing_class_fails(committed):
     assert any("cascade" in m for m in bad)
 
 
+def test_tampered_chaos_soak_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["scenarios"]["chaos_soak"]["n_verdicts"] = 2
+    doc["scenarios"]["chaos_soak"]["false_verdicts"] = 2
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("chaos_soak" in m and "false-positive" in m for m in bad)
+
+
+def test_tampered_chaos_overlap_latency_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["scenarios"]["chaos_overlap"]["detect_latency_s"]["max"] = 9.5
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("chaos_overlap detect_latency_s" in m for m in bad)
+
+
+def test_tampered_chaos_overlap_recall_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["scenarios"]["chaos_overlap"]["recall"] = 0.5
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("chaos_overlap recall" in m for m in bad)
+
+
+def test_missing_chaos_class_fails(committed):
+    doc = copy.deepcopy(committed)
+    del doc["scenarios"]["frozen_channel"]
+    doc["protocol"]["classes"] = [c for c in doc["protocol"]["classes"]
+                                  if c != "frozen_channel"]
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("frozen_channel" in m for m in bad)
+
+
+def test_check_chaos_rows():
+    good = [("chaos/soak_false_verdicts", 0.0, ""),
+            ("chaos/masked_parity", 1.0, ""),
+            ("chaos/sanitize_overhead_frac", 0.4, "")]
+    assert regress.check_chaos_rows(good) == []
+    bad = regress.check_chaos_rows(
+        [("chaos/soak_false_verdicts", 1.0, "")] + good[1:])
+    assert any("fault verdict" in m for m in bad)
+    bad = regress.check_chaos_rows(
+        good[:1] + [("chaos/masked_parity", 0.0, "")] + good[2:])
+    assert any("byte-identical" in m for m in bad)
+    bad = regress.check_chaos_rows(
+        good[:2] + [("chaos/sanitize_overhead_frac",
+                     regress.SANITIZE_OVERHEAD_MAX + 1.0, "")])
+    assert any("sanitization cost" in m for m in bad)
+    missing = regress.check_chaos_rows(good[1:])
+    assert any("no row matched chaos/soak_false_verdicts" in m
+               for m in missing)
+
+
 def test_check_bench_parity_rows():
     good = [("fleet/detect_parity/B8", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),

@@ -77,8 +77,9 @@ def test_compose_multipliers_compound():
 
 def test_suite_stacks_into_trial_store():
     trials = scen.build_suite(1, seed=5, n_hosts=3, n_affected=2)
-    # one trial per registry class + n_hosts fleet rows
-    assert len(trials) == len(scen.SCENARIOS) + 3
+    # one trial per registry class (incl. chaos) + n_hosts fleet rows
+    assert len(trials) == (len(scen.SCENARIOS)
+                           + len(scen.CHAOS_SCENARIOS) + 3)
     store = TrialStore.from_trials(trials)
     assert store.slab.shape[0] == len(trials)
     assert store.slab.dtype == np.float32
