@@ -462,6 +462,120 @@ def chaos_rows(reps: int = 3) -> List[Tuple[str, float, str]]:
     return rows
 
 
+# ------------------------------------------------------------- restart bench
+def restart_rows(reps: int = 1) -> List[Tuple[str, float, str]]:
+    """Monitor survivability: fleet-level crash/restore replay parity,
+    checkpoint wall costs, and deadline-aware shedding.
+
+    Three invariants CI gates on (``benchmarks/regress.py``):
+
+      restart/fleet_replay_parity  a session crashed mid-incident and
+                                   warm-restored from its checkpoint must
+                                   deliver the *byte-identical* verdict
+                                   stream of an uninterrupted session;
+      restart/duplicate_verdicts   the delivered stream (pre-crash verdicts
+                                   + post-restore replay) must contain no
+                                   repeated verdict signature — the
+                                   restored cooldown map IS the dedup;
+      restart/shed_rounds, restart/deferred_rca
+                                   the degraded-mode path must actually
+                                   shed (detect-only rounds) and defer RCA
+                                   for unproven hosts under overload.
+    """
+    import os
+    import tempfile
+
+    from repro.monitor.checkpoint import MonitorSession
+
+    rows: List[Tuple[str, float, str]] = []
+    H = 8
+    ts, data, channels = _make_fleet(H, bad_host=H // 2)
+    slab = np.ascontiguousarray(data, np.float32)
+    rate = 1.0 / float(ts[1] - ts[0])
+    # one diagnosis round per second from first-full-baseline to trial end;
+    # the injected fault (t_on = 40 s) enters the trailing window mid-run
+    round_ticks = [min(int(r * rate), ts.shape[0])
+                   for r in range(36, int(_CLIP_S) + 1)]
+
+    def run_uninterrupted():
+        sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+        out = []
+        for hi in round_ticks:
+            out += sess.tick(ts[:hi], slab[:, :, :hi])[1]
+        return out, sess
+
+    base_verdicts, _ = run_uninterrupted()
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "fleet.ckpt")
+        sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+        delivered = []
+        save_ms = []
+        ckpt_bytes = 0
+        crash_at = None
+        for k, hi in enumerate(round_ticks):
+            delivered += sess.tick(ts[:hi], slab[:, :, :hi])[1]
+            t0 = time.perf_counter()
+            ckpt_bytes = max(ckpt_bytes, sess.save(path))
+            save_ms.append((time.perf_counter() - t0) * 1e3)
+            if delivered and crash_at is None:
+                crash_at = k      # crash right after the first verdict
+                break
+        # the process dies here: a FRESH monitor + session warm-restores
+        sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+        t0 = time.perf_counter()
+        restored = sess2.restore(path)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        for _ in range(max(0, reps - 1)):       # timing stability only
+            t0 = time.perf_counter()
+            MonitorSession(FleetMonitor(use_kernels=False),
+                           channels).restore(path)
+            restore_ms = min(restore_ms, (time.perf_counter() - t0) * 1e3)
+        for k, hi in enumerate(round_ticks):
+            if crash_at is not None and k <= crash_at:
+                continue          # rounds the dead process already served
+            delivered += sess2.tick(ts[:hi], slab[:, :, :hi],
+                                    replay=(k == (crash_at or -1) + 1))[1]
+
+    sigs = [v.sig() for v in delivered]
+    parity = float(restored
+                   and sigs == [v.sig() for v in base_verdicts])
+    dup = len(sigs) - len(set(sigs))
+    rows.append(("restart/fleet_replay_parity", parity,
+                 "1.0 = crash/restore verdict stream byte-identical to "
+                 "uninterrupted session"))
+    rows.append(("restart/duplicate_verdicts", float(dup),
+                 "repeated verdict signatures in the delivered stream "
+                 "(must be 0)"))
+    rows.append(("restart/suppressed_replay",
+                 float(sess2.stats.duplicates_suppressed),
+                 "re-derivations deduped by the restored cooldown map"))
+    rows.append(("restart/replay_ticks", float(sess2.stats.replay_ticks),
+                 "samples re-driven through the restored state"))
+    rows.append(("restart/checkpoint_bytes", float(ckpt_bytes), ""))
+    rows.append(("restart/checkpoint_save_ms", float(np.median(save_ms)),
+                 "atomic tmp+fsync+rename write"))
+    rows.append(("restart/checkpoint_restore_ms", float(restore_ms),
+                 "validate (magic/version/CRC) + full state apply"))
+
+    # degraded mode: overload the loop before the fault arrives, keep it
+    # overloaded while the incident enters the window (fresh host -> RCA
+    # deferred), then lift the load and let the budget re-arm
+    mon = FleetMonitor(use_kernels=False, budget_s=0.05, shed_after=2,
+                       rearm_after=3)
+    sess3 = MonitorSession(mon, channels)
+    for k, hi in enumerate(round_ticks):
+        cost = 1.0 if k < 6 else 0.0
+        sess3.tick(ts[:hi], slab[:, :, :hi], extra_cost_s=cost)
+    rows.append(("restart/shed_rounds", float(mon.shed_rounds),
+                 "degraded (detect-only) rounds under synthetic overload"))
+    rows.append(("restart/deferred_rca", float(mon.deferred_rca),
+                 "flagged-host RCA deferrals while degraded"))
+    rows.append(("restart/rearmed", float(not mon.degraded),
+                 "1.0 = budget hysteresis re-armed after load lifted"))
+    return rows
+
+
 # ----------------------------------------------------------------- eval bench
 def eval_rows(n_per_class: int = 4, reps: int = 3,
               ) -> List[Tuple[str, float, str]]:

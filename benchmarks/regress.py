@@ -16,8 +16,11 @@ produces zero verdicts.  This gate makes every commit prove them again:
      detection sweep reproducing the per-row oracle's events and
      timestamps byte-exactly), the chaos invariants
      (``fleetbench.chaos_rows``: zero verdicts under pure corruption,
-     all-true-mask byte-parity, bounded sanitize overhead) and a smoke
-     scorecard with the same class set as the committed artifact.
+     all-true-mask byte-parity, bounded sanitize overhead), the
+     survivability invariants (``fleetbench.restart_rows``: crash/restore
+     replay parity, zero duplicate verdicts, degraded-mode shedding and
+     re-arm) and a smoke scorecard with the same class set as the
+     committed artifact.
 
 Exit status is nonzero on any break, with one line per failure.  Usage::
 
@@ -42,8 +45,10 @@ PARITY_ROW_PREFIXES = (
 )
 
 #: scorecard parity bits that must be present AND exactly 1.0
+#: (``replay``: crash/checkpoint/restore verdict stream byte-identical to
+#: the uninterrupted streaming run)
 SCORECARD_PARITY_KEYS = ("batched_pred", "batched_ts",
-                         "slab_pred", "slab_ts")
+                         "slab_pred", "slab_ts", "replay")
 
 #: classes with NO injected host fault — any verdict is a false positive.
 #: ``soak`` is the ambient control; the chaos trio corrupts the telemetry
@@ -60,6 +65,14 @@ CHAOS_RCA_MAX_S = 8.0
 
 #: clean-path sanitization must cost less than the sweep it guards
 SANITIZE_OVERHEAD_MAX = 0.9
+
+#: crash_during_incident operational gates: a verdict stuck behind 4-8 s
+#: of monitor downtime plus the restore round cannot meet 5 s / 8 s —
+#: these relaxed-but-explicit bounds (mirroring the scorecard's
+#: ``crash_*_target_s`` protocol fields) cap the downtime-charged
+#: latencies instead
+CRASH_DETECT_MAX_S = 15.0
+CRASH_RCA_MAX_S = 16.0
 
 
 def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
@@ -128,6 +141,31 @@ def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
         if blk.get("recall") in (None, 0):
             bad.append(f"{label}: {name} recall = {blk.get('recall')!r} — "
                        "detector found nothing on an injected class")
+    crash = scen_doc.get("crash_during_incident")
+    if crash is not None:
+        for lat_key, bound in (("detect_latency_s", CRASH_DETECT_MAX_S),
+                               ("rca_latency_s", CRASH_RCA_MAX_S)):
+            worst = (crash.get(lat_key) or {}).get("max")
+            if not (isinstance(worst, (int, float)) and worst <= bound):
+                bad.append(f"{label}: crash_during_incident {lat_key} max "
+                           f"= {worst!r} (target <= {bound} s incl. "
+                           "downtime)")
+    restart = doc.get("restart")
+    if restart is None:
+        bad.append(f"{label}: restart block missing — survivability "
+                   "invariants no longer recorded")
+    else:
+        if restart.get("replay_parity") != 1.0:
+            bad.append(f"{label}: restart replay_parity = "
+                       f"{restart.get('replay_parity')!r} (want 1.0) — "
+                       "crash/restore stream diverged from uninterrupted")
+        if restart.get("restart_duplicates") != 0:
+            bad.append(f"{label}: restart_duplicates = "
+                       f"{restart.get('restart_duplicates')!r} (want 0) — "
+                       "replay re-delivered an already-delivered verdict")
+        if not restart.get("restores"):
+            bad.append(f"{label}: restart harness performed no warm "
+                       "restore — crash path not exercised")
     fleet = doc.get("fleet")
     if fleet is None:
         bad.append(f"{label}: fleet block missing")
@@ -166,6 +204,37 @@ def check_chaos_rows(rows) -> List[str]:
     return bad
 
 
+def check_restart_rows(rows) -> List[str]:
+    """Survivability invariants over fresh ``fleetbench.restart_rows``."""
+    bad: List[str] = []
+    want = {
+        "restart/fleet_replay_parity":
+            (lambda v: v == 1.0, "want 1.0 — crash/restore verdicts "
+             "diverged from uninterrupted session"),
+        "restart/duplicate_verdicts":
+            (lambda v: v == 0.0, "want 0 — replay re-delivered a verdict"),
+        "restart/shed_rounds":
+            (lambda v: v >= 1.0, "want >= 1 — degraded mode never shed"),
+        "restart/deferred_rca":
+            (lambda v: v >= 1.0, "want >= 1 — degraded mode never "
+             "deferred a fresh host's RCA"),
+        "restart/rearmed":
+            (lambda v: v == 1.0, "want 1.0 — budget hysteresis stuck "
+             "degraded after load lifted"),
+    }
+    seen = {name: False for name in want}
+    for name, value, _ in rows:
+        if name in want:
+            seen[name] = True
+            ok, why = want[name]
+            if not ok(value):
+                bad.append(f"fresh bench: {name} = {value} ({why})")
+    for name, hit in seen.items():
+        if not hit:
+            bad.append(f"fresh bench: no row matched {name}")
+    return bad
+
+
 def check_bench_parity(rows) -> List[str]:
     """Exact-1.0 check over the parity rows of a fresh bench run."""
     bad: List[str] = []
@@ -193,6 +262,7 @@ def fresh_failures() -> List[str]:
                                        fleet_hosts=32)
     bad = check_bench_parity(rows)
     bad += check_chaos_rows(fleetbench.chaos_rows(reps=1))
+    bad += check_restart_rows(fleetbench.restart_rows(reps=1))
     doc = scorecard.build_scorecard(n_per_class=1, n_hosts=4, n_affected=2)
     bad += check_scorecard(doc, label="fresh scorecard")
     return bad

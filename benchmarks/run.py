@@ -55,6 +55,7 @@ def smoke() -> list:
     rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
     rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
     rows += _emit(fleetbench.chaos_rows(reps=1))
+    rows += _emit(fleetbench.restart_rows(reps=1))
     rows += _emit(scorecard.smoke_rows())
     return rows
 
@@ -104,6 +105,7 @@ def main() -> None:
         rows += _emit(fleetbench.live_rows())
         rows += _emit(fleetbench.eval_rows())
         rows += _emit(fleetbench.chaos_rows())
+        rows += _emit(fleetbench.restart_rows())
         _write_json(os.path.join(args.json_dir, "BENCH_fleet.json"), rows)
     if on("roofline"):
         _emit(roofline.roofline_rows())

@@ -40,11 +40,15 @@ import argparse
 import json
 import os
 import sys
+import tempfile
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import CorrelationEngine
+from repro.core import sanitize as sanitize_mod
+from repro.core.engine import CorrelationEngine, StreamState
+from repro.monitor import checkpoint as ckpt_mod
 from repro.monitor.fleet import FleetMonitor
 from repro.sim import scenarios as scen
 from repro.sim import scoring
@@ -55,6 +59,18 @@ SUITE_SEED = 41
 
 #: default artifact path (repo root, committed + CI-diffed)
 ARTIFACT = "EVAL_scorecard.json"
+
+#: restart-harness streaming cadence: one detection round every 2.5 s
+RESTART_ROUND_S = 2.5
+#: checkpoint every 4th round (10 s) — deliberately sparser than the round
+#: cadence, so a crash can lose already-delivered rounds and the replay
+#: must re-derive (and duplicate-suppress) their verdicts
+RESTART_CKPT_EVERY = 4
+#: relaxed-but-explicit operational targets for the crash classes: a
+#: verdict stuck behind 4-8 s of monitor downtime plus the restore round
+#: cannot meet the paper's 5 s / 8 s, but must still land within these
+CRASH_DETECT_TARGET_S = 15.0
+CRASH_RCA_TARGET_S = 16.0
 
 
 def _diag_sig(diags) -> List[Tuple[str, float, float, float]]:
@@ -113,6 +129,152 @@ def _fleet_block(trials: List[scen.ScenarioTrial], rate_hz: float,
     }
 
 
+def _event_sig(ev, rca_t: int) -> Tuple[float, float, float, int]:
+    return (float(ev.t_onset), float(ev.t_detect), float(ev.score),
+            int(rca_t))
+
+
+def _stream_trial(eng: CorrelationEngine, trial: scen.ScenarioTrial,
+                  crash: Optional[scen.MonitorEvent], ckpt_path: str,
+                  ) -> Dict[str, object]:
+    """One round-boundary streaming run over a trial's timeline.
+
+    Without ``crash`` this is the uninterrupted oracle: the detector walks
+    growing prefixes at :data:`RESTART_ROUND_S` cadence through one
+    :class:`StreamState`, checkpointing every
+    :data:`RESTART_CKPT_EVERY` rounds.  With ``crash`` the in-memory state
+    is *discarded* at ``crash.t``, rounds falling inside the downtime are
+    skipped, and the first surviving round warm-restores from the last
+    on-disk checkpoint and replays forward — re-derived verdicts already
+    delivered before the crash are suppressed by signature and counted.
+    """
+    ts, data, channels = trial.ts, trial.data, trial.channels
+    T = ts.shape[0]
+    state = StreamState()
+    emitted: List[tuple] = []       # (event, rca_index), delivery order
+    sigs: set = set()
+    dups = 0
+    alive = True
+    restored = False
+    t_restore = None
+    save_ms = restore_ms = 0.0
+    ckpt_bytes = 0
+    boundaries = np.arange(RESTART_ROUND_S, float(ts[-1]) + RESTART_ROUND_S,
+                           RESTART_ROUND_S)
+    crashed = False
+    for k, b in enumerate(boundaries):
+        if crash is not None and not crashed and b >= crash.t:
+            crashed = True          # fires once
+            alive = False           # process killed: in-memory state gone
+            state = None
+        if not alive:
+            if b < crash.t_end:
+                continue            # monitor down: round never runs
+            # warm restore from the last checkpoint, then replay below
+            w0 = time.perf_counter()
+            payload = ckpt_mod.load_checkpoint(ckpt_path)
+            state = StreamState.from_dict(payload["stream"])
+            restore_ms = (time.perf_counter() - w0) * 1e3
+            alive, restored = True, True
+            t_restore = float(b)
+        hi = min(int(np.searchsorted(ts, float(b), side="right")), T)
+        for ev, rca_t in eng.detect_events(ts[:hi], data[:, :hi],
+                                           channels, state=state):
+            s = _event_sig(ev, rca_t)
+            if s in sigs:
+                dups += 1           # replay re-derived a delivered verdict
+                continue
+            sigs.add(s)
+            emitted.append((ev, rca_t))
+        if (k + 1) % RESTART_CKPT_EVERY == 0:
+            w0 = time.perf_counter()
+            ckpt_bytes = max(ckpt_bytes, ckpt_mod.save_checkpoint(
+                ckpt_path, {"stream": state.to_dict()}))
+            save_ms = max(save_ms, (time.perf_counter() - w0) * 1e3)
+    flushed = state.flush(T)
+    if flushed is not None:
+        s = _event_sig(*flushed)
+        if s in sigs:
+            dups += 1
+        else:
+            sigs.add(s)
+            emitted.append(flushed)
+    return {"events": emitted, "duplicates": dups, "restored": restored,
+            "t_restore": t_restore, "ckpt_bytes": ckpt_bytes,
+            "save_ms": save_ms, "restore_ms": restore_ms}
+
+
+def _restart_block(trials: List[scen.ScenarioTrial], tol_s: float,
+                   ) -> Optional[Dict[str, object]]:
+    """Crash-class harness: uninterrupted vs crash/checkpoint/restore
+    streaming runs, per trial.
+
+    The replay-parity bit is the fraction of crash trials whose delivered
+    verdict stream (pre-crash verdicts + post-restore replay, duplicates
+    suppressed) is *byte-identical* — onset/detect/score stamps and RCA
+    indices — to the uninterrupted run over the same timeline.  Latency
+    scoring charges the downtime: verdict times inside the restart window
+    shift to the restore round (``scoring.score_trial`` restart windows).
+    """
+    crash_trials = [t for t in trials
+                    if any(m.kind == "monitor_crash" for m in t.monitor)]
+    if not crash_trials:
+        return None
+    eng = CorrelationEngine()
+    parity_ok = 0
+    dups = 0
+    restores = 0
+    ckpt_bytes = 0
+    save_ms = restore_ms = 0.0
+    by_class: Dict[str, List[scoring.TrialScore]] = {}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "monitor.ckpt")
+        for t in crash_trials:
+            crash = next(m for m in t.monitor
+                         if m.kind == "monitor_crash")
+            base = _stream_trial(eng, t, None, path)
+            run = _stream_trial(eng, t, crash, path)
+            sig = lambda r: [_event_sig(ev, rt) for ev, rt in r["events"]]
+            parity_ok += sig(base) == sig(run)
+            dups += run["duplicates"]
+            restores += bool(run["restored"])
+            ckpt_bytes = max(ckpt_bytes, run["ckpt_bytes"])
+            save_ms = max(save_ms, run["save_ms"])
+            restore_ms = max(restore_ms, run["restore_ms"])
+            data = t.data
+            if run["events"]:
+                data = sanitize_mod.forward_fill(np.asarray(data))
+            diags = eng.diagnose_events_batch(
+                [(t.ts, data, list(t.channels), rca_t, ev)
+                 for ev, rca_t in run["events"]])
+            windows = ([(float(crash.t), float(run["t_restore"]))]
+                       if run["t_restore"] is not None else [])
+            by_class.setdefault(t.scenario, []).append(scoring.score_trial(
+                t.truth, scoring.verdict_events(diags), tol_s,
+                restart_windows=windows))
+    n = len(crash_trials)
+    classes = {
+        name: dict(scoring.summarize(by_class[name],
+                                     detect_target_s=CRASH_DETECT_TARGET_S,
+                                     rca_target_s=CRASH_RCA_TARGET_S),
+                   description=scen.scenario_spec(name).description,
+                   multi_fault=scen.scenario_spec(name).multi_fault)
+        for name in by_class
+    }
+    return {
+        "n_trials": n,
+        "replay_parity": parity_ok / n,
+        "restart_duplicates": dups,
+        "restores": restores,
+        "round_s": RESTART_ROUND_S,
+        "checkpoint_every_rounds": RESTART_CKPT_EVERY,
+        "checkpoint_bytes": ckpt_bytes,
+        "checkpoint_save_ms_max": save_ms,
+        "checkpoint_restore_ms_max": restore_ms,
+        "classes": classes,
+    }
+
+
 def build_scorecard(n_per_class: int = 4, seed: int = SUITE_SEED, *,
                     duration_s: float = scen.DURATION_S,
                     rate_hz: float = 100.0, tol_s: float = scoring.TOL_S,
@@ -142,6 +304,12 @@ def build_scorecard(n_per_class: int = 4, seed: int = SUITE_SEED, *,
                    multi_fault=scen.scenario_spec(name).multi_fault)
         for name in by_class
     }
+    restart = _restart_block(trials, tol_s)
+    if restart is not None:
+        # the crash classes are scored by the restart harness — restart-
+        # window-aware latencies and relaxed targets replace the generic
+        # (downtime-blind) block
+        scenarios_doc.update(restart["classes"])
     return {
         "protocol": {
             "suite_seed": seed,
@@ -156,12 +324,17 @@ def build_scorecard(n_per_class: int = 4, seed: int = SUITE_SEED, *,
             "fleet_hosts": n_hosts,
             "fleet_affected": n_affected,
             "use_kernels": use_kernels,
+            "crash_detect_target_s": CRASH_DETECT_TARGET_S,
+            "crash_rca_target_s": CRASH_RCA_TARGET_S,
         },
         "scenarios": scenarios_doc,
         "fleet": _fleet_block(trials, rate_hz, use_kernels),
+        "restart": restart,
         "parity": {
             "batched_pred": bp, "batched_ts": bt,
             "slab_pred": sp, "slab_ts": st,
+            "replay": (restart["replay_parity"]
+                       if restart is not None else 1.0),
         },
         "overall": scoring.summarize(
             [s for ss in by_class.values() for s in ss]),
@@ -189,6 +362,15 @@ def scorecard_rows(doc: Dict[str, object]) -> List[Tuple[str, float, str]]:
         for k, v in doc["fleet"].items():
             if v is not None:
                 rows.append((f"scorecard/fleet/{k}", float(v), ""))
+    if doc.get("restart"):
+        r = doc["restart"]
+        rows.append(("scorecard/restart/duplicates",
+                     float(r["restart_duplicates"]),
+                     "replay re-derivations suppressed (must be 0)"))
+        rows.append(("scorecard/restart/restores", float(r["restores"]),
+                     "warm restores from checkpoint"))
+        rows.append(("scorecard/restart/checkpoint_bytes",
+                     float(r["checkpoint_bytes"]), ""))
     return rows
 
 

@@ -75,6 +75,59 @@ class EngineConfig:
         return int(self.baseline_s * self.rate_hz)
 
 
+@dataclasses.dataclass
+class StreamState:
+    """The mutable machine of :meth:`CorrelationEngine.detect_events`,
+    externalized so a monitor can checkpoint it and resume after a crash.
+
+    ``pending_rca_at`` is an absolute sample index on the trial grid, so
+    resuming is only valid over growing prefixes of the *same* grid (which
+    is exactly what a ring replay presents).  ``t_seen`` marks the newest
+    cadence tick already evaluated: on resume, older ticks are skipped, so
+    an event emitted before the crash can never be emitted again — the
+    duplicate-verdict suppression is the restored cooldown state itself.
+    """
+
+    last_event_t: float = -np.inf    # cooldown anchor (absolute seconds)
+    pending: Optional[SpikeEvent] = None
+    pending_rca_at: Optional[int] = None
+    t_seen: float = -np.inf          # newest tick time already evaluated
+
+    def flush(self, T: int) -> Optional[Tuple[SpikeEvent, int]]:
+        """End-of-stream flush: the pending event with whatever data
+        exists, exactly like the stateless path's trial-end flush."""
+        if self.pending is None:
+            return None
+        ev = (self.pending, int(T) - 1)
+        self.pending, self.pending_rca_at = None, None
+        return ev
+
+    def to_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {
+            "last_event_t": float(self.last_event_t),
+            "t_seen": float(self.t_seen),
+            "pending_rca_at": (None if self.pending_rca_at is None
+                               else int(self.pending_rca_at)),
+            "pending": None,
+        }
+        if self.pending is not None:
+            p = self.pending
+            d["pending"] = {"t_onset": p.t_onset, "t_detect": p.t_detect,
+                            "score": p.score, "metric": p.metric}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "StreamState":
+        p = d.get("pending")
+        pending = None if p is None else SpikeEvent(
+            t_onset=float(p["t_onset"]), t_detect=float(p["t_detect"]),
+            score=float(p["score"]), metric=str(p["metric"]))
+        rca = d.get("pending_rca_at")
+        return cls(last_event_t=float(d["last_event_t"]), pending=pending,
+                   pending_rca_at=None if rca is None else int(rca),
+                   t_seen=float(d["t_seen"]))
+
+
 #: (channels, latency_metric, evidence_restriction) -> (names, row idx,
 #: orientation vector).  Evaluating the registry per channel is pure, so the
 #: layout is shared process-wide across engines and the fleet monitor.
@@ -174,6 +227,7 @@ class CorrelationEngine:
     # ------------------------------------------------------- batch processing
     def detect_events(self, ts: np.ndarray, data: np.ndarray,
                       channels: Sequence[str], fast: bool = True,
+                      state: Optional[StreamState] = None,
                       ) -> List[Tuple[SpikeEvent, int]]:
         """Layer-2 sweep only: every event the streaming replay would
         diagnose, as ``(event, rca_index)`` pairs in time order.
@@ -185,6 +239,19 @@ class CorrelationEngine:
         fused dispatch (``diagnose_events_batch``).  ``rca_index`` is the
         exact sample index Layer 3 runs at (detection + accumulation,
         clamped to trial end).
+
+        With ``state`` the machine resumes from (and persists back to) a
+        :class:`StreamState`: ticks at or before ``state.t_seen`` are
+        skipped and a pending event survives the call instead of being
+        flushed at the array end — running the detector over growing
+        prefixes of one grid yields byte-for-byte the one-shot event
+        stream (the warm-restart replay contract; the caller ends the
+        stream with ``state.flush``).  Stateful calls always decide through
+        the scalar per-tick oracle: the sweep's prefix-sum moments are
+        shifted by the *global* series mean, so a tick's score would drift
+        in the last bits with the prefix length — slice-exact scalar stats
+        are the only decisions identical no matter where the stream was
+        cut.
         """
         cfg = self.cfg
         channels = list(channels)
@@ -206,6 +273,13 @@ class CorrelationEngine:
         last_event_t = -np.inf
         pending: Optional[SpikeEvent] = None
         pending_rca_at: Optional[int] = None
+        seen_t = -np.inf
+        if state is not None:
+            last_event_t = state.last_event_t
+            pending = state.pending
+            pending_rca_at = state.pending_rca_at
+            seen_t = state.t_seen
+            fast = False     # slice-exact decisions, prefix-independent
 
         cadence = cfg.eval_every if cfg.eval_every > 0 else wn
         t0 = wn + bn
@@ -222,6 +296,11 @@ class CorrelationEngine:
         for i, t in enumerate(ticks):
             t = int(t)
             now = float(ts[t])
+            # resume: ticks already evaluated before a checkpoint were
+            # decided on the identical data prefix — re-walking them could
+            # only re-emit, so they are skipped wholesale
+            if now <= seen_t:
+                continue
             # -- an event pending accumulation matures at the exact
             # accumulation index, not the next boundary.
             if pending is not None and pending_rca_at is not None and t >= pending_rca_at:
@@ -253,6 +332,15 @@ class CorrelationEngine:
                 pending = ev
                 pending_rca_at = t + rca_n
                 last_event_t = now
+        if state is not None:
+            # persist the machine instead of flushing: the stream may
+            # continue (next round, or a post-restart replay)
+            state.last_event_t = last_event_t
+            state.pending = pending
+            state.pending_rca_at = pending_rca_at
+            if ticks.size:
+                state.t_seen = max(seen_t, float(ts[int(ticks[-1])]))
+            return out
         # trial end: flush a pending event using whatever data exists
         if pending is not None:
             out.append((pending, T - 1))

@@ -46,6 +46,8 @@ class AggregatorStats:
     dead_hosts: int = 0         # stale rows zeroed out of the slab
     masked_hosts: int = 0       # young rows masked out of a diagnosis
     hung_agents: int = 0        # agent threads that outlived stop()'s join
+    agent_restarts: int = 0     # agents re-armed or replaced in place
+    host_resets: int = 0        # monitor reset_host calls delivered
 
 
 @dataclasses.dataclass
@@ -102,6 +104,11 @@ class FleetAggregator:
         self.stats = AggregatorStats()
         self.last_snapshot: Optional[FleetSnapshot] = None
         self._stopped = False
+        # hosts whose agent was restarted/replaced since the last
+        # diagnosis: the next diagnose() delivers monitor.reset_host for
+        # them (fresh probe != relapsing probe — quarantine backoff and
+        # strikes re-base)
+        self._pending_resets: set = set()
 
     # ------------------------------------------------------------ lifecycle
     def start_background(self) -> None:
@@ -130,6 +137,52 @@ class FleetAggregator:
         """Drive every agent over the span on the shared virtual clock."""
         for a in self.agents:
             a.run_virtual(t_start, t_end)
+
+    # --------------------------------------------------------- agent restart
+    def restart_agent(self, host: int, timeout: float = 5.0) -> None:
+        """Re-arm host's agent in place (the RESTART_TELEMETRY action).
+
+        Stops the sampling thread (bounded), clears the agent's crash
+        state via :meth:`TelemetryAgent.restart`, and — if the fleet is
+        running in background mode — starts it again.  Marks the host for
+        a monitor-side :meth:`~repro.monitor.fleet.FleetMonitor.reset_host`
+        at the next diagnosis: a freshly-restarted probe must not inherit
+        the dead probe's quarantine backoff or strike history."""
+        a = self.agents[int(host)]
+        was_live = a._thread is not None
+        a.stop(timeout=timeout)
+        if a.hung:
+            self.stats.hung_agents += 1
+        a.restart()
+        if was_live and not self._stopped:
+            a.run_background()
+        self.stats.agent_restarts += 1
+        self._pending_resets.add(int(host))
+
+    def replace_agent(self, host: int, agent: TelemetryAgent,
+                      timeout: float = 5.0) -> TelemetryAgent:
+        """Swap in a brand-new agent for ``host``; returns the old one.
+
+        The replacement must agree on channel layout and rate (the staging
+        slab is preallocated on both).  Like :meth:`restart_agent`, the
+        host's monitor-side strike/quarantine history is scheduled for
+        reset at the next diagnosis."""
+        h = int(host)
+        if list(agent.channels) != self.channels:
+            raise ValueError("replacement agent disagrees on channel layout")
+        if float(agent.rate_hz) != self.rate_hz:
+            raise ValueError("replacement agent disagrees on sampling rate")
+        old = self.agents[h]
+        was_live = old._thread is not None
+        old.stop(timeout=timeout)
+        if old.hung:
+            self.stats.hung_agents += 1
+        self.agents[h] = agent
+        if was_live and not self._stopped:
+            agent.run_background()
+        self.stats.agent_restarts += 1
+        self._pending_resets.add(h)
+        return old
 
     # ------------------------------------------------------------- assembly
     def assemble(self) -> FleetSnapshot:
@@ -252,6 +305,13 @@ class FleetAggregator:
         baseline nor collapse the span into ``diagnose_fleet``'s
         short-baseline quiet verdict (which would wipe a real straggler's
         strike history fleet-wide while the newcomer refills)."""
+        # agent-restart wiring: a host whose probe was restarted/replaced
+        # since the last round gets its monitor-side strike/quarantine
+        # history re-based BEFORE this diagnosis — delivered exactly once
+        for h in sorted(self._pending_resets):
+            monitor.reset_host(h)
+            self.stats.host_resets += 1
+        self._pending_resets.clear()
         snap = self.assemble()
         if snap.slab.shape[0] == 0 or not snap.valid.size:
             return None

@@ -94,6 +94,14 @@ class FleetDiagnosis:
     #: validity) — fire suppressed, score zeroed, mitigation
     #: RESTART_TELEMETRY; never reported as stragglers
     quarantined: List[int] = dataclasses.field(default_factory=list)
+    #: this round ran in deadline-degraded (detect-only) mode: the latency
+    #: budget was blown on consecutive rounds, so Layer-3 RCA was shed for
+    #: every flagged host without strike history — a first-class signal,
+    #: never a silently-missed 5 s target
+    degraded: bool = False
+    #: flagged hosts whose RCA was deferred by degraded mode this round
+    #: (they still accrue strikes, so they lead the next full round)
+    deferred_hosts: List[int] = dataclasses.field(default_factory=list)
 
 
 class FleetMonitor:
@@ -107,7 +115,10 @@ class FleetMonitor:
                  quarantine_exit_frac: float = 0.05,
                  quarantine_enter_rounds: int = 2,
                  quarantine_backoff_init: int = 2,
-                 quarantine_backoff_max: int = 16):
+                 quarantine_backoff_max: int = 16,
+                 budget_s: Optional[float] = None,
+                 shed_after: int = 2,
+                 rearm_after: int = 3):
         self.cfg = config or EngineConfig()
         self.use_kernels = use_kernels
         self.persistent_threshold = persistent_threshold
@@ -131,6 +142,20 @@ class FleetMonitor:
         self._bad_streak: Dict[int, int] = {}    # candidate bad rounds
         self._clean_streak: Dict[int, int] = {}  # quarantined clean rounds
         self._quar_backoff: Dict[int, int] = {}  # clean rounds required
+        # deadline-aware degraded mode (hysteresis): `shed_after`
+        # consecutive rounds over `budget_s` drop the monitor to
+        # detect-only — Layer-3 RCA runs only for flagged hosts already
+        # carrying strikes, the rest is deferred; `rearm_after`
+        # consecutive on-budget rounds re-arm full diagnosis.  budget_s
+        # None disables the state machine entirely (every round is full).
+        self.budget_s = None if budget_s is None else float(budget_s)
+        self.shed_after = int(shed_after)
+        self.rearm_after = int(rearm_after)
+        self._over_streak = 0
+        self._on_streak = 0
+        self._degraded = False
+        self.shed_rounds = 0       # rounds executed in detect-only mode
+        self.deferred_rca = 0      # flagged hosts whose RCA was deferred
 
     # ------------------------------------------------------------- batched L2
     def host_spike_scores(self, latency_windows: np.ndarray,
@@ -192,10 +217,94 @@ class FleetMonitor:
                 self._bad_streak.pop(h, None)
         return quar
 
+    # -------------------------------------------------------- survivability
+    @property
+    def degraded(self) -> bool:
+        """True while the deadline hysteresis holds the monitor in
+        detect-only mode."""
+        return self._degraded
+
+    def reset_host(self, host: int) -> None:
+        """Forget one host's strike/quarantine history.
+
+        Called when the host's telemetry agent is replaced or restarted: a
+        fresh probe is not a relapsing probe, so its quarantine re-entry
+        backoff re-bases to the initial value instead of doubling from the
+        old agent's record, and stale strikes cannot escalate the new
+        agent's first flag straight to EXCLUDE_AND_RESCALE."""
+        h = int(host)
+        self._strikes.pop(h, None)
+        self._quarantined.discard(h)
+        self._bad_streak.pop(h, None)
+        self._clean_streak.pop(h, None)
+        self._quar_backoff.pop(h, None)
+
+    def _update_budget(self, round_cost_s: float) -> None:
+        """Advance the deadline hysteresis one round."""
+        if self.budget_s is None:
+            return
+        if round_cost_s > self.budget_s:
+            self._over_streak += 1
+            self._on_streak = 0
+            if not self._degraded and self._over_streak >= self.shed_after:
+                self._degraded = True
+        else:
+            self._on_streak += 1
+            self._over_streak = 0
+            if self._degraded and self._on_streak >= self.rearm_after:
+                self._degraded = False
+                self._on_streak = 0
+
+    def state_dict(self) -> Dict[str, object]:
+        """All mutable diagnosis state, JSON-serializable (checkpointing).
+
+        Keys of the per-host dicts are stringified so the payload survives
+        a JSON round trip; :meth:`load_state_dict` converts them back."""
+        return {
+            "strikes": {str(k): int(v) for k, v in self._strikes.items()},
+            "quarantined": sorted(int(h) for h in self._quarantined),
+            "bad_streak": {str(k): int(v)
+                           for k, v in self._bad_streak.items()},
+            "clean_streak": {str(k): int(v)
+                             for k, v in self._clean_streak.items()},
+            "quar_backoff": {str(k): int(v)
+                             for k, v in self._quar_backoff.items()},
+            "over_streak": int(self._over_streak),
+            "on_streak": int(self._on_streak),
+            "degraded": bool(self._degraded),
+            "shed_rounds": int(self.shed_rounds),
+            "deferred_rca": int(self.deferred_rca),
+        }
+
+    def load_state_dict(self, d: Dict[str, object]) -> None:
+        """Restore :meth:`state_dict` output — full replacement, never a
+        merge.  Every field is parsed before any is assigned, so a
+        malformed payload raises without leaving a half-restored
+        monitor."""
+        strikes = {int(k): int(v) for k, v in d["strikes"].items()}
+        quarantined = {int(h) for h in d["quarantined"]}
+        bad = {int(k): int(v) for k, v in d["bad_streak"].items()}
+        clean = {int(k): int(v) for k, v in d["clean_streak"].items()}
+        backoff = {int(k): int(v) for k, v in d["quar_backoff"].items()}
+        over, on = int(d["over_streak"]), int(d["on_streak"])
+        degraded = bool(d["degraded"])
+        shed, deferred = int(d["shed_rounds"]), int(d["deferred_rca"])
+        self._strikes = strikes
+        self._quarantined = quarantined
+        self._bad_streak = bad
+        self._clean_streak = clean
+        self._quar_backoff = backoff
+        self._over_streak = over
+        self._on_streak = on
+        self._degraded = degraded
+        self.shed_rounds = shed
+        self.deferred_rca = deferred
+
     # ------------------------------------------------------------- fleet RCA
     def diagnose_fleet(self, ts: np.ndarray, host_data: np.ndarray,
                        channels: Sequence[str],
-                       valid: Optional[np.ndarray] = None) -> FleetDiagnosis:
+                       valid: Optional[np.ndarray] = None,
+                       extra_cost_s: float = 0.0) -> FleetDiagnosis:
         """host_data: (hosts, C, T) aligned windows; finds every straggler
         above threshold and explains all of them in one batched dispatch.
 
@@ -214,7 +323,16 @@ class FleetMonitor:
         reported in ``FleetDiagnosis.quarantined`` with mitigation
         ``RESTART_TELEMETRY`` — a telemetry fault must never surface as a
         GPU/host-interference verdict.  An all-true (or absent) mask
-        leaves the clean path byte-identical."""
+        leaves the clean path byte-identical.
+
+        ``extra_cost_s`` is added to the measured round cost before the
+        deadline-budget hysteresis update (a harness models external load
+        with it; a deployment passes assembly/IO time).  While degraded,
+        the round is detect-only: Layer-3 RCA runs solely for flagged
+        hosts already carrying strikes, every other flagged host is
+        reported in ``deferred_hosts`` (still accruing a strike, so it
+        leads the RCA queue once re-armed or escalates to
+        EXCLUDE_AND_RESCALE on persistence)."""
         hosts, C, T = host_data.shape
         li = list(channels).index(self.cfg.latency_metric)
         vfull = None
@@ -235,11 +353,13 @@ class FleetMonitor:
             # quiet round clears strike history exactly like a quiet full
             # window (no host was flagged THIS round).
             self._strikes.clear()
+            self._update_budget(extra_cost_s)
             return FleetDiagnosis(
                 straggler_host=0, straggler_score=0.0, diagnosis=None,
                 mitigation=Mitigation.NONE,
                 per_host_scores=np.zeros(hosts, np.float32),
-                stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0})
+                stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0},
+                degraded=self._degraded)
         t_detect = time.perf_counter()
         lat = host_data[:, li, :]
         # telemetry quarantine: invalid fraction of the latency channel
@@ -300,20 +420,39 @@ class FleetMonitor:
         flagged_set = {int(h) for h in flagged}
         for h in [h for h in self._strikes if h not in flagged_set]:
             del self._strikes[h]
+        degraded = self._degraded
+        deferred: List[int] = []
         if flagged.size:
-            diagnoses = self._diagnose_hosts(ts, host_data, channels, li,
-                                             flagged, (T - wn) + onset_rel,
-                                             scores, wn, bn, stage,
-                                             valid=vfull)
+            rca_hosts, rca_onsets = flagged, onset_rel
+            if degraded:
+                # detect-only round: RCA only for hosts whose flag is
+                # *persistent* (strike history) — everything else is
+                # deferred, explicitly, instead of silently late
+                pri = np.fromiter(
+                    (self._strikes.get(int(h), 0) > 0 for h in flagged),
+                    dtype=bool, count=flagged.size)
+                rca_hosts, rca_onsets = flagged[pri], onset_rel[pri]
+                deferred = [int(h) for h in flagged[~pri]]
+                self.deferred_rca += len(deferred)
+            if rca_hosts.size:
+                diagnoses = self._diagnose_hosts(ts, host_data, channels,
+                                                 li, rca_hosts,
+                                                 (T - wn) + rca_onsets,
+                                                 scores, wn, bn, stage,
+                                                 valid=vfull)
+            deferred_set = set(deferred)
             for h in flagged:
                 h = int(h)
                 d = diagnoses.get(h)
-                if d is None:      # no evidence channels: verdict-less host
+                if d is None and h not in deferred_set:
+                    # no evidence channels: verdict-less host
                     mitigations[h] = Mitigation.NONE
                     continue
                 self._strikes[h] = self._strikes.get(h, 0) + 1
                 if self._strikes[h] >= self.persistent_threshold:
                     mitigations[h] = Mitigation.EXCLUDE_AND_RESCALE
+                elif d is None:    # deferred: verdict comes once re-armed
+                    mitigations[h] = Mitigation.NONE
                 else:
                     mitigations[h] = VERDICT_TO_MITIGATION[d.top_cause]
         # quarantined hosts carry the telemetry-fault verdict: fire was
@@ -325,6 +464,9 @@ class FleetMonitor:
         # the worst *persistent* host; bare arg-max only as the quiet-fleet
         # readout (a transient max-z glitch must not name a straggler)
         straggler = int(flagged[0]) if flagged.size else int(np.argmax(scores))
+        if degraded:
+            self.shed_rounds += 1
+        self._update_budget(sum(stage.values()) + float(extra_cost_s))
         return FleetDiagnosis(
             straggler_host=straggler,
             straggler_score=float(scores[straggler]),
@@ -334,7 +476,9 @@ class FleetMonitor:
             flagged_hosts=[int(h) for h in flagged],
             diagnoses=diagnoses, mitigations=mitigations,
             stage_seconds=stage,
-            quarantined=[int(h) for h in qhosts])
+            quarantined=[int(h) for h in qhosts],
+            degraded=degraded,
+            deferred_hosts=deferred)
 
     # ----------------------------------------------------- batched Layer 3+4
     def _diagnose_hosts(self, ts: np.ndarray, host_data: np.ndarray,

@@ -41,6 +41,18 @@ committed trial's ``protocol_seed`` — stay byte-identical):
   ``crash_restart``   agent crash/restart: every channel unreadable for a
                       multi-second gap mid-run.  Zero verdicts expected.
 
+Monitor-survivability classes (appended after the chaos classes, same
+append-only protocol-seed discipline).  Unlike chaos, monitor events do
+not touch the telemetry — they schedule failures of the *diagnosis
+process* itself, which the eval harness enacts:
+
+  ``crash_during_incident``  one real fault; the monitor is killed shortly
+                             after onset and warm-restored from its last
+                             checkpoint — replayed verdicts must be
+                             byte-identical to an uninterrupted run (zero
+                             duplicates), latencies scored against the
+                             restart window.
+
 ``compose_trial`` is the shared builder: ambient host signals generated
 once, every :class:`FaultEvent` applied through the *same* envelope /
 leakage machinery as ``make_trial`` (additive host-channel effects, lagged
@@ -98,6 +110,29 @@ class FaultEvent:
         return self.t_on < other.t_off and other.t_on < self.t_off
 
 
+@dataclasses.dataclass(frozen=True)
+class MonitorEvent:
+    """One scheduled failure of the monitor process itself.
+
+    ``monitor_crash``: the diagnosis process dies at ``t`` and is
+    warm-restored ``dur_s`` later from its last checkpoint; the trailing
+    ring contents are replayed through the restored state.
+    ``monitor_overload``: every diagnosis round in ``[t, t + dur_s)``
+    carries ``cost_s`` of synthetic external load — the deadline-budget
+    hysteresis must shed to detect-only instead of silently missing the
+    5 s target.
+    """
+
+    kind: str                # "monitor_crash" | "monitor_overload"
+    t: float                 # seconds on the trial grid
+    dur_s: float = 0.0       # crash downtime / overload span
+    cost_s: float = 0.0      # per-round synthetic cost (overload only)
+
+    @property
+    def t_end(self) -> float:
+        return self.t + self.dur_s
+
+
 @dataclasses.dataclass
 class ScenarioTrial:
     """A composed timeline: telemetry matrix + per-event ground truth.
@@ -121,6 +156,10 @@ class ScenarioTrial:
     #: telemetry-corruption ground truth (chaos classes); ``data`` already
     #: carries the corruption — this records what was injected where
     chaos: List[ChaosEvent] = dataclasses.field(default_factory=list)
+    #: scheduled monitor-process failures (survivability classes); the
+    #: telemetry is untouched — the eval harness enacts these against the
+    #: diagnosis loop (crash + warm restore, synthetic overload)
+    monitor: List[MonitorEvent] = dataclasses.field(default_factory=list)
 
     @property
     def rate_hz(self) -> float:
@@ -376,19 +415,70 @@ CHAOS_SCENARIOS: Dict[str, ChaosScenarioSpec] = {
     )
 }
 
+# ---------------------------------------------------------------------------
+# monitor-survivability classes: the diagnosis process itself fails
+# ---------------------------------------------------------------------------
+
+def _sample_crash_incident_fault(rng: np.random.Generator,
+                                 ) -> List[FaultEvent]:
+    """One strong fault, onset phase-pinned like ``chaos_overlap`` — the
+    crash must land while the incident is in flight, and the detection
+    boundary at 35 s keeps the latency arithmetic explicit."""
+    cls = CLASS_ORDER[int(rng.integers(len(CLASS_ORDER)))]
+    intensity = float(np.clip(rng.lognormal(0.5, 0.25), 1.2, 3.0))
+    return [FaultEvent(cls, float(rng.uniform(30.6, 31.4)),
+                       float(rng.uniform(12.0, 16.0)), intensity)]
+
+
+def _crash_during_incident_sampler(rng: np.random.Generator,
+                                   events: List[FaultEvent],
+                                   ) -> List[MonitorEvent]:
+    """Kill the monitor 1.5-3.5 s after fault onset — before the 35 s
+    detection boundary, so the incident is mid-flight (often with a
+    pending event) — with 4-8 s of downtime before the warm restore."""
+    t_on = events[0].t_on
+    return [MonitorEvent("monitor_crash",
+                         t_on + float(rng.uniform(1.5, 3.5)),
+                         dur_s=float(rng.uniform(4.0, 8.0)))]
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorScenarioSpec(ScenarioSpec):
+    """A scenario class whose trials schedule monitor-process failures."""
+
+    monitor_sampler: Optional[Callable[
+        [np.random.Generator, List[FaultEvent]],
+        List[MonitorEvent]]] = None
+
+
+MONITOR_SCENARIOS: Dict[str, MonitorScenarioSpec] = {
+    s.name: s for s in (
+        MonitorScenarioSpec("crash_during_incident",
+                            _sample_crash_incident_fault,
+                            "monitor killed mid-incident, warm-restored "
+                            "from checkpoint with ring replay",
+                            confuser_prob=0.15,
+                            monitor_sampler=_crash_during_incident_sampler),
+    )
+}
+
 #: every scenario class: registry samplers first, the fleet class next,
-#: chaos classes LAST — appending after fleet_nic keeps every pre-chaos
-#: class index (and so every committed trial's protocol seed) stable
+#: chaos classes after, monitor-survivability classes LAST — append-only,
+#: so every pre-existing class index (and therefore every committed
+#: trial's protocol seed) stays byte-identical
 SCENARIO_CLASSES: Tuple[str, ...] = (tuple(SCENARIOS) + ("fleet_nic",)
-                                     + tuple(CHAOS_SCENARIOS))
+                                     + tuple(CHAOS_SCENARIOS)
+                                     + tuple(MONITOR_SCENARIOS))
 
 
 def scenario_spec(name: str) -> ScenarioSpec:
-    """Spec lookup across the fault, fleet and chaos registries."""
+    """Spec lookup across the fault, fleet, chaos and monitor registries."""
     if name in SCENARIOS:
         return SCENARIOS[name]
     if name in CHAOS_SCENARIOS:
         return CHAOS_SCENARIOS[name]
+    if name in MONITOR_SCENARIOS:
+        return MONITOR_SCENARIOS[name]
     if name == "fleet_nic":
         return ScenarioSpec(
             "fleet_nic", _sample_soak,
@@ -426,7 +516,8 @@ def make_scenario(seed: int, name: str, *,
         for t in trials:
             t.group = seed
         return trials
-    spec = SCENARIOS.get(name) or CHAOS_SCENARIOS.get(name)
+    spec = (SCENARIOS.get(name) or CHAOS_SCENARIOS.get(name)
+            or MONITOR_SCENARIOS.get(name))
     if spec is None:
         raise KeyError(f"unknown scenario class {name!r}")
     rng = np.random.default_rng(seed * 7919 + 13)
@@ -443,6 +534,13 @@ def make_scenario(seed: int, name: str, *,
         chaos = chaos_sampler(crng, events)
         chaos_mod.apply_chaos(trial.data, trial.channels, rate_hz, chaos)
         trial.chaos = list(chaos)
+    monitor_sampler = getattr(spec, "monitor_sampler", None)
+    if monitor_sampler is not None:
+        # monitor failures also get a dedicated stream, and they never
+        # touch trial.data at all: the telemetry on disk is what the
+        # hosts emitted whether or not anyone was watching
+        mrng = np.random.default_rng(seed * 15485863 + 11)
+        trial.monitor = list(monitor_sampler(mrng, events))
     return [trial]
 
 

@@ -116,15 +116,34 @@ class TrialScore:
     rca_latencies: List[float]           # t_ready - truth.t_on, matched
 
 
+def _effective_t(t: float,
+                 restart_windows: Sequence[Tuple[float, float]]) -> float:
+    """Latency stamp for a verdict time under monitor downtime.
+
+    A verdict whose virtual timestamp falls inside a restart window
+    ``[t0, t1)`` could not have been *delivered* before the monitor came
+    back at ``t1`` — replay re-derives it at restore time.  Latency
+    scoring therefore charges the downtime: the effective time is the
+    window end.  Times outside every window are unchanged, and replay
+    parity elsewhere still compares the raw virtual stamps.
+    """
+    for t0, t1 in restart_windows:
+        if t0 <= t < t1:
+            return float(t1)
+    return float(t)
+
+
 def score_trial(truth: Sequence[FaultEvent],
                 verdicts: Sequence[VerdictEvent],
-                tol_s: float = TOL_S) -> TrialScore:
+                tol_s: float = TOL_S,
+                restart_windows: Sequence[Tuple[float, float]] = (),
+                ) -> TrialScore:
     m = match_events(truth, verdicts, tol_s)
     det, rca, correct = [], [], 0
     for i, j in m.pairs:
         t, v = truth[i], verdicts[j]
-        det.append(v.t_detect - t.t_on)
-        rca.append(v.t_ready - t.t_on)
+        det.append(_effective_t(v.t_detect, restart_windows) - t.t_on)
+        rca.append(_effective_t(v.t_ready, restart_windows) - t.t_on)
         if v.pred == t.kind:
             correct += 1
     return TrialScore(n_truth=len(truth), n_verdicts=len(verdicts),

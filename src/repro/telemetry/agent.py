@@ -47,6 +47,7 @@ class AgentStats:
     watchdog_trips: int = 0        # collector samples over the tick deadline
     counter_resets: int = 0        # negative counter deltas seen (and zeroed)
     clock_anomalies: int = 0       # non-positive dt ticks (clock jumped back)
+    restarts: int = 0              # in-place re-arms after a stop/hang
     #: wall seconds of *completed* live/virtual segments; the in-flight
     #: background segment is accounted by ``live_t0``
     wall_accum: float = 0.0
@@ -355,6 +356,25 @@ class TelemetryAgent:
             self.stats.wall_accum += time.perf_counter() - self.stats.live_t0
             self.stats.live_t0 = None
         return self.stats
+
+    def restart(self) -> None:
+        """Re-arm a stopped (or hung-and-abandoned) agent in place.
+
+        The monitor's RESTART_TELEMETRY mitigation path: clears the hung
+        flag, crash-isolation backoffs, and the counter-delta handoff (a
+        fresh probe must not compute rates against pre-restart raws), and
+        counts the restart in stats.  The ring and its history survive —
+        restart recovers the *probe*, not the data.  Refuses while the
+        sampling thread is still live."""
+        if self._thread is not None:
+            raise RuntimeError("stop() the agent before restart()")
+        self.hung = False
+        self._stop.clear()
+        self._fail_streak = [0] * len(self.collectors)
+        self._backoff_left = [0] * len(self.collectors)
+        self._prev_raw = {}
+        self._prev_ts = None
+        self.stats.restarts += 1
 
     # ------------------------------------------------------------- accessors
     def window(self, seconds: float, copy: bool = True,

@@ -293,6 +293,23 @@ class MultiChannelRing:
         self._count = min(self.capacity, self._count + n)
         self._write_end()
 
+    def read_since(self, t_after: float, max_retries: int = 10_000,
+                   ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Consistent snapshot of every column newer than ``t_after`` —
+        the warm-restart replay read.
+
+        A monitor restoring from a checkpoint knows the newest sample
+        time it had processed (``t_seen``); the ring — single-writer,
+        unaffected by the monitor's crash — still holds the trailing
+        history, so ``read_since(t_seen)`` is exactly the backlog to
+        re-drive through the restored state.  Returns ``(ts, data,
+        n_new)`` with ``n_new == ts.size`` (0 when nothing newer exists,
+        e.g. after a torn-read give-up)."""
+        ts, data, _ = self.read_window(self.capacity,
+                                       max_retries=max_retries)
+        lo = int(np.searchsorted(ts, float(t_after), side="right"))
+        return ts[lo:], data[:, lo:], int(ts.size - lo)
+
     def peek(self, max_retries: int = 1000) -> Tuple[int, float]:
         """Consistent ``(count, newest timestamp)`` — seqlock-validated, so
         safe against the background writer.  ``(0, -inf)`` when empty.

@@ -79,9 +79,11 @@ def test_scorecard_family_smoke():
     rows = scorecard.smoke_rows()
     _check(rows, "scorecard/")
     vals = dict((n, v) for n, v, _ in rows)
-    for key in ("batched_pred", "batched_ts", "slab_pred", "slab_ts"):
+    for key in ("batched_pred", "batched_ts", "slab_pred", "slab_ts",
+                "replay"):
         assert vals[f"scorecard/parity/{key}"] == 1.0
     assert vals["scorecard/false_verdicts/soak"] == 0.0
+    assert vals["scorecard/restart/duplicates"] == 0.0
 
 
 @pytest.mark.bench_smoke
@@ -95,6 +97,22 @@ def test_chaos_family_smoke():
     assert vals["chaos/soak_false_verdicts"] == 0.0
     assert vals["chaos/masked_parity"] == 1.0
     assert vals["chaos/sanitize_overhead_frac"] <= 0.9
+
+
+@pytest.mark.bench_smoke
+def test_restart_family_smoke():
+    """Survivability invariant rows: crash/restore replay parity, zero
+    duplicate verdicts, checkpoint wall costs finite, degraded-mode
+    shedding + deferral exercised and re-armed."""
+    rows = fleetbench.restart_rows(reps=1)
+    _check(rows, "restart/")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["restart/fleet_replay_parity"] == 1.0
+    assert vals["restart/duplicate_verdicts"] == 0.0
+    assert vals["restart/suppressed_replay"] >= 1.0
+    assert vals["restart/shed_rounds"] >= 1.0
+    assert vals["restart/deferred_rca"] >= 1.0
+    assert vals["restart/rearmed"] == 1.0
 
 
 @pytest.mark.bench_smoke

@@ -1,0 +1,486 @@
+"""Monitor survivability: checkpoint envelope validation, deterministic
+stream-state replay, fleet-session crash/restore parity, deadline-aware
+degraded mode, and the aggregator's agent-restart wiring.
+
+(The training checkpointer's tests live in tests/test_checkpoint.py; this
+file covers the *monitor* checkpoint subsystem from repro.monitor.)
+"""
+import dataclasses
+import os
+import struct
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.engine import CorrelationEngine, StreamState
+from repro.monitor import checkpoint as ckpt
+from repro.monitor.aggregator import FleetAggregator
+from repro.monitor.checkpoint import (
+    CheckpointError, MonitorSession, load_checkpoint, save_checkpoint,
+)
+from repro.monitor.fleet import FleetMonitor
+from repro.sim.scenario import make_trial
+from repro.sim.scenarios import make_scenario
+from repro.telemetry.agent import TelemetryAgent
+from repro.telemetry.collectors import SimCollector
+
+
+# ------------------------------------------------------------ envelope layer
+def _rng_payload(rng):
+    """One random JSON-able payload (the poor man's hypothesis strategy)."""
+    return {
+        "ints": [int(x) for x in rng.integers(-2**40, 2**40, 5)],
+        "floats": [float(x) for x in rng.normal(0, 1e6, 5)],
+        "nested": {"a": {"b": [float(rng.random()), None, True]}},
+        "text": "".join(chr(int(c)) for c in rng.integers(32, 0x2FF, 20)),
+        "empty": {},
+    }
+
+
+def test_checkpoint_roundtrip_property(tmp_path):
+    """Round-trip over many random payloads: load(save(p)) == p exactly."""
+    rng = np.random.default_rng(0)
+    path = os.path.join(tmp_path, "c.ckpt")
+    for _ in range(50):
+        payload = _rng_payload(rng)
+        n = save_checkpoint(path, payload)
+        assert n == os.path.getsize(path)
+        assert load_checkpoint(path) == payload
+
+
+def test_checkpoint_roundtrip_hypothesis(tmp_path):
+    """Same round-trip law under hypothesis, where the env provides it."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    json_vals = st.recursive(
+        st.none() | st.booleans() | st.integers(-2**53, 2**53)
+        | st.floats(allow_nan=False, allow_infinity=False) | st.text(),
+        lambda c: st.lists(c, max_size=4)
+        | st.dictionaries(st.text(max_size=8), c, max_size=4),
+        max_leaves=20)
+
+    @hyp.given(st.dictionaries(st.text(max_size=8), json_vals, max_size=6))
+    @hyp.settings(max_examples=30, deadline=None)
+    def roundtrip(payload):
+        path = os.path.join(tmp_path, "h.ckpt")
+        save_checkpoint(path, payload)
+        assert load_checkpoint(path) == payload
+
+    roundtrip()
+
+
+def test_every_corrupt_byte_is_rejected(tmp_path):
+    """Flipping ANY single byte of the file must raise CheckpointError —
+    header fields loudly, payload bytes via the CRC."""
+    path = os.path.join(tmp_path, "c.ckpt")
+    save_checkpoint(path, {"k": [1, 2.5, "three"]})
+    blob = open(path, "rb").read()
+    for i in range(len(blob)):
+        bad = bytearray(blob)
+        bad[i] ^= 0x41
+        open(path, "wb").write(bytes(bad))
+        with pytest.raises(CheckpointError):
+            load_checkpoint(path)
+
+
+def test_truncation_rejected_at_every_length(tmp_path):
+    path = os.path.join(tmp_path, "c.ckpt")
+    save_checkpoint(path, {"k": "v" * 64})
+    blob = open(path, "rb").read()
+    for n in range(len(blob)):
+        open(path, "wb").write(blob[:n])
+        with pytest.raises(CheckpointError, match="truncated|cannot"):
+            load_checkpoint(path)
+
+
+def test_version_skew_rejected(tmp_path):
+    path = os.path.join(tmp_path, "c.ckpt")
+    save_checkpoint(path, {"k": 1})
+    blob = bytearray(open(path, "rb").read())
+    magic, _, ln, crc = ckpt._HEADER.unpack_from(bytes(blob))
+    blob[:ckpt._HEADER.size] = ckpt._HEADER.pack(magic, ckpt.VERSION + 1,
+                                                 ln, crc)
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointError, match="version"):
+        load_checkpoint(path)
+
+
+def test_bad_magic_and_missing_file_rejected(tmp_path):
+    path = os.path.join(tmp_path, "c.ckpt")
+    with pytest.raises(CheckpointError, match="cannot read"):
+        load_checkpoint(path)
+    save_checkpoint(path, {"k": 1})
+    blob = bytearray(open(path, "rb").read())
+    blob[:8] = b"NOTMAGIC"
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointError, match="magic"):
+        load_checkpoint(path)
+
+
+def test_non_object_payload_rejected(tmp_path):
+    path = os.path.join(tmp_path, "c.ckpt")
+    import binascii
+    import json
+    body = json.dumps([1, 2, 3]).encode()
+    blob = ckpt._HEADER.pack(ckpt.MAGIC, ckpt.VERSION, len(body),
+                             binascii.crc32(body) & 0xFFFFFFFF) + body
+    open(path, "wb").write(blob)
+    with pytest.raises(CheckpointError, match="not an object"):
+        load_checkpoint(path)
+
+
+def test_atomic_write_leaves_no_temp_files(tmp_path):
+    path = os.path.join(tmp_path, "c.ckpt")
+    for i in range(3):
+        save_checkpoint(path, {"round": i})
+    assert sorted(os.listdir(tmp_path)) == ["c.ckpt"]
+    assert load_checkpoint(path) == {"round": 2}
+
+
+# ------------------------------------------------- engine stream-state replay
+@pytest.mark.parametrize("name", ["single", "overlap_pair", "cascade",
+                                  "flap"])
+def test_segmented_detect_matches_one_shot(name):
+    """Cutting the stream anywhere (and round-tripping the state through
+    its dict form mid-stream) yields the one-shot event stream byte for
+    byte — stamps, scores and rca indices included."""
+    trial = make_scenario(11, name)[0]
+    ts, data, channels = trial.ts, trial.data, trial.channels
+    T = ts.shape[0]
+    eng = CorrelationEngine()
+    # the scalar per-tick path is the oracle stateful calls replay; the
+    # fast sweep agrees on every decision/stamp but its prefix-sum scores
+    # round differently in the last bits
+    ref = eng.detect_events(ts, data, channels, fast=False)
+    fast = eng.detect_events(ts, data, channels)
+    stamps = lambda evs: [(e.t_onset, e.t_detect, int(t)) for e, t in evs]
+    assert stamps(fast) == stamps(ref)
+
+    rng = np.random.default_rng(99)
+    for _ in range(3):
+        cuts = sorted(rng.choice(np.arange(1, T), size=5, replace=False))
+        state = StreamState()
+        got = []
+        for hi in list(int(c) for c in cuts) + [T]:
+            got += eng.detect_events(ts[:hi], data[:, :hi], channels,
+                                     state=state)
+            # checkpoint/restore mid-stream must be a no-op for replay
+            state = StreamState.from_dict(state.to_dict())
+        fl = state.flush(T)
+        if fl is not None:
+            got.append(fl)
+        sig = lambda evs: [(e.t_onset, e.t_detect, e.score, int(t))
+                           for e, t in evs]
+        assert sig(got) == sig(ref)
+
+
+def test_stream_state_skips_already_seen_ticks():
+    trial = make_scenario(5, "single")[0]
+    eng = CorrelationEngine()
+    state = StreamState()
+    first = eng.detect_events(trial.ts, trial.data, trial.channels,
+                              state=state)
+    again = eng.detect_events(trial.ts, trial.data, trial.channels,
+                              state=state)
+    assert again == []                 # every tick already seen
+    assert len(first) >= 1
+
+
+# ------------------------------------------------------- fleet session replay
+def _fleet_windows(n_hosts=4, bad_host=2, cls="nic", seed=800):
+    trials = [make_trial(seed + h, cls,
+                         intensity=(2.0 if h == bad_host else 0.0),
+                         t_on=40.0, confuser_prob=0.0)
+              for h in range(n_hosts)]
+    t_hi = int(46.0 * trials[0].rate_hz)
+    slab = np.ascontiguousarray(
+        np.stack([t.data[:, :t_hi] for t in trials]), np.float32)
+    ts = trials[0].ts[:t_hi]
+    ticks = [min(int(r * trials[0].rate_hz), ts.shape[0])
+             for r in range(36, 47)]
+    return ts, slab, trials[0].channels, ticks
+
+
+def _drive(sess, ts, slab, ticks, skip=(), replay_from=None, **kw):
+    out = []
+    for k, hi in enumerate(ticks):
+        if k in skip:
+            continue
+        out += sess.tick(ts[:hi], slab[:, :, :hi],
+                         replay=(k == replay_from), **kw)[1]
+    return out
+
+
+@pytest.mark.parametrize("crash_round", [2, 4, 6])
+def test_fleet_crash_restore_replay_parity(tmp_path, crash_round):
+    """Crash after ``crash_round`` rounds, restore a FRESH monitor+session
+    from the checkpoint, replay the remaining windows: verdict stream
+    byte-identical to an uninterrupted session, zero duplicates."""
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+
+    base = _drive(MonitorSession(FleetMonitor(use_kernels=False), channels),
+                  ts, slab, ticks)
+    assert base, "fixture must produce at least one verdict"
+
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    got = _drive(sess, ts, slab, ticks[:crash_round])
+    sess.save(path)
+    # process dies; cold objects warm-restore
+    sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    assert sess2.restore(path) is True
+    assert sess2.stats.restarts == 1
+    got += _drive(sess2, ts, slab, ticks,
+                  skip=set(range(crash_round)), replay_from=crash_round)
+
+    sigs = [v.sig() for v in got]
+    assert sigs == [v.sig() for v in base]
+    assert len(sigs) == len(set(sigs))      # no duplicate verdicts
+
+
+def test_replay_reemission_suppressed_by_restored_cooldown(tmp_path):
+    """A verdict delivered before the crash and re-derived by the replay
+    is suppressed by the restored cooldown map and counted."""
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    verdicts = []
+    crash_at = None
+    for k, hi in enumerate(ticks):
+        verdicts += sess.tick(ts[:hi], slab[:, :, :hi])[1]
+        sess.save(path)
+        if verdicts and crash_at is None:
+            crash_at = k
+            break
+    assert crash_at is not None
+    sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    assert sess2.restore(path)
+    extra = _drive(sess2, ts, slab, ticks, skip=set(range(crash_at + 1)),
+                   replay_from=crash_at + 1)
+    assert sess2.stats.duplicates_suppressed >= 1
+    all_sigs = [v.sig() for v in verdicts + extra]
+    assert len(all_sigs) == len(set(all_sigs))
+    assert sess2.stats.replay_ticks > 0
+
+
+def test_corrupt_checkpoint_falls_back_to_cold_start(tmp_path):
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    _drive(sess, ts, slab, ticks[:3])
+    sess.save(path)
+    blob = bytearray(open(path, "rb").read())
+    blob[-10] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+
+    sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    with pytest.warns(RuntimeWarning, match="cold start"):
+        ok = sess2.restore(path)
+    assert ok is False
+    assert sess2.stats.checkpoints_rejected == 1
+    assert sess2.stats.restarts == 0
+    # cold state untouched: no cooldowns, no baselines, -inf horizon
+    assert sess2._cooldown_until == {} and sess2._base_n == {}
+    assert sess2._t_seen == -np.inf
+
+
+def test_malformed_payload_never_half_restores(tmp_path):
+    """A checkpoint whose envelope is valid but whose payload is missing a
+    later field must not mutate ANY session state (parse-all-then-assign)."""
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    _drive(sess, ts, slab, ticks[:4])
+    payload = sess.state_dict()
+    del payload["baseline"]                 # envelope fine, payload not
+    save_checkpoint(path, payload)
+
+    sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    with pytest.warns(RuntimeWarning):
+        assert sess2.restore(path) is False
+    assert sess2._cooldown_until == {}
+    assert sess2._t_seen == -np.inf
+    assert sess2.monitor._strikes == {}
+
+
+def test_baseline_moments_replay_bit_identical(tmp_path):
+    """Welford chunk-merge moments converge bit-identically between an
+    uninterrupted session and a crash/restore replay over the same chunk
+    boundaries."""
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    a = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    _drive(a, ts, slab, ticks)
+
+    b = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    _drive(b, ts, slab, ticks[:5])
+    b.save(path)
+    b2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    assert b2.restore(path)
+    _drive(b2, ts, slab, ticks, skip=set(range(5)), replay_from=5)
+
+    for h in range(slab.shape[0]):
+        na, ma, va = a.baseline_moments(h)
+        nb, mb, vb = b2.baseline_moments(h)
+        np.testing.assert_array_equal(na, nb)
+        np.testing.assert_array_equal(ma, mb)
+        np.testing.assert_array_equal(va, vb)
+
+
+# --------------------------------------------------------- degraded mode
+def test_degraded_mode_sheds_defers_and_rearms():
+    ts, slab, channels, ticks = _fleet_windows()
+    mon = FleetMonitor(use_kernels=False, budget_s=0.05, shed_after=2,
+                       rearm_after=3)
+    sess = MonitorSession(mon, channels)
+    degraded_seen = deferred_seen = False
+    for k, hi in enumerate(ticks):
+        cost = 1.0 if k < 6 else 0.0
+        fd, _ = sess.tick(ts[:hi], slab[:, :, :hi], extra_cost_s=cost)
+        degraded_seen |= fd.degraded
+        deferred_seen |= bool(fd.deferred_hosts)
+    assert degraded_seen, "budget hysteresis never degraded"
+    assert deferred_seen, "no fresh host had its RCA deferred"
+    assert mon.shed_rounds >= 1
+    assert mon.deferred_rca >= 1
+    assert not mon.degraded, "budget never re-armed after load lifted"
+
+
+def test_degraded_mode_prioritizes_strike_carrying_hosts():
+    """While degraded, a host with prior strikes keeps full RCA; a fresh
+    flagged host is detect-only (deferred, mitigation NONE)."""
+    ts, slab, channels, ticks = _fleet_windows(bad_host=2)
+    mon = FleetMonitor(use_kernels=False, budget_s=0.05, shed_after=1,
+                       rearm_after=99)
+    # round 1 on-budget: bad host earns a strike with a full diagnosis
+    fd0 = mon.diagnose_fleet(ts[:ticks[-1]], slab[:, :, :ticks[-1]],
+                             channels)
+    assert 2 in fd0.flagged_hosts and 2 in fd0.diagnoses
+    assert mon._strikes.get(2, 0) >= 1
+    # hammer the budget until degraded, keeping the incident in-window so
+    # the host's strike history survives (clean rounds would clear it)
+    while not mon.degraded:
+        mon.diagnose_fleet(ts[:ticks[-1]], slab[:, :, :ticks[-1]],
+                           channels, extra_cost_s=1.0)
+    fd1 = mon.diagnose_fleet(ts[:ticks[-1]], slab[:, :, :ticks[-1]],
+                             channels, extra_cost_s=1.0)
+    assert fd1.degraded
+    # the striked host still gets a diagnosis while degraded
+    assert 2 in fd1.diagnoses
+    assert 2 not in fd1.deferred_hosts
+
+
+def test_degraded_field_survives_checkpoint(tmp_path):
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    mon = FleetMonitor(use_kernels=False, budget_s=0.05, shed_after=1,
+                       rearm_after=3)
+    sess = MonitorSession(mon, channels)
+    sess.tick(ts[:ticks[0]], slab[:, :, :ticks[0]], extra_cost_s=1.0)
+    assert mon.degraded
+    sess.save(path)
+    mon2 = FleetMonitor(use_kernels=False, budget_s=0.05, shed_after=1,
+                        rearm_after=3)
+    sess2 = MonitorSession(mon2, channels)
+    assert sess2.restore(path)
+    assert mon2.degraded
+    assert mon2.shed_rounds == mon.shed_rounds
+
+
+def test_non_degraded_rounds_identical_with_budget_disabled():
+    """budget_s=None (the default) must leave diagnose_fleet byte-identical
+    to a budgeted monitor that never trips: degraded stays a pure add-on."""
+    ts, slab, channels, ticks = _fleet_windows()
+    hi = ticks[-1]
+    a = FleetMonitor(use_kernels=False)
+    b = FleetMonitor(use_kernels=False, budget_s=1e9)
+    fa = a.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    fb = b.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    assert fa.flagged_hosts == fb.flagged_hosts
+    assert not fa.degraded and not fb.degraded
+    assert fa.deferred_hosts == [] and fb.deferred_hosts == []
+    for h in fa.diagnoses:
+        assert fa.diagnoses[h].event.t_onset == fb.diagnoses[h].event.t_onset
+        assert fa.diagnoses[h].top_cause == fb.diagnoses[h].top_cause
+
+
+# -------------------------------------------------- reset_host + aggregator
+def test_reset_host_clears_strike_and_quarantine_state():
+    ts, slab, channels, ticks = _fleet_windows(bad_host=1)
+    mon = FleetMonitor(use_kernels=False, persistent_threshold=2)
+    hi = ticks[-1]
+    mon.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    mon.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    assert mon._strikes.get(1, 0) >= 2
+    mon.reset_host(1)
+    assert 1 not in mon._strikes
+    fd = mon.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    # history gone: the host re-earns its first strike from scratch
+    assert mon._strikes.get(1, 0) == 1
+    assert 1 in fd.flagged_hosts
+
+
+def test_agent_restart_wires_reset_host_through_aggregator():
+    trials = [make_trial(860 + h, "nic",
+                         intensity=(2.0 if h == 1 else 0.0),
+                         t_on=40.0, confuser_prob=0.0) for h in range(3)]
+    agents = [TelemetryAgent([SimCollector(t.channels, t.ts, t.data)],
+                             rate_hz=100.0, history_s=60.0) for t in trials]
+    agg = FleetAggregator(agents, window_s=40.0)
+    agg.run_virtual(0.0, 46.0)
+    mon = FleetMonitor(use_kernels=False, persistent_threshold=2)
+    agg.diagnose(mon)
+    agg.diagnose(mon)
+    assert mon._strikes.get(1, 0) >= 2
+
+    agg.restart_agent(1)
+    assert agents[1].stats.restarts == 1
+    assert agg.stats.agent_restarts == 1
+    # the reset is delivered at the next diagnose, exactly once
+    agg.run_virtual(46.0, 46.5)
+    agg.diagnose(mon)
+    assert agg.stats.host_resets == 1
+    assert mon._strikes.get(1, 0) <= 1
+
+
+def test_agent_restart_counters_in_snapshots():
+    t = make_trial(870, "nic", intensity=0.0, t_on=40.0, confuser_prob=0.0)
+    agent = TelemetryAgent([SimCollector(t.channels, t.ts, t.data)],
+                           rate_hz=100.0, history_s=10.0)
+    agent.run_virtual(0.0, 5.0)
+    assert agent.stats.restarts == 0
+    agent.restart()
+    assert agent.stats.restarts == 1
+    # ring/history survive a restart — only failure state is cleared
+    ts, _ = agent.window(2.0)
+    assert ts.shape[0] > 0
+
+
+def test_ring_read_since_returns_only_new_samples():
+    t = make_trial(880, "nic", intensity=0.0, t_on=40.0, confuser_prob=0.0)
+    agent = TelemetryAgent([SimCollector(t.channels, t.ts, t.data)],
+                           rate_hz=100.0, history_s=30.0)
+    agent.run_virtual(0.0, 10.0)
+    ring = agent.ring
+    ts_all, _, n_all = ring.read_since(-np.inf)
+    assert n_all == ts_all.shape[0] > 0
+    cut = float(ts_all[n_all // 2])
+    ts_new, data_new, n_new = ring.read_since(cut)
+    assert n_new == ts_new.shape[0]
+    assert np.all(ts_new > cut)
+    assert data_new.shape[1] == n_new
+    _, _, none_new = ring.read_since(float(ts_all[-1]))
+    assert none_new == 0
+
+
+def test_session_stats_roundtrip_in_checkpoint(tmp_path):
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    _drive(sess, ts, slab, ticks[:4])
+    sess.save(path)
+    payload = load_checkpoint(path)
+    assert payload["stats"]["rounds"] == 4
+    assert payload["stats"]["checkpoints_written"] == 0  # pre-save snapshot
+    assert dataclasses.asdict(sess.stats)["checkpoints_written"] == 1

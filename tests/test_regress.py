@@ -117,6 +117,69 @@ def test_check_chaos_rows():
                for m in missing)
 
 
+def test_tampered_replay_parity_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["parity"]["replay"] = 0.75
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("parity/replay" in m for m in bad)
+
+
+def test_missing_replay_parity_fails(committed):
+    doc = copy.deepcopy(committed)
+    del doc["parity"]["replay"]
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("parity/replay missing" in m for m in bad)
+
+
+def test_tampered_restart_duplicates_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["restart"]["restart_duplicates"] = 2
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("restart_duplicates" in m for m in bad)
+
+
+def test_missing_restart_block_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["restart"] = None
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("restart block missing" in m for m in bad)
+
+
+def test_tampered_crash_latency_fails(committed):
+    doc = copy.deepcopy(committed)
+    doc["scenarios"]["crash_during_incident"]["detect_latency_s"]["max"] = \
+        regress.CRASH_DETECT_MAX_S + 1.0
+    bad = regress.check_scorecard(doc, label="t")
+    assert any("crash_during_incident detect_latency_s" in m for m in bad)
+
+
+def test_check_restart_rows():
+    good = [("restart/fleet_replay_parity", 1.0, ""),
+            ("restart/duplicate_verdicts", 0.0, ""),
+            ("restart/shed_rounds", 3.0, ""),
+            ("restart/deferred_rca", 1.0, ""),
+            ("restart/rearmed", 1.0, "")]
+    assert regress.check_restart_rows(good) == []
+    bad = regress.check_restart_rows(
+        [("restart/fleet_replay_parity", 0.5, "")] + good[1:])
+    assert any("diverged" in m for m in bad)
+    bad = regress.check_restart_rows(
+        good[:1] + [("restart/duplicate_verdicts", 1.0, "")] + good[2:])
+    assert any("re-delivered" in m for m in bad)
+    bad = regress.check_restart_rows(
+        good[:2] + [("restart/shed_rounds", 0.0, "")] + good[3:])
+    assert any("never shed" in m for m in bad)
+    bad = regress.check_restart_rows(
+        good[:3] + [("restart/deferred_rca", 0.0, "")] + good[4:])
+    assert any("deferred" in m for m in bad)
+    bad = regress.check_restart_rows(
+        good[:4] + [("restart/rearmed", 0.0, "")])
+    assert any("stuck degraded" in m for m in bad)
+    missing = regress.check_restart_rows(good[1:])
+    assert any("no row matched restart/fleet_replay_parity" in m
+               for m in missing)
+
+
 def test_check_bench_parity_rows():
     good = [("fleet/detect_parity/B8", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),

@@ -18,6 +18,38 @@ def test_registry_covers_required_classes():
     assert len(multi) >= 2
 
 
+def test_scenario_class_order_is_append_only():
+    """Class indices feed ``protocol_seed(seed, class_index, k)`` — the
+    committed eval artifacts depend on these exact positions.  New classes
+    may only be APPENDED; reordering silently re-seeds every trial."""
+    assert scen.SCENARIO_CLASSES[:12] == (
+        "single", "overlap_pair", "overlap_full", "cascade", "flap",
+        "soak", "fleet_nic", "chaos_soak", "chaos_overlap",
+        "frozen_channel", "crash_restart", "crash_during_incident")
+
+
+def test_crash_during_incident_schedules_monitor_crash():
+    """The monitor-survivability class: one real fault, one monitor crash
+    shortly after its onset, telemetry itself untouched — and the monitor
+    draw comes from a dedicated rng stream (same fault/data bytes as a
+    hypothetical crash-free sampling of the same seed)."""
+    trials = scen.make_scenario(123, "crash_during_incident")
+    assert len(trials) == 1
+    t = trials[0]
+    assert len(t.truth) == 1 and len(t.monitor) == 1
+    m = t.monitor[0]
+    assert m.kind == "monitor_crash"
+    assert t.truth[0].t_on + 1.5 <= m.t <= t.truth[0].t_on + 3.5
+    assert 4.0 <= m.dur_s <= 8.0
+    assert m.t_end == m.t + m.dur_s
+    # deterministic per seed
+    t2 = scen.make_scenario(123, "crash_during_incident")[0]
+    np.testing.assert_array_equal(t.data, t2.data)
+    assert t.monitor == t2.monitor
+    # non-monitor classes schedule no monitor failures
+    assert scen.make_scenario(123, "single")[0].monitor == []
+
+
 @pytest.mark.parametrize("name", list(scen.SCENARIOS))
 def test_sampled_timelines_are_well_formed(name):
     spec = scen.SCENARIOS[name]
@@ -77,9 +109,9 @@ def test_compose_multipliers_compound():
 
 def test_suite_stacks_into_trial_store():
     trials = scen.build_suite(1, seed=5, n_hosts=3, n_affected=2)
-    # one trial per registry class (incl. chaos) + n_hosts fleet rows
-    assert len(trials) == (len(scen.SCENARIOS)
-                           + len(scen.CHAOS_SCENARIOS) + 3)
+    # one trial per registry class (incl. chaos + monitor) + fleet rows
+    assert len(trials) == (len(scen.SCENARIOS) + len(scen.CHAOS_SCENARIOS)
+                           + len(scen.MONITOR_SCENARIOS) + 3)
     store = TrialStore.from_trials(trials)
     assert store.slab.shape[0] == len(trials)
     assert store.slab.dtype == np.float32

@@ -143,3 +143,37 @@ def test_verdict_events_prefer_t_ready():
     assert v.t_ready == diags[0].t_ready
     # deterministic virtual stamp: t_rca adds wall clock on top
     assert diags[0].t_rca >= v.t_ready
+
+
+def test_restart_windows_charge_downtime_to_latency():
+    """A verdict whose virtual stamp falls inside a monitor-downtime
+    window is charged the restore time; stamps outside are untouched."""
+    truth = [scen.FaultEvent("nic", 30.0, 12.0, 2.0)]
+    v = [scoring.VerdictEvent(t_onset=30.5, t_detect=35.0, t_ready=37.0,
+                              pred=CauseClass.NIC)]
+    plain = scoring.score_trial(truth, v)
+    assert plain.detect_latencies == [5.0]
+    assert plain.rca_latencies == [7.0]
+    # downtime 33-40 s swallows both stamps -> both charged to 40 s
+    s = scoring.score_trial(truth, v, restart_windows=[(33.0, 40.0)])
+    assert s.detect_latencies == [10.0]
+    assert s.rca_latencies == [10.0]
+    assert s.n_matched == 1 and s.n_correct == 1
+    # a window that closed before the stamps changes nothing
+    s2 = scoring.score_trial(truth, v, restart_windows=[(20.0, 31.0)])
+    assert s2.detect_latencies == plain.detect_latencies
+    assert s2.rca_latencies == plain.rca_latencies
+    # half-open [t0, t1): a stamp exactly at the restore time is live
+    s3 = scoring.score_trial(truth, v, restart_windows=[(33.0, 35.0)])
+    assert s3.detect_latencies == [5.0]
+
+
+def test_restart_windows_do_not_affect_matching():
+    """Windows shift latency charges only — match cardinality, precision
+    and class accuracy are computed on the raw virtual stamps."""
+    truth = [scen.FaultEvent("io", 30.0, 10.0, 2.0)]
+    v = [scoring.VerdictEvent(t_onset=30.2, t_detect=34.0, t_ready=36.0,
+                              pred=CauseClass.CPU)]
+    a = scoring.score_trial(truth, v)
+    b = scoring.score_trial(truth, v, restart_windows=[(33.0, 50.0)])
+    assert (a.n_matched, a.n_correct) == (b.n_matched, b.n_correct)
