@@ -8,8 +8,9 @@ produces zero verdicts.  This gate makes every commit prove them again:
   1. the committed ``EVAL_scorecard.json`` is structurally sound — every
      scenario class present, parity bits exactly 1.0, soak AND the
      pure-corruption chaos classes verdict-free, chaos_overlap inside the
-     5 s / 8 s latency targets at single-fault recall, latency
-     percentiles finite where events exist;
+     5 s / 8 s latency targets at single-fault recall, the overlap
+     classes at multi-hypothesis recall (every concurrent fault gets its
+     own verdict), latency percentiles finite where events exist;
   2. a fresh tiny run reproduces them on THIS commit's code: the bench
      parity rows (``fleet/detect_parity``, ``eval/pred_parity``,
      ``eval/store_pred_parity``, and ``eval/sweep_parity`` — the slab
@@ -63,6 +64,13 @@ SOAK_LIKE_CLASSES = ("soak", "chaos_soak", "frozen_channel",
 CHAOS_DETECT_MAX_S = 5.0
 CHAOS_RCA_MAX_S = 8.0
 
+#: concurrent-fault floor for the overlap classes: with multi-hypothesis
+#: Layer 2 every co-occurring fault must earn its own verdict, so recall
+#: near 1.0 — not the one-verdict-per-incident ~0.5 of a single-pending
+#: detector.  Applied to the committed artifact AND the fresh smoke run.
+OVERLAP_RECALL_MIN = 0.9
+OVERLAP_CLASSES = ("overlap_pair", "overlap_full")
+
 #: clean-path sanitization must cost less than the sweep it guards
 SANITIZE_OVERHEAD_MAX = 0.9
 
@@ -110,6 +118,15 @@ def check_scorecard(doc: Dict[str, object], *, label: str) -> List[str]:
                        f"({blk.get('n_verdicts')}) — false-positive break")
         if blk.get("n_truth_events", -1) != 0:
             bad.append(f"{label}: {name} has truth events")
+    for name in OVERLAP_CLASSES:
+        blk = scen_doc.get(name)
+        if blk is None:
+            continue
+        r = blk.get("recall")
+        if not (isinstance(r, (int, float)) and r >= OVERLAP_RECALL_MIN):
+            bad.append(f"{label}: {name} recall = {r!r} (want >= "
+                       f"{OVERLAP_RECALL_MIN}) — a concurrent fault lost "
+                       "its verdict")
     overlap = scen_doc.get("chaos_overlap")
     if overlap is not None:
         single = scen_doc.get("single", {})

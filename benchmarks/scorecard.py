@@ -191,8 +191,7 @@ def _stream_trial(eng: CorrelationEngine, trial: scen.ScenarioTrial,
             ckpt_bytes = max(ckpt_bytes, ckpt_mod.save_checkpoint(
                 ckpt_path, {"stream": state.to_dict()}))
             save_ms = max(save_ms, (time.perf_counter() - w0) * 1e3)
-    flushed = state.flush(T)
-    if flushed is not None:
+    for flushed in state.flush(T):
         s = _event_sig(*flushed)
         if s in sigs:
             dups += 1
@@ -247,6 +246,12 @@ def _restart_block(trials: List[scen.ScenarioTrial], tol_s: float,
             diags = eng.diagnose_events_batch(
                 [(t.ts, data, list(t.channels), rca_t, ev)
                  for ev, rca_t in run["events"]])
+            # same reconciliation pass the non-streaming paths run: with
+            # concurrent hypotheses, raw per-event diagnoses are not yet
+            # the verdict stream
+            diags = eng.finalize_trial(
+                t.ts, data, list(t.channels), diags,
+                [rca_t for _, rca_t in run["events"]])
             windows = ([(float(crash.t), float(run["t_restore"]))]
                        if run["t_restore"] is not None else [])
             by_class.setdefault(t.scenario, []).append(scoring.score_trial(

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import sanitize as sanitize_mod
 from repro.core.engine import CorrelationEngine, EngineConfig
 from repro.core.spike import detect_sweep
 from repro.core.taxonomy import CauseClass
@@ -382,11 +383,25 @@ def _first_diagnoses_batched(engine: CorrelationEngine,
         if events:
             ev, t = events[0]       # diagnose_trial consumes diags[0]
             owner.append(len(items))
-            items.append((ts, data, list(channels), t, ev))
+            # same Layer-3 fill policy as process() — identity on clean
+            items.append((ts, sanitize_mod.forward_fill(data),
+                          list(channels), t, ev))
         else:
             owner.append(None)
     diags = engine.diagnose_events_batch(items)
-    return [None if o is None else diags[o] for o in owner]
+    return [None if o is None else
+            _reconciled_first(engine, items[o], diags[o]) for o in owner]
+
+
+def _reconciled_first(engine: CorrelationEngine, item: tuple, d):
+    """Apply the same per-trial reconciliation ``process()`` runs to a
+    batched path's first diagnosis.  The full-trial pass derives its
+    first verdict from the first event alone (later events only append),
+    so reconciling the singleton keeps the sequential and batched eval
+    paths on identical predictions.  Threshold/persistence do not enter
+    reconciliation, so relaxed-fallback events share the strict config."""
+    ts, data, channels, t, _ = item
+    return engine.finalize_trial(ts, data, channels, [d], [t])[0]
 
 
 def _first_diagnoses_store(engine: CorrelationEngine, store, prep=None):
@@ -420,8 +435,15 @@ def _first_diagnoses_store(engine: CorrelationEngine, store, prep=None):
             events.append((i, t, ev))
         else:
             owner.append(None)
+    if events:
+        # same Layer-3 fill policy as process_store() — identity on clean
+        slab = sanitize_mod.forward_fill(slab)
     diags = engine.diagnose_events_slab(ts, slab, channels, events)
-    return [None if o is None else diags[o] for o in owner]
+    return [None if o is None else
+            _reconciled_first(
+                engine, (ts, slab[events[o][0]], channels, events[o][1], None),
+                diags[o])
+            for o in owner]
 
 
 class OurDiagnoser(Diagnoser):

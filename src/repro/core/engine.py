@@ -18,9 +18,12 @@ the 2,500-sample baseline at every tick; ``fast=False`` keeps the original
 scalar per-tick path as the parity oracle.  At suite scale the per-trial
 sweep itself batches: ``detect_events_slab`` / ``detect_events_store`` /
 ``detect_events_rows`` run Layer 2 for ALL rows of a (trials, C, T) slab
-in one batched sweep (kernels/sweep) and replay the cooldown/pending
+in one batched sweep (kernels/sweep) and replay the concurrent-hypothesis
 state machine over the precomputed decisions — byte-exact against the
-per-row path, which remains the oracle.
+per-row path, which remains the oracle.  Layer 2 carries up to
+``max_hypotheses`` incident hypotheses at once (each with its own
+maturation deadline and cooldown); ``core.reconcile`` post-processes the
+matured stream into one verdict per distinct cause.
 """
 from __future__ import annotations
 
@@ -39,6 +42,13 @@ from repro.telemetry.schema import METRIC_REGISTRY, ORIENTATION
 
 #: below this many samples a pre-onset slice is too short to be a baseline
 MIN_BASELINE_N = 32
+
+#: the engine's duplicate-suppression window, in seconds.  THE definition —
+#: :class:`EngineConfig` defaults to it, the fleet monitor's session dedup
+#: inherits it through ``cfg.cooldown_s``, and the scorer's matching
+#: tolerance is derived from it (``sim.scoring.TOL_S``), so the three layers
+#: cannot silently drift apart.
+COOLDOWN_S = 15.0
 
 #: python-level evidence-gather operations (numpy slice/fancy-index calls on
 #: trial data) — the observable the columnar trial store exists to shrink:
@@ -63,8 +73,16 @@ class EngineConfig:
     eval_every: int = 0          # detection cadence in samples; 0 = window_n
                                  # (boundary evaluation — gives the paper's
                                  # ~5 s detection latency with a 5 s window)
-    cooldown_s: float = 15.0     # suppress duplicate events
+    cooldown_s: float = COOLDOWN_S   # suppress duplicate events
     latency_metric: str = "coll_allreduce_ms"
+    max_hypotheses: int = 3      # concurrent Layer-2 incident hypotheses
+    step_sigma: float = 2.0      # a fired tick during an active incident
+                                 # opens a new hypothesis only when the
+                                 # window's hot level steps this many of the
+                                 # newest hypothesis's sigmas above its anchor
+    swap_margin: float = 0.05    # reconciliation: an uncorroborated primary
+                                 # yields to a corroborated runner within
+                                 # this confidence margin
 
     @property
     def window_n(self) -> int:
@@ -76,55 +94,82 @@ class EngineConfig:
 
 
 @dataclasses.dataclass
+class Hypothesis:
+    """One concurrent Layer-2 incident hypothesis.
+
+    ``rca_at`` is an absolute sample index on the trial grid (the tick at
+    which the hypothesis matures into a diagnosable event); ``mu``/``sd``
+    anchor the hot-level statistics of the window that opened it, against
+    which a later fired tick's step is measured.  A hypothesis stays in
+    the set after maturing until its cooldown expires, so it keeps
+    suppressing re-detections of the same regime.
+    """
+
+    event: SpikeEvent
+    rca_at: int
+    matured: bool = False
+    mu: float = 0.0          # hot-level anchor: mean of the opening
+    sd: float = 0.0          # window's post-onset samples, and its sigma
+
+    def to_dict(self) -> Dict[str, object]:
+        e = self.event
+        return {"event": {"t_onset": e.t_onset, "t_detect": e.t_detect,
+                          "score": e.score, "metric": e.metric},
+                "rca_at": int(self.rca_at), "matured": bool(self.matured),
+                "mu": float(self.mu), "sd": float(self.sd)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Hypothesis":
+        e = d["event"]
+        return cls(event=SpikeEvent(
+                       t_onset=float(e["t_onset"]),
+                       t_detect=float(e["t_detect"]),
+                       score=float(e["score"]), metric=str(e["metric"])),
+                   rca_at=int(d["rca_at"]), matured=bool(d["matured"]),
+                   mu=float(d["mu"]), sd=float(d["sd"]))
+
+
+@dataclasses.dataclass
 class StreamState:
     """The mutable machine of :meth:`CorrelationEngine.detect_events`,
     externalized so a monitor can checkpoint it and resume after a crash.
 
-    ``pending_rca_at`` is an absolute sample index on the trial grid, so
-    resuming is only valid over growing prefixes of the *same* grid (which
-    is exactly what a ring replay presents).  ``t_seen`` marks the newest
-    cadence tick already evaluated: on resume, older ticks are skipped, so
-    an event emitted before the crash can never be emitted again — the
-    duplicate-verdict suppression is the restored cooldown state itself.
+    The machine is a bounded set of concurrent :class:`Hypothesis` records
+    (``cfg.max_hypotheses`` at most), each with its own maturation deadline
+    and cooldown anchor.  ``rca_at`` indices are absolute sample positions
+    on the trial grid, so resuming is only valid over growing prefixes of
+    the *same* grid (which is exactly what a ring replay presents).
+    ``t_seen`` marks the newest cadence tick already evaluated: on resume,
+    older ticks are skipped, so an event emitted before the crash can
+    never be emitted again — the duplicate-verdict suppression is the
+    restored hypothesis set itself.
     """
 
-    last_event_t: float = -np.inf    # cooldown anchor (absolute seconds)
-    pending: Optional[SpikeEvent] = None
-    pending_rca_at: Optional[int] = None
+    hypotheses: List[Hypothesis] = dataclasses.field(default_factory=list)
     t_seen: float = -np.inf          # newest tick time already evaluated
 
-    def flush(self, T: int) -> Optional[Tuple[SpikeEvent, int]]:
-        """End-of-stream flush: the pending event with whatever data
-        exists, exactly like the stateless path's trial-end flush."""
-        if self.pending is None:
-            return None
-        ev = (self.pending, int(T) - 1)
-        self.pending, self.pending_rca_at = None, None
-        return ev
+    def flush(self, T: int) -> List[Tuple[SpikeEvent, int]]:
+        """End-of-stream flush: every not-yet-matured hypothesis with
+        whatever data exists, in maturation (``rca_at``) order — exactly
+        the stateless path's trial-end flush."""
+        due = sorted((h for h in self.hypotheses if not h.matured),
+                     key=lambda h: h.rca_at)
+        out = [(h.event, int(T) - 1) for h in due]
+        for h in due:
+            h.matured = True
+        return out
 
     def to_dict(self) -> Dict[str, object]:
-        d: Dict[str, object] = {
-            "last_event_t": float(self.last_event_t),
-            "t_seen": float(self.t_seen),
-            "pending_rca_at": (None if self.pending_rca_at is None
-                               else int(self.pending_rca_at)),
-            "pending": None,
-        }
-        if self.pending is not None:
-            p = self.pending
-            d["pending"] = {"t_onset": p.t_onset, "t_detect": p.t_detect,
-                            "score": p.score, "metric": p.metric}
-        return d
+        return {"t_seen": float(self.t_seen),
+                "hypotheses": [h.to_dict() for h in self.hypotheses]}
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "StreamState":
-        p = d.get("pending")
-        pending = None if p is None else SpikeEvent(
-            t_onset=float(p["t_onset"]), t_detect=float(p["t_detect"]),
-            score=float(p["score"]), metric=str(p["metric"]))
-        rca = d.get("pending_rca_at")
-        return cls(last_event_t=float(d["last_event_t"]), pending=pending,
-                   pending_rca_at=None if rca is None else int(rca),
+        # no fallback for the retired single-pending shape: a payload
+        # without the hypothesis set is from a different machine and must
+        # fail loudly (the caller cold-starts), never half-restore
+        hyps = d["hypotheses"]
+        return cls(hypotheses=[Hypothesis.from_dict(h) for h in hyps],
                    t_seen=float(d["t_seen"]))
 
 
@@ -240,9 +285,22 @@ class CorrelationEngine:
         exact sample index Layer 3 runs at (detection + accumulation,
         clamped to trial end).
 
+        The machine carries up to ``cfg.max_hypotheses`` concurrent
+        hypotheses.  The first detection of a quiet stream always opens
+        one; while any hypothesis is active (pending maturation or inside
+        its cooldown), a further fired tick opens a *new* hypothesis only
+        when the window's hot level steps at least ``cfg.step_sigma`` of
+        the newest hypothesis's sigmas above its anchor — a genuinely new
+        regime on top of the incident, not the same elevated plateau
+        re-firing.  Each hypothesis matures at its own accumulation index
+        and keeps suppressing re-detections until its own cooldown
+        expires.  With ``max_hypotheses=1`` the machine degenerates to the
+        original single-pending/global-cooldown behaviour, event for
+        event.
+
         With ``state`` the machine resumes from (and persists back to) a
         :class:`StreamState`: ticks at or before ``state.t_seen`` are
-        skipped and a pending event survives the call instead of being
+        skipped and unmatured hypotheses survive the call instead of being
         flushed at the array end — running the detector over growing
         prefixes of one grid yields byte-for-byte the one-shot event
         stream (the warm-restart replay contract; the caller ends the
@@ -270,14 +328,10 @@ class CorrelationEngine:
         wn, bn = cfg.window_n, cfg.baseline_n
         rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
         out: List[Tuple[SpikeEvent, int]] = []
-        last_event_t = -np.inf
-        pending: Optional[SpikeEvent] = None
-        pending_rca_at: Optional[int] = None
+        hyps: List[Hypothesis] = []
         seen_t = -np.inf
         if state is not None:
-            last_event_t = state.last_event_t
-            pending = state.pending
-            pending_rca_at = state.pending_rca_at
+            hyps = state.hypotheses
             seen_t = state.t_seen
             fast = False     # slice-exact decisions, prefix-independent
 
@@ -301,16 +355,19 @@ class CorrelationEngine:
             # only re-emit, so they are skipped wholesale
             if now <= seen_t:
                 continue
-            # -- an event pending accumulation matures at the exact
-            # accumulation index, not the next boundary.
-            if pending is not None and pending_rca_at is not None and t >= pending_rca_at:
-                out.append((pending, min(pending_rca_at, T - 1)))
-                pending, pending_rca_at = None, None
-            if pending is not None:
-                continue
+            # -- hypotheses pending accumulation mature at the exact
+            # accumulation index, not the next boundary, in rca_at order
+            for h in sorted((h for h in hyps
+                             if not h.matured and t >= h.rca_at),
+                            key=lambda h: h.rca_at):
+                out.append((h.event, min(h.rca_at, T - 1)))
+                h.matured = True
+            # -- a matured hypothesis retires once its own cooldown lapses;
+            # until then it keeps suppressing re-detections of its regime
+            hyps = [h for h in hyps
+                    if not (h.matured
+                            and now - h.event.t_detect >= cfg.cooldown_s)]
             # -- Layer 2 detection on the latency channel
-            if now - last_event_t < cfg.cooldown_s:
-                continue
             if fast:
                 is_spike = bool(fire_v[i])
                 score = float(score_v[i])
@@ -325,67 +382,96 @@ class CorrelationEngine:
                     is_spike, score, onset_idx = spike_mod.detect_masked(
                         obs, base, Lv[t - wn:t], Lv[t - wn - bn:t - wn],
                         cfg.threshold, cfg.persistence)
-            if is_spike:
-                onset_t = float(ts[t - wn + int(onset_idx)])
-                ev = SpikeEvent(t_onset=onset_t, t_detect=now, score=score,
-                                metric=cfg.latency_metric)
-                pending = ev
-                pending_rca_at = t + rca_n
-                last_event_t = now
+            if not is_spike:
+                continue
+            # hot-level anchor from the raw f64 latency row — the same
+            # slice in every execution path, so the step-gate decision is
+            # bitwise identical no matter which sweep produced the tick
+            hot = L[t - wn + int(onset_idx):t]
+            onset_t = float(ts[t - wn + int(onset_idx)])
+            rec = Hypothesis(
+                event=SpikeEvent(t_onset=onset_t, t_detect=now, score=score,
+                                 metric=cfg.latency_metric),
+                rca_at=t + rca_n, matured=False,
+                mu=float(hot.mean()), sd=float(hot.std()))
+            if not hyps:
+                hyps.append(rec)
+            elif len(hyps) < cfg.max_hypotheses:
+                ref = hyps[-1]
+                z = (rec.mu - ref.mu) / max(ref.sd, 1e-9)
+                if z >= cfg.step_sigma:
+                    hyps.append(rec)
         if state is not None:
             # persist the machine instead of flushing: the stream may
             # continue (next round, or a post-restart replay)
-            state.last_event_t = last_event_t
-            state.pending = pending
-            state.pending_rca_at = pending_rca_at
+            state.hypotheses = hyps
             if ticks.size:
                 state.t_seen = max(seen_t, float(ts[int(ticks[-1])]))
             return out
-        # trial end: flush a pending event using whatever data exists
-        if pending is not None:
-            out.append((pending, T - 1))
+        # trial end: flush unmatured hypotheses using whatever data exists
+        for h in sorted((h for h in hyps if not h.matured),
+                        key=lambda h: h.rca_at):
+            out.append((h.event, T - 1))
         return out
 
     # ------------------------------------------------- suite-scale Layer 2
     @staticmethod
     def _resolve_row(ts: np.ndarray, ticks: np.ndarray, fire_row: np.ndarray,
-                     nt_r: int, T_r: int, rca_n: int, cooldown_s: float,
+                     onset_row: np.ndarray, L_row: np.ndarray,
+                     nt_r: int, T_r: int, wn: int, rca_n: int,
+                     cooldown_s: float, max_hyp: int, step_sigma: float,
                      ) -> List[Tuple[int, int]]:
-        """Replay :meth:`detect_events`' cooldown/pending state machine over
-        one row's precomputed tick decisions — jumping fired tick to fired
-        tick instead of walking every tick.
+        """Replay :meth:`detect_events`' hypothesis-set state machine over
+        one row's precomputed tick decisions — visiting fired ticks only
+        instead of walking every tick.
 
-        The stateful machinery consults only the per-tick decisions: a
-        pending event matures at the first tick past its accumulation
-        index (detection is allowed again at that same tick), fired ticks
-        inside the cooldown or a pending span are skipped, and a pending
-        event at row end flushes with whatever data exists.  Returns
-        ``(tick_index, rca_sample_index)`` pairs in maturation order —
-        exactly the per-row loop's output order.
+        The set's evolution between fired ticks is fully determined: a
+        hypothesis matures at the first tick reaching its accumulation
+        index (an emission the caller can stamp without visiting the
+        tick), and whether it has retired by a later fired tick is a pure
+        predicate of that tick's clock — so recomputing the active set at
+        each fired tick reproduces the per-tick walk exactly.  The
+        step-sigma gate re-derives each fired window's hot statistics from
+        the row's own f64 latency samples (``L_row``), the identical slice
+        the scalar oracle reads, so gate decisions are bitwise the same.
+
+        Returns ``(tick_index, rca_sample_index)`` pairs.  Hypotheses
+        mature in ``rca_at`` order and ``rca_at`` grows with the opening
+        tick, so detection order *is* maturation order — exactly the
+        per-row loop's output order.  A hypothesis whose accumulation
+        index lies past the last tick flushes at row end with whatever
+        data exists.
         """
         hits = np.flatnonzero(fire_row[:nt_r])
         out: List[Tuple[int, int]] = []
-        last = -np.inf
-        k = 0
-        while k < hits.size:
+        # open hypotheses: (tick_index, now, mature_tick_index, mu, sd);
+        # mature_tick_index = first tick at/after rca_at (nt_r = never)
+        hyps: List[Tuple[int, float, int, float, float]] = []
+        for k in range(hits.size):
             i = int(hits[k])
             t = int(ticks[i])
             now = float(ts[t])
-            if now - last < cooldown_s:
-                k += 1
-                continue
+            # active = not (matured by this tick AND cooldown lapsed);
+            # maturation at tick i itself precedes detection at i
+            hyps = [h for h in hyps
+                    if not (h[2] <= i and now - h[1] >= cooldown_s)]
+            hot = L_row[t - wn + int(onset_row[i]):t]
+            mu, sd = float(hot.mean()), float(hot.std())
+            if hyps:
+                if len(hyps) >= max_hyp:
+                    continue
+                ref = hyps[-1]
+                z = (mu - ref[3]) / max(ref[4], 1e-9)
+                if not z >= step_sigma:     # NaN-safe: NaN never opens
+                    continue
             rca_at = t + rca_n
-            # maturation happens at the top of a LATER tick's iteration,
-            # so the first eligible tick is strictly after i even when
-            # rca_n is 0 (otherwise a zero-accumulation config would
-            # re-emit the same tick forever, where the oracle advances)
+            # maturation happens at the top of a LATER tick's iteration
+            # (the hypothesis is appended after its own tick's maturation
+            # phase), so the first eligible tick is strictly after i even
+            # when rca_n is 0
             j = max(int(np.searchsorted(ticks[:nt_r], rca_at)), i + 1)
-            if j >= nt_r:           # pending past the last tick: end flush
-                out.append((i, T_r - 1))
-                break
-            out.append((i, min(rca_at, T_r - 1)))
-            last = now
-            k = int(np.searchsorted(hits, j))
+            out.append((i, min(rca_at, T_r - 1) if j < nt_r else T_r - 1))
+            hyps.append((i, now, j, mu, sd))
         return out
 
     def _sweep_events(self, ts: np.ndarray, lat64: np.ndarray,
@@ -484,8 +570,10 @@ class CorrelationEngine:
             # valid length (the sweep's <= masking is the detect_sweep
             # range convention, wider than the event grid)
             nt_r = int(np.searchsorted(ticks, T_r, side="left"))
-            resolved = self._resolve_row(ts, ticks, fire[r], nt_r, T_r,
-                                         rca_n, cfg.cooldown_s)
+            resolved = self._resolve_row(ts, ticks, fire[r], onset[r],
+                                         row64(r), nt_r, T_r, wn, rca_n,
+                                         cfg.cooldown_s, cfg.max_hypotheses,
+                                         cfg.step_sigma)
             if not resolved:
                 out.append([])
                 continue
@@ -588,6 +676,21 @@ class CorrelationEngine:
                 out[k] = e
         return out
 
+    def finalize_trial(self, ts: np.ndarray, data: np.ndarray,
+                       channels: Sequence[str], diags: List[Diagnosis],
+                       rca_idx: Sequence[int]) -> List[Diagnosis]:
+        """Layer-3 reconciliation post-pass over one trial's time-ordered
+        diagnoses (see ``core.reconcile``): corroboration-gated primary
+        swap, secondary-hypothesis attribution, incident-close co-verdict.
+        Identity when ``max_hypotheses <= 1`` — the single-pending
+        machine's verdicts pass through untouched.  ``data`` must be the
+        same (forward-filled) matrix Layer 3 diagnosed against."""
+        if self.cfg.max_hypotheses <= 1 or not diags:
+            return diags
+        from repro.core import reconcile as reconcile_mod
+        return reconcile_mod.reconcile_trial(self, ts, data, channels,
+                                             diags, rca_idx)
+
     def process(self, ts: np.ndarray, data: np.ndarray,
                 channels: Sequence[str], fast: bool = True) -> List[Diagnosis]:
         """Run the engine over a full trial; returns diagnoses in time order.
@@ -612,8 +715,10 @@ class CorrelationEngine:
             # with validity masks; only the explanation windows are
             # smoothed.
             data = sanitize_mod.forward_fill(np.asarray(data))
-        return [self._diagnose(ts, data, channels, li, t, ev)
-                for ev, t in events]
+        diags = [self._diagnose(ts, data, channels, li, t, ev)
+                 for ev, t in events]
+        return self.finalize_trial(ts, data, channels, diags,
+                                   [t for _, t in events])
 
     def process_batch(self, trials: Sequence[tuple], fast: bool = True,
                       use_kernel: bool = False) -> List[List[Diagnosis]]:
@@ -638,11 +743,13 @@ class CorrelationEngine:
         else:
             per_trial = [self.detect_events(ts, data, channels, fast=False)
                          for (ts, data, channels) in trials]
+        filled: Dict[int, np.ndarray] = {}
         for k, (ts, data, channels) in enumerate(trials):
             if per_trial[k]:
                 # same Layer-3 fill policy as process() — identity on
                 # clean trials, so per-event/batched parity holds
                 data = sanitize_mod.forward_fill(np.asarray(data))
+                filled[k] = data
             for ev, t in per_trial[k]:
                 owner.append(k)
                 items.append((ts, data, list(channels), t, ev))
@@ -650,6 +757,11 @@ class CorrelationEngine:
         out: List[List[Diagnosis]] = [[] for _ in range(len(trials))]
         for k, d in zip(owner, diags):
             out[k].append(d)
+        for k, (ts, _, channels) in enumerate(trials):
+            if out[k]:
+                out[k] = self.finalize_trial(
+                    ts, filled[k], channels, out[k],
+                    [t for _, t in per_trial[k]])
         return out
 
     def process_store(self, ts: np.ndarray, slab: np.ndarray,
@@ -665,16 +777,14 @@ class CorrelationEngine:
         is slab indexing (:meth:`diagnose_events_slab`).  Returns one
         time-ordered diagnosis list per slab row.
         """
-        events, owner = [], []
+        events = []
         if fast:
             for i, ev, t in self.detect_events_slab(ts, slab, channels):
-                owner.append(i)
                 events.append((i, t, ev))
         else:
             for i in range(slab.shape[0]):
                 for ev, t in self.detect_events(ts, slab[i], channels,
                                                 fast=False):
-                    owner.append(i)
                     events.append((i, t, ev))
         if events:
             # Layer-3 fill over the whole store — per-row independent, so
@@ -684,8 +794,14 @@ class CorrelationEngine:
         diags = self.diagnose_events_slab(ts, slab, channels, events,
                                           use_kernel=use_kernel)
         out: List[List[Diagnosis]] = [[] for _ in range(slab.shape[0])]
-        for i, d in zip(owner, diags):
+        rcas: List[List[int]] = [[] for _ in range(slab.shape[0])]
+        for (i, t, _), d in zip(events, diags):
             out[i].append(d)
+            rcas[i].append(int(t))
+        for i in range(slab.shape[0]):
+            if out[i]:
+                out[i] = self.finalize_trial(ts, slab[i], channels,
+                                             out[i], rcas[i])
         return out
 
     # ------------------------------------------------------------- Layer 3+4

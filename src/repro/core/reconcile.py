@@ -1,0 +1,214 @@
+"""Layer-3 verdict reconciliation for concurrent incident hypotheses.
+
+With ``max_hypotheses > 1`` the Layer-2 machine deliberately over-triggers:
+a step above an active incident's level opens a second hypothesis whether it
+is a genuinely new fault or the same fault still ramping.  This module is
+the deterministic post-pass that turns the matured hypothesis stream of ONE
+trial into the final verdict stream:
+
+* **corroboration** — a cause is corroborated when one of its symptom
+  channels (``telemetry.schema.SYMPTOM_FLOORS``) shows a two-sided raw-z
+  deviation at or above its floor on the event's evidence geometry (the
+  exact ``_diagnose`` window/baseline slices).
+* **primary swap** — if the first event's top-ranked cause is not
+  corroborated but a corroborated runner sits within ``cfg.swap_margin``
+  of its confidence, the runner becomes the primary verdict.
+* **secondary hypotheses** — a later hypothesis inside the incident emits
+  its best not-yet-assigned corroborated cause, else is suppressed as a
+  continuation phantom.
+* **incident-close co-verdict** — when an incident closes with fewer than
+  two verdicts, the evidence is re-scanned one cooldown past the last
+  maturation: a not-yet-assigned cause that is corroborated, whose symptom
+  crossed inside the incident's span, and whose confidence sits within its
+  per-cause gap of the top cause earns exactly one co-verdict (the
+  fully-overlapping-faults case, where Layer 2 sees a single step).
+
+Everything here is pure post-processing over already-detected events; the
+Layer-2 sweep, its parity contracts and the (fire, score, onset) slab are
+untouched.  With ``max_hypotheses == 1`` the engine never calls this module
+and verdicts are byte-identical to the single-pending machine's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent
+from repro.telemetry.schema import (GROUP_TO_CAUSE, METRIC_REGISTRY,
+                                    SYMPTOM_FLOORS)
+
+#: confidence gap (top cause minus candidate) within which an unassigned
+#: corroborated cause earns the incident-close co-verdict.  Per cause: DMA
+#: evidence is two-sided and diffuse so I/O runs a wide gap; CPU confusers
+#: rank close to genuine contention so CPU runs the tightest.
+CO_GAP: Dict[CauseClass, float] = {
+    CauseClass.IO: 0.30,
+    CauseClass.NIC: 0.15,
+    CauseClass.GPU: 0.12,
+    CauseClass.CPU: 0.08,
+}
+
+#: a co-verdict's symptom must have crossed its floor no earlier than this
+#: long before the incident's first onset ...
+CROSS_EARLY_S = 2.5
+#: ... and no later than this long after the incident's last detection —
+#: later crossings belong to a separate fault the machine will catch.
+CROSS_LATE_S = 12.0
+
+#: symptom crossing time is resolved to 1 s box means over the window
+BOX_S = 1.0
+
+
+def symptom_table() -> Dict[CauseClass, Tuple[Tuple[str, float], ...]]:
+    """``SYMPTOM_FLOORS`` grouped by the cause each channel is evidence
+    for, in registry declaration order."""
+    out: Dict[CauseClass, List[Tuple[str, float]]] = {}
+    for name, floor in SYMPTOM_FLOORS.items():
+        cause = GROUP_TO_CAUSE[METRIC_REGISTRY[name].group]
+        out.setdefault(cause, []).append((name, floor))
+    return {c: tuple(v) for c, v in out.items()}
+
+
+def _symptom_info(cfg, data: np.ndarray, channels: Sequence[str],
+                  t_onset: float, t: int, ts: np.ndarray,
+                  ) -> Dict[CauseClass, Tuple[bool, Optional[float]]]:
+    """Per cause: (corroborated, first floor-crossing time or None), on
+    the exact evidence geometry ``_diagnose`` uses for an event with this
+    onset diagnosed at sample ``t``."""
+    from repro.core.engine import pick_baseline_slice
+
+    wn, bn = cfg.window_n, cfg.baseline_n
+    rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
+    pre_n = int(cfg.pre_onset_s * cfg.rate_hz)
+    box_n = int(BOX_S * cfg.rate_hz)
+    onset_idx = int(np.searchsorted(ts, t_onset))
+    lo = max(0, min(t - wn - rca_n, onset_idx - pre_n))
+    blo = max(0, lo - bn)
+    nb = lo - blo
+    b_sl = pick_baseline_slice(nb, max(0, onset_idx - lo), t - blo)
+    idx = {c: i for i, c in enumerate(channels)}
+    out: Dict[CauseClass, Tuple[bool, Optional[float]]] = {}
+    for cause, chans in symptom_table().items():
+        ok, t_cross = False, None
+        for name, floor in chans:
+            i = idx.get(name)
+            if i is None:
+                continue
+            seg = np.asarray(data[i, blo:t], np.float64)
+            B = seg[b_sl]
+            W = seg[nb:]
+            if W.size == 0 or B.size == 0:
+                continue
+            mb = float(B.mean())
+            sd = max(float(B.std()), 1e-3 * abs(mb), 1e-9)
+            if abs(float(W.mean()) - mb) / sd < floor:
+                continue
+            ok = True
+            nbox = W.size // box_n
+            if nbox > 0:
+                bm = W[:nbox * box_n].reshape(nbox, box_n).mean(axis=1)
+                hits = np.flatnonzero(np.abs(bm - mb) / sd >= floor)
+                if hits.size:
+                    tc = (lo + int(hits[0]) * box_n) / cfg.rate_hz
+                    if t_cross is None or tc < t_cross:
+                        t_cross = tc
+        out[cause] = (ok, t_cross)
+    return out
+
+
+def _lead_with(d: Diagnosis, cause: CauseClass) -> Diagnosis:
+    """The same diagnosis with ``cause``'s ranked entry moved to the front
+    (``top_cause`` and downstream scoring follow ``ranked[0]``)."""
+    if not d.ranked or d.ranked[0].cause == cause:
+        return d
+    lead = [rc for rc in d.ranked if rc.cause == cause]
+    rest = [rc for rc in d.ranked if rc.cause != cause]
+    return dataclasses.replace(d, ranked=lead + rest)
+
+
+def reconcile_trial(engine, ts: np.ndarray, data: np.ndarray,
+                    channels: Sequence[str], diags: Sequence[Diagnosis],
+                    rca_idx: Sequence[int]) -> List[Diagnosis]:
+    """Reconcile one trial's time-ordered diagnoses (with their RCA sample
+    indices) into the final verdict stream."""
+    cfg = engine.cfg
+    if not diags:
+        return []
+    channels = list(channels)
+    li = channels.index(cfg.latency_metric)
+    rca_n = int(cfg.rca_extra_s * cfg.rate_hz)
+    cool_n = int(cfg.cooldown_s * cfg.rate_hz)
+    T = ts.shape[0]
+    out: List[Diagnosis] = []
+    incident: Optional[dict] = None
+
+    def close_incident() -> None:
+        nonlocal incident
+        if incident is None:
+            return
+        inc, incident = incident, None
+        if inc["n_emitted"] >= 2:
+            return
+        # re-scan one cooldown past the incident's last maturation: a
+        # fully-overlapped co-fault's symptom has its full span by then
+        t = min(T - 1, inc["last_idx"] + cool_n)
+        e1: SpikeEvent = inc["e1"]
+        d = engine._diagnose(ts, data, channels, li, t, e1)
+        sym = _symptom_info(cfg, data, channels, e1.t_onset, t, ts)
+        if not d.ranked:
+            return
+        top = d.ranked[0].confidence
+        for rc in d.ranked:
+            c = rc.cause
+            ok, t_cross = sym.get(c, (False, None))
+            if c in inc["assigned"] or not ok:
+                continue
+            if t_cross is None or not (e1.t_onset - CROSS_EARLY_S <= t_cross
+                                       <= inc["t_last"] + CROSS_LATE_S):
+                continue
+            if top - rc.confidence > CO_GAP.get(c, 0.0):
+                continue
+            ev = dataclasses.replace(e1, t_onset=max(e1.t_onset, t_cross))
+            out.append(dataclasses.replace(_lead_with(d, c), event=ev))
+            break
+
+    for d, t in zip(diags, rca_idx):
+        t = int(t)
+        ev = d.event
+        if incident is not None and \
+                ev.t_detect - incident["t_last"] >= cfg.cooldown_s:
+            close_incident()
+        if not d.ranked:
+            out.append(d)
+            continue
+        conf = {rc.cause: rc.confidence for rc in d.ranked}
+        order = [rc.cause for rc in d.ranked]
+        sym = _symptom_info(cfg, data, channels, ev.t_onset, t, ts)
+        if incident is None:
+            primary = order[0]
+            if not sym.get(primary, (False, None))[0]:
+                for c in order[1:]:
+                    if sym.get(c, (False, None))[0] and \
+                            conf[c] >= conf[primary] - cfg.swap_margin:
+                        primary = c
+                        break
+            out.append(_lead_with(d, primary))
+            incident = dict(t_last=ev.t_detect, last_idx=t - rca_n,
+                            assigned={primary}, n_emitted=1, e1=ev)
+        else:
+            cand = None
+            for c in order:
+                if c not in incident["assigned"] and \
+                        sym.get(c, (False, None))[0]:
+                    cand = c
+                    break
+            if cand is not None:
+                out.append(_lead_with(d, cand))
+                incident["assigned"].add(cand)
+                incident["n_emitted"] += 1
+            incident["t_last"] = ev.t_detect
+            incident["last_idx"] = t - rca_n
+    close_incident()
+    return out

@@ -18,8 +18,9 @@ verdict or a miss.  This module makes that state durable:
 * **MonitorSession** — the warm-restartable round loop above
   :class:`~repro.monitor.fleet.FleetMonitor`.  It owns the cross-round
   state ``diagnose_fleet`` cannot: the verdict cooldown map that turns a
-  per-round diagnosis stream into *events* (one verdict per incident, the
-  engine's cooldown discipline at fleet level), and per-host streaming
+  per-round diagnosis stream into *events* (one verdict per ``(host,
+  cause)`` incident, the engine's cooldown discipline at fleet level —
+  concurrent causes on one host dedup independently), and per-host streaming
   baseline moments (Welford chunk merges over each round's newly-seen
   ticks).  ``save``/``restore`` snapshot it together with the monitor's
   strike/quarantine/degraded state.
@@ -50,8 +51,11 @@ from repro.monitor.fleet import FleetDiagnosis, FleetMonitor
 MAGIC = b"RPROCKPT"
 
 #: envelope version; a reader only accepts exactly its own version
-#: (state schemas are not forward/backward compatible across PRs)
-VERSION = 1
+#: (state schemas are not forward/backward compatible across PRs).
+#: v2: the verdict cooldown map is keyed per (host, cause) — a v1
+#: checkpoint's per-host map cannot express concurrent-cause dedup, so
+#: v1 loads are rejected loudly into a cold start.
+VERSION = 2
 
 _HEADER = struct.Struct("<8sIQI")   # magic, version, payload len, crc32
 
@@ -175,7 +179,11 @@ class MonitorSession:
         self.cooldown_s = (float(cooldown_s) if cooldown_s is not None
                            else float(monitor.cfg.cooldown_s))
         self.stats = SessionStats()
-        self._cooldown_until: Dict[int, float] = {}
+        # verdict dedup per (host, cause): with concurrent hypotheses a
+        # host may carry several true causes at once, and a second cause
+        # surfacing mid-incident must not be swallowed by the first
+        # cause's cooldown
+        self._cooldown_until: Dict[Tuple[int, str], float] = {}
         self._t_seen = -np.inf        # newest sample time already processed
         # per-host streaming baseline moments (Welford chunk merge over
         # newly-seen ticks): host -> (n, mean, M2), each (C,) float64
@@ -239,10 +247,13 @@ class MonitorSession:
         """One diagnosis round over a trailing (hosts, C, T) window.
 
         Returns the raw per-round :class:`FleetDiagnosis` plus the
-        *deduplicated* verdicts: a host's diagnosis becomes a verdict only
-        when its detection time has cleared the host's cooldown — the same
-        incident re-reported by later rounds (or re-derived by a
-        post-restore replay) is suppressed and counted.
+        *deduplicated* verdicts: one per ``(host, cause)`` in the round's
+        verdict-cause lists (primary first, then any corroborated
+        co-causes when the engine runs concurrent hypotheses), emitted
+        only when its detection time has cleared that pair's cooldown —
+        the same incident re-reported by later rounds (or re-derived by a
+        post-restore replay) is suppressed and counted, while a *new*
+        cause surfacing on an already-diagnosed host is not.
         """
         fd = self.monitor.diagnose_fleet(ts, slab, self.channels,
                                          valid=valid,
@@ -256,15 +267,17 @@ class MonitorSession:
         for h in sorted(fd.diagnoses):
             d = fd.diagnoses[h]
             td = float(d.event.t_detect)
-            if td < self._cooldown_until.get(h, -np.inf):
-                self.stats.duplicates_suppressed += 1
-                continue
-            self._cooldown_until[h] = td + self.cooldown_s
-            verdicts.append(FleetVerdict(
-                host=int(h), pred=d.top_cause.value,
-                t_onset=float(d.event.t_onset), t_detect=td,
-                t_ready=float(d.t_ready if d.t_ready is not None
-                              else d.t_rca)))
+            for cause in fd.causes.get(h, [d.top_cause]):
+                key = (int(h), cause.value)
+                if td < self._cooldown_until.get(key, -np.inf):
+                    self.stats.duplicates_suppressed += 1
+                    continue
+                self._cooldown_until[key] = td + self.cooldown_s
+                verdicts.append(FleetVerdict(
+                    host=int(h), pred=cause.value,
+                    t_onset=float(d.event.t_onset), t_detect=td,
+                    t_ready=float(d.t_ready if d.t_ready is not None
+                                  else d.t_rca)))
         if ts.shape[0]:
             self._t_seen = max(self._t_seen, float(ts[-1]))
         return fd, verdicts
@@ -273,8 +286,9 @@ class MonitorSession:
     def state_dict(self) -> Dict[str, object]:
         return {
             "monitor": self.monitor.state_dict(),
-            "cooldown_until": {str(k): float(v)
-                               for k, v in self._cooldown_until.items()},
+            "cooldown_until": {f"{h}|{cause}": float(v)
+                               for (h, cause), v
+                               in self._cooldown_until.items()},
             "t_seen": float(self._t_seen),
             "baseline": {
                 str(h): {"n": self._base_n[h].tolist(),
@@ -302,8 +316,13 @@ class MonitorSession:
         try:
             payload = load_checkpoint(path)
             mon_state = payload["monitor"]
-            cooldown = {int(k): float(v)
-                        for k, v in payload["cooldown_until"].items()}
+            cooldown: Dict[Tuple[int, str], float] = {}
+            for k, v in payload["cooldown_until"].items():
+                h, _, cause = k.partition("|")
+                if not cause:
+                    raise CheckpointError(
+                        f"cooldown key {k!r} is not host|cause")
+                cooldown[(int(h), cause)] = float(v)
             t_seen = float(payload["t_seen"])
             base_n: Dict[int, np.ndarray] = {}
             base_mean: Dict[int, np.ndarray] = {}

@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -47,6 +47,7 @@ from repro.core.engine import (
     MIN_BASELINE_N, EngineConfig, evidence_layout,
     orient_about_baseline, pick_baseline_slice,
 )
+from repro.core.reconcile import CO_GAP, symptom_table
 from repro.core.spike import detect_rows
 from repro.core.taxonomy import CauseClass, Diagnosis, SpikeEvent
 from repro.kernels.detect import ops as detect_ops
@@ -87,6 +88,13 @@ class FleetDiagnosis:
     #: host -> diagnosis for ALL flagged hosts (one fused dispatch)
     diagnoses: Dict[int, Diagnosis] = dataclasses.field(default_factory=dict)
     mitigations: Dict[int, Mitigation] = dataclasses.field(default_factory=dict)
+    #: host -> ordered verdict causes, primary first.  With
+    #: ``cfg.max_hypotheses > 1`` a diagnosed host may carry co-causes:
+    #: runner-up ranked causes whose symptom channel is corroborated on the
+    #: evidence window and whose confidence sits within the per-cause
+    #: ``reconcile.CO_GAP`` of the top cause (concurrent faults on ONE
+    #: host).  With a single hypothesis every list is just the primary.
+    causes: Dict[int, List[CauseClass]] = dataclasses.field(default_factory=dict)
     #: wall seconds per pipeline stage, disjoint (detect / gather / kernel /
     #: rank / assemble) — they sum to the diagnose_fleet wall total
     stage_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -412,6 +420,7 @@ class FleetMonitor:
         order = np.argsort(-scores[cand])
         flagged, onset_rel = cand[order], onset_rel[order]
         diagnoses: Dict[int, Diagnosis] = {}
+        causes: Dict[int, List[CauseClass]] = {}
         mitigations: Dict[int, Mitigation] = {}
         # strike lifecycle: a host that recovered (not flagged THIS round)
         # loses its strike history immediately, even while other hosts stay
@@ -435,11 +444,10 @@ class FleetMonitor:
                 deferred = [int(h) for h in flagged[~pri]]
                 self.deferred_rca += len(deferred)
             if rca_hosts.size:
-                diagnoses = self._diagnose_hosts(ts, host_data, channels,
-                                                 li, rca_hosts,
-                                                 (T - wn) + rca_onsets,
-                                                 scores, wn, bn, stage,
-                                                 valid=vfull)
+                diagnoses, causes = self._diagnose_hosts(
+                    ts, host_data, channels, li, rca_hosts,
+                    (T - wn) + rca_onsets, scores, wn, bn, stage,
+                    valid=vfull)
             deferred_set = set(deferred)
             for h in flagged:
                 h = int(h)
@@ -474,7 +482,7 @@ class FleetMonitor:
             mitigation=mitigations.get(straggler, Mitigation.NONE),
             per_host_scores=scores,
             flagged_hosts=[int(h) for h in flagged],
-            diagnoses=diagnoses, mitigations=mitigations,
+            diagnoses=diagnoses, mitigations=mitigations, causes=causes,
             stage_seconds=stage,
             quarantined=[int(h) for h in qhosts],
             degraded=degraded,
@@ -487,8 +495,12 @@ class FleetMonitor:
                         scores: np.ndarray, wn: int, bn: int,
                         stage: Dict[str, float],
                         valid: Optional[np.ndarray] = None,
-                        ) -> Dict[int, Diagnosis]:
+                        ) -> "Tuple[Dict[int, Diagnosis], Dict[int, List[CauseClass]]]":
         """Explain every flagged host with one fused-kernel dispatch.
+
+        Returns ``(diagnoses, causes)``: per host the Diagnosis plus its
+        ordered verdict-cause list (primary first; co-causes appended only
+        with ``cfg.max_hypotheses > 1`` — see :class:`FleetDiagnosis`).
 
         All flagged hosts share the trailing RCA window [T-rn, T): an onset
         is only ever *observed* inside the trailing detection window, so
@@ -513,7 +525,8 @@ class FleetMonitor:
         names, idx, orient = evidence_layout(
             tuple(channels), cfg.latency_metric)
         if not names:
-            return {}
+            return {}, {}
+        names_pos = {n: m for m, n in enumerate(names)}
         rows = np.concatenate(([li], idx))
         # columnar mode gathers straight to f32 (the fused kernel's input
         # dtype) — no f64 round-trip of the evidence slab; the oracle path
@@ -539,6 +552,29 @@ class FleetMonitor:
         XO = orient_about_baseline(Xm, orient, b_sl)
         W = XO[:, :, nb:]                                       # (H, M, rn)
         Bm = XO[:, :, b_sl]                                     # (H, M, nb')
+        # multi-hypothesis co-cause corroboration over the SAME gathered
+        # slab: per cause, does some symptom channel show a two-sided raw-z
+        # deviation at/above its floor (reconcile's corroboration test,
+        # vectorized over hosts)?  Computed in f64 on the raw (unoriented,
+        # forward-filled) evidence so the fast f32 gather and the f64
+        # oracle agree on every verdict-cause list.
+        sym_ok: Dict[CauseClass, np.ndarray] = {}
+        if cfg.max_hypotheses > 1:
+            for cause, chans in symptom_table().items():
+                ok = np.zeros(flagged.size, bool)
+                for name, floor in chans:
+                    m = names_pos.get(name)
+                    if m is None:
+                        continue
+                    seg = np.asarray(Xm[:, m, :], np.float64)
+                    B, Wr = seg[:, b_sl], seg[:, nb:]
+                    if B.shape[1] == 0 or Wr.shape[1] == 0:
+                        continue
+                    mb = B.mean(axis=1)
+                    sd = np.maximum(B.std(axis=1),
+                                    np.maximum(1e-3 * np.abs(mb), 1e-9))
+                    ok |= np.abs(Wr.mean(axis=1) - mb) / sd >= floor
+                sym_ok[cause] = ok
         stage["gather"] = time.perf_counter() - t_gather
 
         # one fused dispatch: spike scores + max-|rho| + arg-max lag
@@ -563,6 +599,7 @@ class FleetMonitor:
         # attribution sums to the wall total with no double counting
         stage["rank"] = t_assemble - t_rank
         out: Dict[int, Diagnosis] = {}
+        causes: Dict[int, List[CauseClass]] = {}
         now = float(ts[T - 1])
         # Layer-3/4 compute cost, shared by the whole batch (paper's
         # Time-to-RCA includes analysis compute)
@@ -576,5 +613,18 @@ class FleetMonitor:
             out[h] = Diagnosis(event=ev, ranked=ranked,
                                per_metric=per_metric, t_rca=now + analysis,
                                analysis_seconds=analysis, t_ready=now)
+            cl = [ranked[0].cause] if ranked else []
+            if ranked and cfg.max_hypotheses > 1:
+                # co-causes: corroborated runners within their per-cause
+                # confidence gap of the primary, rank order preserved
+                top = ranked[0].confidence
+                for rc in ranked[1:]:
+                    ok = sym_ok.get(rc.cause)
+                    if ok is None or not bool(ok[j]):
+                        continue
+                    if top - rc.confidence > CO_GAP.get(rc.cause, 0.0):
+                        continue
+                    cl.append(rc.cause)
+            causes[h] = cl
         stage["assemble"] = time.perf_counter() - t_assemble
-        return out
+        return out, causes

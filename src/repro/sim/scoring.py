@@ -29,14 +29,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.engine import COOLDOWN_S
 from repro.core.taxonomy import CauseClass, Diagnosis
 from repro.sim.scenarios import FaultEvent
 
-#: default matching tolerance: half the engine's 15 s cooldown — wide
-#: enough for boundary-cadence detection (~5-9 s after onset) plus onset
+#: default matching tolerance: half the engine's cooldown — wide enough
+#: for boundary-cadence detection (~5-9 s after onset) plus onset
 #: estimation error, narrow enough that sequential events keep distinct
-#: match windows.
-TOL_S = 7.5
+#: match windows.  Derived from the engine's single ``COOLDOWN_S``
+#: definition so the scorer can never drift from the dedup machinery.
+TOL_S = COOLDOWN_S / 2.0
 
 #: the paper's operational targets (§1, Table 3)
 DETECT_TARGET_S = 5.0
@@ -76,22 +78,29 @@ def match_events(truth: Sequence[FaultEvent],
 
     Candidate pairs are ``(t, v)`` with ``t.t_on - tol_s <= v.t_onset <=
     t.t_off + tol_s``; they are consumed in order of increasing
-    ``|v.t_onset - t.t_on|`` (ties broken by truth then verdict index, so
-    fully-overlapping events match deterministically).  Greedy-by-cost is
-    exact here in every case that matters: match windows only contend when
-    events overlap, and then any one-to-one assignment has the same
-    cardinality.
+    ``|v.t_onset - t.t_on|``.  Cost ties are broken class-aware first — a
+    verdict whose predicted cause equals the truth event's kind beats one
+    that merely shares the onset — then by truth and verdict index, so
+    fully-overlapping events match deterministically.  The class tiebreak
+    matters exactly when a multi-hypothesis diagnoser emits several
+    verdicts for one overlap window with the *same* onset estimate
+    (co-verdicts anchored to the incident's first onset): any one-to-one
+    assignment has the same cardinality, but attribution should pair each
+    cause with its own event.  Greedy-by-cost remains exact in every case
+    that matters: match windows only contend when events overlap, and
+    then cardinality is tiebreak-invariant.
     """
-    cands: List[Tuple[float, int, int]] = []
+    cands: List[Tuple[float, int, int, int]] = []
     for i, t in enumerate(truth):
         for j, v in enumerate(verdicts):
             if t.t_on - tol_s <= v.t_onset <= t.t_off + tol_s:
-                cands.append((abs(v.t_onset - t.t_on), i, j))
+                cands.append((abs(v.t_onset - t.t_on),
+                              int(v.pred != t.kind), i, j))
     cands.sort()
     used_t: set = set()
     used_v: set = set()
     pairs: List[Tuple[int, int]] = []
-    for _, i, j in cands:
+    for _, _, i, j in cands:
         if i in used_t or j in used_v:
             continue
         used_t.add(i)

@@ -71,6 +71,24 @@ ORIENTATION: Dict[str, float] = {
 }
 
 
+#: Cause-specific *symptom* channels with their corroboration z floors.
+#: A cause is corroborated when one of its symptom channels shows at least
+#: this two-sided raw-z deviation from baseline over the evidence window.
+#: Floors are per channel because their noise regimes differ wildly:
+#: ``nic_rx_drops`` is a bursty counter whose baseline std is inflated by
+#: sparse drops (a low floor suffices), ``involuntary_ctx`` sits near zero
+#: in quiet streams so even mild CPU confusers push large z (a high floor
+#: rejects them), DMA throughput and device temperature move smoothly.
+#: Consumed by ``core.reconcile`` (multi-hypothesis verdict reconciliation).
+SYMPTOM_FLOORS: Dict[str, float] = {
+    "nic_rx_drops": 1.5,       # NIC contention: queue-overflow drops
+    "involuntary_ctx": 6.0,    # CPU contention: forced preemptions
+    "pcie_h2d_bytes": 1.0,     # I/O pressure: DMA contention (either way)
+    "pcie_d2h_bytes": 1.0,
+    "dev_temp": 2.0,           # GPU throttling: thermal excursion
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class MetricSpec:
     """One telemetry channel."""

@@ -167,9 +167,7 @@ def test_segmented_detect_matches_one_shot(name):
                                      state=state)
             # checkpoint/restore mid-stream must be a no-op for replay
             state = StreamState.from_dict(state.to_dict())
-        fl = state.flush(T)
-        if fl is not None:
-            got.append(fl)
+        got += state.flush(T)
         sig = lambda evs: [(e.t_onset, e.t_detect, e.score, int(t))
                            for e, t in evs]
         assert sig(got) == sig(ref)
@@ -185,6 +183,70 @@ def test_stream_state_skips_already_seen_ticks():
                               state=state)
     assert again == []                 # every tick already seen
     assert len(first) >= 1
+
+
+def test_stream_state_roundtrip_any_hypothesis_count():
+    """to_dict/from_dict is exact for 0..K concurrent hypotheses, in any
+    maturation mix, including through the JSON encoding the checkpoint
+    envelope applies."""
+    import json
+
+    from repro.core.engine import EngineConfig, Hypothesis
+    from repro.core.taxonomy import SpikeEvent
+
+    cfg = EngineConfig()
+    for k in range(cfg.max_hypotheses + 1):
+        st = StreamState(
+            hypotheses=[Hypothesis(
+                event=SpikeEvent(t_onset=10.25 + i, t_detect=12.5 + i,
+                                 score=3.5 + 0.125 * i,
+                                 metric="coll_allreduce_ms"),
+                rca_at=1500 + 100 * i, matured=bool(i % 2),
+                mu=5.0 + i, sd=0.25 * (i + 1)) for i in range(k)],
+            t_seen=99.5 if k else -np.inf)
+        assert StreamState.from_dict(st.to_dict()) == st
+        wire = json.loads(json.dumps(st.to_dict()))
+        assert StreamState.from_dict(wire) == st
+
+
+def test_stream_state_rejects_single_pending_shape():
+    """The retired single-pending state shape (pre-hypothesis-set) must
+    raise loudly — a silent partial restore would resurrect an engine
+    with no concurrent-incident memory."""
+    legacy = {"pending": None, "cooldown_until": 17.5, "t_seen": 40.0}
+    with pytest.raises(KeyError):
+        StreamState.from_dict(legacy)
+
+
+def test_segmented_replay_crash_between_concurrent_onsets():
+    """A checkpoint round trip landing between two concurrent detections
+    — the first hypothesis live when the stream cuts, the second opening
+    only after the restore — still replays the one-shot stream byte for
+    byte."""
+    eng = CorrelationEngine()
+    for seed in (11, 12, 13, 14):
+        trial = make_scenario(seed, "overlap_pair")[0]
+        ts, data, channels = trial.ts, trial.data, trial.channels
+        ref = eng.detect_events(ts, data, channels, fast=False)
+        if len(ref) < 2:
+            continue
+        t1, t2 = ref[0][0].t_detect, ref[1][0].t_detect
+        if not (0.0 < t2 - t1 < eng.cfg.cooldown_s):
+            continue          # want the second INSIDE the first's cooldown
+        hi = int(np.searchsorted(ts, (t1 + t2) / 2.0))
+        state = StreamState()
+        got = list(eng.detect_events(ts[:hi], data[:, :hi], channels,
+                                     state=state))
+        assert state.hypotheses, "cut must land on a live hypothesis"
+        state = StreamState.from_dict(state.to_dict())   # crash + restore
+        got += eng.detect_events(ts, data, channels, state=state)
+        got += state.flush(ts.shape[0])
+        sig = lambda evs: [(e.t_onset, e.t_detect, e.score, int(t))
+                           for e, t in evs]
+        assert sig(got) == sig(ref)
+        break
+    else:
+        pytest.fail("no overlap_pair seed produced concurrent detections")
 
 
 # ------------------------------------------------------- fleet session replay

@@ -117,6 +117,25 @@ def test_check_chaos_rows():
                for m in missing)
 
 
+def test_tampered_overlap_recall_fails(committed):
+    """Dropping either overlap class back to one-verdict-per-incident
+    recall (the single-pending detector's ~0.5) must fail the gate."""
+    for name in regress.OVERLAP_CLASSES:
+        doc = copy.deepcopy(committed)
+        doc["scenarios"][name]["recall"] = 0.5
+        bad = regress.check_scorecard(doc, label="t")
+        assert any(f"{name} recall" in m for m in bad), name
+        doc["scenarios"][name]["recall"] = None
+        bad = regress.check_scorecard(doc, label="t")
+        assert any(f"{name} recall" in m for m in bad), name
+
+
+def test_committed_overlap_recall_meets_floor(committed):
+    for name in regress.OVERLAP_CLASSES:
+        assert committed["scenarios"][name]["recall"] >= \
+            regress.OVERLAP_RECALL_MIN
+
+
 def test_tampered_replay_parity_fails(committed):
     doc = copy.deepcopy(committed)
     doc["parity"]["replay"] = 0.75
@@ -222,3 +241,25 @@ def test_protocol_constants_single_definition():
         tuple(scenario.PROTOCOL_CLASSES)
     assert (inspect.signature(diagnostics._records).parameters["n"].default
             == scenario.N_PER_CLASS)
+
+
+def test_cooldown_constant_single_definition():
+    """The verdict cooldown has ONE definition (engine.COOLDOWN_S):
+    EngineConfig defaults to it, the scorer's match tolerance derives
+    from it, and the fleet session's (host, cause) dedup horizon inherits
+    it through the engine config — nothing restates the number."""
+    import dataclasses
+
+    from repro.core import engine
+    from repro.monitor.checkpoint import MonitorSession
+    from repro.monitor.fleet import FleetMonitor
+    from repro.sim import scoring
+
+    fields = {f.name: f for f in dataclasses.fields(engine.EngineConfig)}
+    assert fields["cooldown_s"].default == engine.COOLDOWN_S
+    assert scoring.TOL_S == engine.COOLDOWN_S / 2.0
+    # the session's default dedup horizon follows the config, not a copy
+    cfg = engine.EngineConfig(cooldown_s=engine.COOLDOWN_S + 7.0)
+    sess = MonitorSession(FleetMonitor(cfg, use_kernels=False),
+                          ["coll_allreduce_ms"])
+    assert sess.cooldown_s == cfg.cooldown_s

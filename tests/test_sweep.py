@@ -253,9 +253,9 @@ def test_detect_events_rows_groups_trials():
 
 def test_resolve_row_cooldown_and_pending_jumps():
     """The hit-to-hit resolve replays the tick loop's state machine:
-    fires inside cooldown are skipped, a pending event blocks detection
-    until its accumulation tick, and a pending event at row end flushes
-    with T-1."""
+    fires inside an active hypothesis's cooldown are skipped (flat signal
+    never clears the step gate), a hypothesis blocks re-detection until
+    its accumulation tick, and one open at row end flushes with T-1."""
     cfg = EngineConfig(eval_every=10)
     eng = CorrelationEngine(cfg)
     rate = cfg.rate_hz
@@ -263,20 +263,51 @@ def test_resolve_row_cooldown_and_pending_jumps():
     ts = np.arange(T) / rate
     ticks = np.arange(cfg.window_n + cfg.baseline_n, T, 10)
     rca_n = int(cfg.rca_extra_s * rate)
+    wn = cfg.window_n
+    # flat latency row: every hot slice has the same mean, so the step
+    # gate never opens a second concurrent hypothesis and the resolve
+    # must degenerate to the single-pending machine
+    L = np.full(T, 5.0)
+    onset = np.zeros(ticks.size, np.int64)
     fire = np.ones(ticks.size, bool)       # every tick fires
-    out = eng._resolve_row(ts, ticks, fire, ticks.size, T, rca_n,
-                           cfg.cooldown_s)
+    out = eng._resolve_row(ts, ticks, fire, onset, L, ticks.size, T, wn,
+                           rca_n, cfg.cooldown_s, cfg.max_hypotheses,
+                           cfg.step_sigma)
     assert len(out) >= 2
     t_first = int(ticks[out[0][0]])
     assert out[0][1] == t_first + rca_n
     # consecutive detections at least a cooldown apart
     for (i, _), (j, _) in zip(out, out[1:]):
         assert ts[int(ticks[j])] - ts[int(ticks[i])] >= cfg.cooldown_s
+    # max_hypotheses=1 must reproduce the same stream exactly
+    out1 = eng._resolve_row(ts, ticks, fire, onset, L, ticks.size, T, wn,
+                            rca_n, cfg.cooldown_s, 1, cfg.step_sigma)
+    assert out1 == out
+    # a clear step above the first hypothesis's level opens a second
+    # concurrent hypothesis: the second fire lands INSIDE the first's
+    # cooldown (which would swallow it in the flat case above), yet both
+    # accumulate and emit
+    idx2 = 50                              # 5 s after the first fire
+    assert ts[int(ticks[idx2])] - ts[int(ticks[0])] < cfg.cooldown_s
+    L2 = np.full(T, 5.0)
+    L2[int(ticks[idx2]) - wn:] = 50.0      # step at the second fire's window
+    fire3 = np.zeros(ticks.size, bool)
+    fire3[0] = fire3[idx2] = True
+    out3 = eng._resolve_row(ts, ticks, fire3, onset, L2, ticks.size, T,
+                            wn, rca_n, cfg.cooldown_s,
+                            cfg.max_hypotheses, cfg.step_sigma)
+    assert [i for i, _ in out3] == [0, idx2]
+    # with a single hypothesis slot the in-cooldown step is swallowed
+    out3_k1 = eng._resolve_row(ts, ticks, fire3, onset, L2, ticks.size, T,
+                               wn, rca_n, cfg.cooldown_s, 1,
+                               cfg.step_sigma)
+    assert [i for i, _ in out3_k1] == [0]
     # a single fire so late no tick reaches its accumulation index: flush
     fire2 = np.zeros(ticks.size, bool)
     fire2[-1] = True
-    out2 = eng._resolve_row(ts, ticks, fire2, ticks.size, T, rca_n,
-                            cfg.cooldown_s)
+    out2 = eng._resolve_row(ts, ticks, fire2, onset, L, ticks.size, T, wn,
+                            rca_n, cfg.cooldown_s, cfg.max_hypotheses,
+                            cfg.step_sigma)
     assert out2 == [(ticks.size - 1, T - 1)]
 
 
