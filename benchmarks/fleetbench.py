@@ -300,6 +300,176 @@ def fleet_rows(batch_sizes: Sequence[int] = (16, 64, 256, 1024),
     return rows
 
 
+# -------------------------------------------------------------- sharded bench
+def _shard_pool(seed: int = 9300, cls: str = "nic", t_on: float = 28.0,
+                clip_s: float = 34.0):
+    """(ts, (n_unique+n_bad, C, T') f32 trial pool, channels, n_quiet).
+
+    The provider-fed storm rows assemble each shard's slab from this
+    fixed pool, so fleet size costs shard-slab assembly — the full
+    (B, C, T) array never exists (the point of the provider API).
+    Trials are clipped tighter than ``_CLIP_S`` (event at ``t_on`` still
+    inside the trailing window) to keep the 64k-host row affordable."""
+    quiet = [make_trial(seed + u, cls, intensity=0.0, t_on=t_on,
+                        confuser_prob=0.0) for u in range(16)]
+    bad = [make_trial(seed + 777 + u, cls, intensity=2.0, t_on=t_on,
+                      confuser_prob=0.0) for u in range(8)]
+    t_hi = int(clip_s * quiet[0].rate_hz)
+    pool = np.stack([t.data[:, :t_hi] for t in quiet + bad]
+                    ).astype(np.float32)
+    return quiet[0].ts[:t_hi], pool, quiet[0].channels, len(quiet)
+
+
+def shard_rows(parity_hosts: int = 96,
+               storm_hosts: Sequence[int] = (16384, 65536),
+               shard_hosts: int = None, reps: int = 3,
+               ) -> List[Tuple[str, float, str]]:
+    """Sharded fleet monitor: byte-exact parity bit + 10k+-host scale-out.
+
+    Two sections:
+
+      fleet/shard_parity      the CI-gated bit (``benchmarks/regress.py``
+                              requires exactly 1.0): single-slab vs
+                              sharded ``verdict_fingerprint`` equality on
+                              a ragged 3-shard plan across a clean round,
+                              two corruption rounds (quarantine entry),
+                              an incident-storm round with an RCA top-K
+                              cap (deferral), and the provider path with
+                              late-surfacing corruption (oracle re-visit
+                              of fast-path shards);
+      fleet/shard_*/B{B}      storm-profile throughput + cross-shard
+                              traffic at 16k-64k hosts through
+                              ``diagnose_sharded`` — shard slabs are
+                              materialized one at a time from a fixed
+                              trial pool, and the rows record what
+                              actually crossed the rack->fleet tree
+                              (candidate scalars + pruned evidence
+                              blocks) against the raw-slab
+                              counterfactual.
+    """
+    from repro.kernels import tuning
+    from repro.monitor.shard import (
+        ShardPlan, ShardedFleetMonitor, verdict_fingerprint,
+    )
+
+    rows: List[Tuple[str, float, str]] = []
+    cfg = EngineConfig()
+
+    # ---- parity scenario on a deliberately ragged plan
+    H = int(parity_hosts)
+    cut1, cut2 = H // 3, 2 * H // 3 + 1
+    plan = ShardPlan.from_bounds([(0, cut1), (cut1, cut2), (cut2, H)],
+                                 rack_shards=2)
+    ts, clean, channels = _make_fleet(H, bad_host=cut1 + 1, seed=9400)
+    _, storm, _ = _make_fleet(H, bad_host=cut1 + 1, seed=9400, bad_every=5)
+    li = list(channels).index(cfg.latency_metric)
+    valid = np.ones(clean.shape, bool)
+    valid[H - 2, li, -1200:] = False      # ~half the detect tail invalid
+
+    mono = FleetMonitor(use_kernels=False, rca_top_k=4)
+    shard = ShardedFleetMonitor(plan, use_kernels=False, rca_top_k=4)
+    parity, n_rounds = 1.0, 0
+    fd = None
+    for data, v in ((clean, None), (clean, valid), (clean, valid),
+                    (storm, None)):
+        a = mono.diagnose_fleet(ts, data, channels, valid=v)
+        fd = shard.diagnose_fleet(ts, data, channels, valid=v)
+        parity = min(parity, float(
+            verdict_fingerprint(a) == verdict_fingerprint(fd)))
+        n_rounds += 1
+    covered = bool(a.quarantined) and bool(a.deferred_hosts)
+    # provider path: corruption on the LAST shard only — the fast-path
+    # shards must be re-visited through the oracle and still match the
+    # single-slab masked round
+    pvalid = np.ones(clean.shape, bool)
+    pvalid[H - 2, li, -200:] = False      # below the quarantine threshold
+    calls: List[int] = []
+
+    def provider(s: int):
+        calls.append(s)
+        a0, b0 = plan.bounds[s]
+        return clean[a0:b0], pvalid[a0:b0]
+
+    shard2 = ShardedFleetMonitor(plan, use_kernels=False)
+    fdp = shard2.diagnose_sharded(ts, provider, channels)
+    ref = FleetMonitor(use_kernels=False).diagnose_fleet(
+        ts, clean, channels, valid=pvalid)
+    revisited = len(calls) == plan.n_shards + 2
+    parity = min(parity, float(
+        verdict_fingerprint(fdp) == verdict_fingerprint(ref)
+        and revisited and covered))
+    rows.append(("fleet/shard_parity", parity,
+                 f"1.0 = sharded verdicts byte-exact vs single slab over "
+                 f"{n_rounds + 1} rounds (ragged shards, quarantine, "
+                 "top-K deferral, oracle re-visit)"))
+    tr = shard.last_traffic
+    rows.append((f"fleet/shard_xfer_frac/H{H}",
+                 tr.total_bytes / tr.raw_bytes,
+                 "storm round, rca_top_k=4: bytes crossing the tree / "
+                 "raw shard slabs"))
+
+    # ---- storm-profile scale-out through the provider API
+    sh = tuning.shard_hosts(shard_hosts)
+    topk = tuning.shard_topk()
+    pts, pool, pchannels, n_quiet = _shard_pool()
+    n_pool = pool.shape[0]
+
+    def make_provider(plan_b, bad_host, bad_every):
+        def prov(s: int):
+            a0, b0 = plan_b.bounds[s]
+            idx = np.array(
+                [n_quiet + h % (n_pool - n_quiet)
+                 if (h == bad_host or (bad_every and h % bad_every == 0))
+                 else h % n_quiet
+                 for h in range(a0, b0)])
+            return pool[idx], None
+        return prov
+
+    # jit warm-up at one shard so the timed rounds hit the compile cache
+    warm = ShardedFleetMonitor(
+        ShardPlan.from_bounds([(0, min(sh, 64))], rack_shards=1),
+        use_kernels=False)
+    warm.diagnose_sharded(
+        pts, make_provider(warm.plan, bad_host=1, bad_every=16), pchannels)
+
+    for B in storm_hosts:
+        B = int(B)
+        plan_b = ShardPlan.for_fleet(B, shard_hosts=sh)
+        mon = ShardedFleetMonitor(plan_b, use_kernels=False,
+                                  rca_top_k=topk)
+        prov = make_provider(plan_b, bad_host=1, bad_every=16)
+        walls = []
+        fd = None
+        for _ in range(max(1, reps - 2)):
+            mon._strikes = {}
+            t0 = time.perf_counter()
+            fd = mon.diagnose_sharded(pts, prov, pchannels)
+            walls.append(time.perf_counter() - t0)
+        round_s = float(np.median(walls))
+        tr = mon.last_traffic
+        tag = f"B{B}"
+        rows.append((f"fleet/shard_round_s/{tag}", round_s,
+                     f"{plan_b.n_shards} shards x {sh} hosts, "
+                     f"{plan_b.n_racks} racks, storm bad_every=16, "
+                     f"rca_top_k={topk}, {len(fd.flagged_hosts)} flagged"))
+        rows.append((f"fleet/shard_hosts_per_s/{tag}", B / round_s,
+                     "provider-fed sharded round (slab assembly included)"))
+        rows.append((f"fleet/shard_stage_detect_s/{tag}",
+                     fd.stage_seconds.get("detect", 0.0),
+                     "sum of per-shard detect dispatches"))
+        rows.append((f"fleet/shard_stage_reduce_s/{tag}",
+                     fd.stage_seconds.get("reduce", 0.0),
+                     "rack->fleet candidate merge + evidence pruning"))
+        rows.append((f"fleet/shard_xfer_bytes/{tag}",
+                     float(tr.total_bytes),
+                     f"{tr.n_candidates} candidate records + "
+                     f"{tr.n_evidence} evidence blocks + per-host scores"))
+        rows.append((f"fleet/shard_xfer_frac/{tag}",
+                     tr.total_bytes / tr.raw_bytes,
+                     "vs shipping every raw shard slab to the fleet level"))
+    return rows
+
+
 # ------------------------------------------------------------ live fleet bench
 def live_rows(n_hosts: int = 8, window_s: float = 20.0, reps: int = 5,
               storm_s: float = 0.4) -> List[Tuple[str, float, str]]:

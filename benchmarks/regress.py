@@ -12,10 +12,13 @@ produces zero verdicts.  This gate makes every commit prove them again:
      classes at multi-hypothesis recall (every concurrent fault gets its
      own verdict), latency percentiles finite where events exist;
   2. a fresh tiny run reproduces them on THIS commit's code: the bench
-     parity rows (``fleet/detect_parity``, ``eval/pred_parity``,
-     ``eval/store_pred_parity``, and ``eval/sweep_parity`` — the slab
-     detection sweep reproducing the per-row oracle's events and
-     timestamps byte-exactly), the chaos invariants
+     parity rows (``fleet/detect_parity``, ``fleet/shard_parity`` — the
+     sharded rack->fleet candidate tree reproducing the single-slab
+     verdict fingerprint byte-exactly, quarantine/degraded/deferred
+     fields included — ``eval/pred_parity``, ``eval/store_pred_parity``,
+     and ``eval/sweep_parity`` — the slab detection sweep reproducing
+     the per-row oracle's events and timestamps byte-exactly), the
+     chaos invariants
      (``fleetbench.chaos_rows``: zero verdicts under pure corruption,
      all-true-mask byte-parity, bounded sanitize overhead), the
      survivability invariants (``fleetbench.restart_rows``: crash/restore
@@ -40,6 +43,7 @@ from typing import Dict, List
 #: the batch-size tag)
 PARITY_ROW_PREFIXES = (
     "fleet/detect_parity",
+    "fleet/shard_parity",
     "eval/pred_parity",
     "eval/store_pred_parity",
     "eval/sweep_parity",
@@ -274,6 +278,8 @@ def fresh_failures() -> List[str]:
 
     rows = fleetbench.fleet_rows(batch_sizes=(8,), reps=1,
                                  sequential_baseline=False)
+    rows += fleetbench.shard_rows(parity_hosts=24, storm_hosts=(48,),
+                                  shard_hosts=16, reps=1)
     rows += fleetbench.eval_rows(n_per_class=1, reps=1)
     rows += fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
                                        fleet_hosts=32)

@@ -32,6 +32,7 @@ def _detect_tail(tail32: np.ndarray, patch_win: np.ndarray,
                  patch_base: np.ndarray, wn: int, bn: int,
                  threshold: float, persistence: float,
                  use_kernel: bool, interpret: bool, exact: bool,
+                 device=None,
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Single-tick sweep over the (H, bn + wn) trailing slab.
 
@@ -51,7 +52,7 @@ def _detect_tail(tail32: np.ndarray, patch_win: np.ndarray,
     fire, score, onset, marg = sweep_ops.sweep_rows(
         tail32, wn, bn, ticks, threshold, persistence,
         moments=(mu[:, None], sd[:, None]), argmax_fallback=True,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, device=device)
     fire, score, onset, marg = (fire[:, 0], score[:, 0], onset[:, 0],
                                 marg[:, 0])
     if exact and marg.any():
@@ -99,6 +100,7 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
                       persistence: float = 0.0, use_kernel: bool = True,
                       interpret: bool = True, exact: bool = True,
                       valid: Optional[np.ndarray] = None,
+                      force_oracle: bool = False, device=None,
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """:func:`detect_hosts` over a trailing latency slab.
 
@@ -116,20 +118,37 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
     is the exceptional path, so it takes the oracle, not the kernel: the
     two can then never disagree.  An all-true mask is dropped and the
     call is byte-identical to ``valid=None``.
+
+    ``force_oracle=True`` routes through the masked f64 oracle even for
+    a clean (or absent) mask, as if an all-true mask were corrupt.  The
+    sharded fleet monitor needs this: a single-slab round with ANY
+    invalid cell takes the oracle for EVERY host, so when one shard sees
+    corruption the clean shards must take the oracle too — otherwise the
+    oracle-vs-fast split would follow shard boundaries and the parity
+    contract would depend on where a host happens to live.
+
+    ``device`` pins the fast path's sweep dispatch to one ``jax.Device``
+    (see :func:`repro.kernels.sweep.ops.sweep_rows`); None keeps the
+    default placement.
     """
     tail = np.asarray(tail)
     if tail.ndim != 2 or tail.shape[-1] != wn + bn:
         raise ValueError(f"tail {tail.shape} vs bn+wn={bn + wn}")
+    v = None
     if valid is not None:
         v = np.asarray(valid, bool)
         if v.shape != tail.shape:
             raise ValueError(f"valid {v.shape} vs tail {tail.shape}")
-        if not v.all():
-            t64 = np.asarray(tail, np.float64)
-            fire, score, onset = spike_mod.detect_rows_masked(
-                t64[:, bn:], t64[:, :bn], v[:, bn:], v[:, :bn],
-                float(threshold), float(persistence))
-            return fire.astype(bool), score, onset.astype(np.intp)
+        if v.all():
+            v = None
+    if v is not None or force_oracle:
+        if v is None:
+            v = np.ones(tail.shape, bool)
+        t64 = np.asarray(tail, np.float64)
+        fire, score, onset = spike_mod.detect_rows_masked(
+            t64[:, bn:], t64[:, :bn], v[:, bn:], v[:, :bn],
+            float(threshold), float(persistence))
+        return fire.astype(bool), score, onset.astype(np.intp)
     tail32 = np.ascontiguousarray(tail, np.float32)
     # the exact re-decision must see the caller's values, not the f32
     # staging — only a genuinely-f32 tail may reuse the staged copy
@@ -137,5 +156,5 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
     fire, score, onset = _detect_tail(
         tail32, patch[:, bn:], patch[:, :bn], int(wn), int(bn),
         float(threshold), float(persistence), bool(use_kernel),
-        bool(interpret), bool(exact))
+        bool(interpret), bool(exact), device=device)
     return fire.astype(bool), score, onset.astype(np.intp)

@@ -270,6 +270,7 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
                use_kernel: bool = False, interpret: bool = True,
                block_t: Optional[int] = None,
                valid: Optional[np.ndarray] = None,
+               device=None,
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Batched :func:`repro.core.spike.detect_sweep` over a latency slab.
 
@@ -306,6 +307,12 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
     whose window holds no valid cell) are forced quiet host-side after
     the dispatch.  An all-true mask is dropped before staging, so the
     clean path is byte-identical to ``valid=None``.
+
+    ``device`` pins the jit dispatch to one ``jax.Device`` (sharded fleet
+    monitoring places each shard's sweep on its own mesh device); None
+    keeps JAX's default placement.  Placement never changes the decision
+    — moments are exact f64 host-side and marginal ticks re-decide
+    through the f64 oracle regardless of where the f32 sweep ran.
     """
     lat = np.asarray(lat)
     if lat.ndim != 2:
@@ -349,14 +356,20 @@ def sweep_rows(lat: np.ndarray, wn: int, bn: int, ticks: np.ndarray,
     lat32 = np.ascontiguousarray(lat, np.float32)
     if vmask is not None:
         lat32 = np.where(vmask, lat32, np.float32(spike_mod.MASK_NEG))
-    fire, score, onset, marg = _sweep_jit(
-        jnp.asarray(lat32),
-        jnp.asarray(np.asarray(mu, np.float32)),
-        jnp.asarray(np.asarray(sd, np.float32)),
-        jnp.asarray(ticks, jnp.int32), jnp.asarray(vn, jnp.int32),
-        wn, float(threshold), int(min_hot), float(eps),
-        bool(argmax_fallback), bool(use_kernel), bool(interpret),
-        tuning.sweep_block_t(block_t))
+    def _dispatch():
+        return _sweep_jit(
+            jnp.asarray(lat32),
+            jnp.asarray(np.asarray(mu, np.float32)),
+            jnp.asarray(np.asarray(sd, np.float32)),
+            jnp.asarray(ticks, jnp.int32), jnp.asarray(vn, jnp.int32),
+            wn, float(threshold), int(min_hot), float(eps),
+            bool(argmax_fallback), bool(use_kernel), bool(interpret),
+            tuning.sweep_block_t(block_t))
+    if device is None:
+        fire, score, onset, marg = _dispatch()
+    else:
+        with jax.default_device(device):
+            fire, score, onset, marg = _dispatch()
     fire = np.asarray(fire).astype(bool)
     score = np.array(score, np.float64)
     onset = np.asarray(onset).astype(np.intp)

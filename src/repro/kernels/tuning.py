@@ -22,6 +22,9 @@ DEFAULT_BLOCK_M = 8      # metric rows per (host, metric-block) grid cell
 DEFAULT_LAG_PAD = 64     # lag output lanes (>= 2K+1, lane-aligned)
 DEFAULT_SWEEP_BLOCK_T = 128   # evaluation ticks per sweep tile / ref block
 DEFAULT_SWEEP_BLOCK_R = 8     # latency rows per sweep-kernel grid cell
+DEFAULT_SHARD_HOSTS = 1024    # hosts per fleet-monitor shard slab
+DEFAULT_RACK_SHARDS = 8       # shards per rack in the two-level reduce
+DEFAULT_SHARD_TOPK = 16       # evidence candidates shipped per shard/rack
 
 #: candidates the interpret-mode microbench sweeps (hardware starting grid)
 BLOCK_M_CANDIDATES = (4, 8, 16)
@@ -80,3 +83,51 @@ def sweep_block_r(override: int | None = None) -> int:
     if override is not None:
         return int(override)
     return _env_int("REPRO_SWEEP_BLOCK_R", DEFAULT_SWEEP_BLOCK_R)
+
+
+def shard_hosts(override: int | None = None) -> int:
+    """Hosts per fleet-monitor shard slab (``REPRO_SHARD_HOSTS``).
+
+    The sharded fleet monitor (monitor/shard.py) cuts the (hosts, C, T)
+    fleet into contiguous slabs of at most this many hosts; each slab is
+    one detect dispatch (one device placement on the mesh) and one
+    evidence gather.  Bounds per-shard resident memory at
+    ``shard_hosts * C * T * 4`` bytes — the knob that keeps 64k-host
+    fleets feasible on a box that could never hold the full slab.
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_SHARD_HOSTS", DEFAULT_SHARD_HOSTS)
+
+
+def rack_shards(override: int | None = None) -> int:
+    """Shards per rack in the two-level reduce (``REPRO_RACK_SHARDS``).
+
+    Shard candidate lists are merged rack-first, then rack winners merge
+    at fleet level — the fan-in at each tree level stays at most
+    ``rack_shards`` (resp. ``ceil(n_shards / rack_shards)``) instead of
+    ``n_shards``.  Shapes the reduce topology only; verdicts are
+    invariant to it (the merge order is deterministic and the candidate
+    order is a total order).
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_RACK_SHARDS", DEFAULT_RACK_SHARDS)
+
+
+def shard_topk(override: int | None = None) -> int:
+    """Evidence candidates shipped per shard/rack (``REPRO_SHARD_TOPK``).
+
+    The deployment default for the ``rca_top_k`` cap a sharded fleet
+    passes to its monitor (the bench's storm rows and the operations
+    runbook use it): each shard then ships evidence blocks for at most
+    this many of its worst flagged hosts, and each rack forwards at most
+    this many of its shards' union — the bound that keeps cross-shard
+    traffic at candidates, never raw telemetry, during an incident
+    storm.  Not applied implicitly: a ``ShardedFleetMonitor`` built
+    without ``rca_top_k`` explains every flagged host, exactly like the
+    single-slab monitor it must stay byte-exact against.
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_SHARD_TOPK", DEFAULT_SHARD_TOPK)

@@ -4,6 +4,12 @@ from repro.monitor.fleet import FleetMonitor, FleetDiagnosis, Mitigation
 from repro.monitor.aggregator import (
     AggregatorStats, FleetAggregator, FleetSnapshot,
 )
+from repro.monitor.shard import (
+    ShardCandidates, ShardPlan, ShardTraffic, ShardedFleetMonitor,
+    verdict_fingerprint,
+)
 
 __all__ = ["StepTelemetry", "FleetMonitor", "FleetDiagnosis", "Mitigation",
-           "FleetAggregator", "FleetSnapshot", "AggregatorStats"]
+           "FleetAggregator", "FleetSnapshot", "AggregatorStats",
+           "ShardPlan", "ShardCandidates", "ShardTraffic",
+           "ShardedFleetMonitor", "verdict_fingerprint"]

@@ -39,6 +39,7 @@ from repro.telemetry.agent import TelemetryAgent
 
 @dataclasses.dataclass
 class AggregatorStats:
+    """Cumulative aggregator health counters (one snapshot per fleet)."""
     assemblies: int = 0
     torn_retries: int = 0       # seqlock validate-retry loops across hosts
     torn_giveups: int = 0       # reads that exhausted retries (host skipped)
@@ -52,6 +53,7 @@ class AggregatorStats:
 
 @dataclasses.dataclass
 class FleetSnapshot:
+    """One staged (hosts, C, T) assembly: slab, clock, validity, skips."""
     ts: np.ndarray              # (T,) reference clock, newest at T-1
     slab: np.ndarray            # (hosts, C, T) f32 — the staging buffer
     valid: np.ndarray           # (hosts,) true sample count per row
@@ -73,6 +75,10 @@ class FleetAggregator:
 
     def __init__(self, agents: Sequence[TelemetryAgent], window_s: float,
                  dead_after_s: Optional[float] = None, min_samples: int = 2):
+        """Preallocate the staging slab for ``agents`` (which must agree
+        on channel layout and sampling rate); ``window_s`` fixes the
+        staged span T and ``dead_after_s`` the staleness horizon past
+        which a host's row is zeroed and skipped."""
         if not agents:
             raise ValueError("need at least one agent")
         self.agents: List[TelemetryAgent] = list(agents)
@@ -284,6 +290,23 @@ class FleetAggregator:
                              valid_mask=self._valid)
         self.last_snapshot = snap
         return snap
+
+    # ------------------------------------------------------------- sharding
+    def shard_plan(self, shard_hosts: Optional[int] = None,
+                   rack_shards: Optional[int] = None):
+        """A :class:`~repro.monitor.shard.ShardPlan` covering this fleet.
+
+        Convenience for building the matching
+        :class:`~repro.monitor.shard.ShardedFleetMonitor`: the plan's
+        host count is the aggregator's agent count, cut into
+        ``shard_hosts``-sized contiguous shards (``REPRO_SHARD_HOSTS``
+        default) grouped ``rack_shards`` per rack (``REPRO_RACK_SHARDS``
+        default).  :meth:`diagnose` then works unchanged — a sharded
+        monitor's ``diagnose_fleet`` processes the staged slab shard by
+        shard through per-shard views, no extra copies."""
+        from repro.monitor.shard import ShardPlan
+        return ShardPlan.for_fleet(len(self.agents), shard_hosts,
+                                   rack_shards)
 
     # ------------------------------------------------------------ diagnosis
     def diagnose(self, monitor: FleetMonitor, min_valid_s: float = 0.0,

@@ -284,6 +284,9 @@ class MonitorSession:
 
     # ---------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, object]:
+        """JSON-serializable session state: the monitor's state (strikes,
+        quarantine, shard plan when sharded), per-(host, cause) verdict
+        cooldowns, streaming baseline moments, and counters."""
         return {
             "monitor": self.monitor.state_dict(),
             "cooldown_until": {f"{h}|{cause}": float(v)
@@ -300,6 +303,7 @@ class MonitorSession:
         }
 
     def save(self, path: str) -> int:
+        """Atomically checkpoint the session; returns bytes written."""
         n = save_checkpoint(path, self.state_dict())
         self.stats.checkpoints_written += 1
         return n
@@ -312,6 +316,14 @@ class MonitorSession:
         payload can never leave a half-restored hybrid.  Returns True on
         a warm restore; False (with a loud warning and a counted
         rejection) means the session keeps its cold-start state.
+
+        Shard-plan skew lands here too: a
+        :class:`~repro.monitor.shard.ShardedFleetMonitor` whose plan
+        does not match the checkpoint's recorded ``shard_plan`` raises
+        ``ValueError`` from ``load_state_dict``, which this catch turns
+        into a counted cold start — resharding the fleet between runs
+        deliberately invalidates prior strike/quarantine state rather
+        than misattributing it across the new shard boundaries.
         """
         try:
             payload = load_checkpoint(path)

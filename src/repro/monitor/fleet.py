@@ -57,6 +57,7 @@ from repro.kernels.xcorr import ops as xcorr_ops
 
 
 class Mitigation(str, enum.Enum):
+    """Operator action recommended for a verdict class (paper §6)."""
     NONE = "none"
     REBALANCE_INPUT = "rebalance_input_pipeline"   # IO verdict
     REPIN_CPU = "repin_or_isolate_cpu"             # CPU verdict
@@ -78,6 +79,10 @@ VERDICT_TO_MITIGATION = {
 
 @dataclasses.dataclass
 class FleetDiagnosis:
+    """One fleet diagnosis round — the operator-facing verdict record.
+
+    Field-by-field reading guide: ``docs/OPERATIONS.md``.
+    """
     straggler_host: int
     straggler_score: float
     diagnosis: Optional[Diagnosis]
@@ -126,10 +131,21 @@ class FleetMonitor:
                  quarantine_backoff_max: int = 16,
                  budget_s: Optional[float] = None,
                  shed_after: int = 2,
-                 rearm_after: int = 3):
+                 rearm_after: int = 3,
+                 rca_top_k: Optional[int] = None):
         self.cfg = config or EngineConfig()
         self.use_kernels = use_kernels
         self.persistent_threshold = persistent_threshold
+        #: cap on Layer-3 RCA candidates per round (None = explain every
+        #: flagged host).  Under an incident storm the monitor explains the
+        #: ``rca_top_k`` worst flagged hosts (score order, host-id
+        #: tie-break) and defers the rest into
+        #: ``FleetDiagnosis.deferred_hosts`` — they still accrue strikes,
+        #: exactly like deadline-degraded deferral, so persistent
+        #: stragglers escalate even while the storm is being triaged.
+        #: This is also the fleet-level contract the sharded monitor's
+        #: rack->fleet candidate tree bounds its cross-shard traffic with.
+        self.rca_top_k = None if rca_top_k is None else int(rca_top_k)
         #: columnar fast path: one streaming-detect dispatch + f32 gather;
         #: False = seed spike-dispatch + f64 detect_rows replay (oracle)
         self.fast_detect = fast_detect
@@ -187,16 +203,24 @@ class FleetMonitor:
             max_lag=self.cfg.max_lag, use_kernel=self.use_kernels))
 
     # ----------------------------------------------------------- quarantine
-    def _update_quarantine(self, bad_frac: np.ndarray) -> np.ndarray:
+    def _update_quarantine(self, bad_frac: np.ndarray,
+                           base: int = 0) -> np.ndarray:
         """Advance the per-host quarantine state machine one round.
 
         ``bad_frac`` (hosts,) is the invalid fraction of each host's
         latency channel over the detection tail.  Returns the (hosts,)
-        bool mask of hosts quarantined THIS round."""
+        bool mask of hosts quarantined THIS round.
+
+        ``base`` offsets the state-machine keys: a sharded round advances
+        each shard's hosts with ``base=shard_start`` so the per-host
+        hysteresis state stays keyed by *absolute* host id.  The machine
+        is per-host independent, so advancing shard by shard is the same
+        state trajectory as one full-fleet call."""
         H = int(bad_frac.size)
         quar = np.zeros(H, bool)
-        for h in range(H):
-            bf = float(bad_frac[h])
+        for j in range(H):
+            h = j + int(base)
+            bf = float(bad_frac[j])
             if h in self._quarantined:
                 if bf <= self.quarantine_exit_frac:
                     self._clean_streak[h] = self._clean_streak.get(h, 0) + 1
@@ -210,7 +234,7 @@ class FleetMonitor:
                         continue
                 else:
                     self._clean_streak[h] = 0
-                quar[h] = True
+                quar[j] = True
             elif bf > self.quarantine_enter_frac:
                 self._bad_streak[h] = self._bad_streak.get(h, 0) + 1
                 if self._bad_streak[h] >= self.quarantine_enter_rounds:
@@ -220,7 +244,7 @@ class FleetMonitor:
                     self._quar_backoff[h] = (
                         self.quarantine_backoff_init if prev is None
                         else min(prev * 2, self.quarantine_backoff_max))
-                    quar[h] = True
+                    quar[j] = True
             else:
                 self._bad_streak.pop(h, None)
         return quar
@@ -340,7 +364,19 @@ class FleetMonitor:
         hosts already carrying strikes, every other flagged host is
         reported in ``deferred_hosts`` (still accruing a strike, so it
         leads the RCA queue once re-armed or escalates to
-        EXCLUDE_AND_RESCALE on persistence)."""
+        EXCLUDE_AND_RESCALE on persistence).  With ``rca_top_k`` set, at
+        most that many hosts get Layer-3 RCA per round (worst first) and
+        the overflow is deferred the same way.
+
+        The round is assembled from overridable stages —
+        :meth:`_detect_round` (Layer 2 + quarantine over the latency
+        tail), an evidence-gather callback, and :meth:`_finish_round`
+        (flag ordering, strike/mitigation lifecycle, Layer-3 RCA, budget
+        hysteresis) — so the sharded monitor
+        (:class:`repro.monitor.shard.ShardedFleetMonitor`) can run
+        detection and evidence extraction per shard while reusing the
+        exact fleet-level verdict logic, keeping the two byte-identical
+        by construction."""
         hosts, C, T = host_data.shape
         li = list(channels).index(self.cfg.latency_metric)
         vfull = None
@@ -354,21 +390,66 @@ class FleetMonitor:
         wn = min(wn, T // 2)
         bn = min(bn, T - wn)
         if bn < MIN_BASELINE_N:
-            # Short snapshot: the clamped baseline is too thin to estimate
-            # ambient statistics, and the sigma-floored z-score would flag
-            # perfectly quiet hosts.  Report a quiet verdict with an
-            # explicit stage marker instead of spurious stragglers.  A
-            # quiet round clears strike history exactly like a quiet full
-            # window (no host was flagged THIS round).
-            self._strikes.clear()
-            self._update_budget(extra_cost_s)
-            return FleetDiagnosis(
-                straggler_host=0, straggler_score=0.0, diagnosis=None,
-                mitigation=Mitigation.NONE,
-                per_host_scores=np.zeros(hosts, np.float32),
-                stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0},
-                degraded=self._degraded)
+            return self._quiet_round(hosts, extra_cost_s)
         t_detect = time.perf_counter()
+        scores, cand, onset_rel, qhosts = self._detect_round(
+            host_data, vfull, li, T, wn, bn)
+        stage = {"detect": time.perf_counter() - t_detect}
+
+        def evidence_for(geom: "EvidenceGeometry", rca_hosts: np.ndarray,
+                         ) -> np.ndarray:
+            return self._gather_evidence(host_data, rca_hosts, geom, vfull)
+
+        return self._finish_round(ts, channels, li, T, wn, bn, scores,
+                                  cand, onset_rel, qhosts, stage,
+                                  extra_cost_s, evidence_for)
+
+    def _quiet_round(self, hosts: int, extra_cost_s: float) -> FleetDiagnosis:
+        """Short-snapshot quiet verdict (baseline too thin to trust).
+
+        The clamped baseline cannot estimate ambient statistics, and the
+        sigma-floored z-score would flag perfectly quiet hosts — so the
+        round reports nothing, with an explicit ``short_baseline_skip``
+        stage marker instead of spurious stragglers.  A quiet round clears
+        strike history exactly like a quiet full window (no host was
+        flagged THIS round)."""
+        self._strikes.clear()
+        self._update_budget(extra_cost_s)
+        return FleetDiagnosis(
+            straggler_host=0, straggler_score=0.0, diagnosis=None,
+            mitigation=Mitigation.NONE,
+            per_host_scores=np.zeros(hosts, np.float32),
+            stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0},
+            degraded=self._degraded)
+
+    def _detect_round(self, host_data: np.ndarray,
+                      vfull: Optional[np.ndarray], li: int,
+                      T: int, wn: int, bn: int,
+                      force_oracle: bool = False, device=None,
+                      base: int = 0,
+                      quar: Optional[np.ndarray] = None,
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+        """Layer-2 detection + telemetry quarantine over the latency tail.
+
+        Returns ``(scores, cand, onset_rel, qhosts)``: per-host spike
+        scores (quarantined hosts zeroed), the unordered flagged host
+        indices, their onsets relative to the detection window, and the
+        hosts quarantined this round — all indexed relative to
+        ``host_data`` (the sharded caller offsets them by its shard
+        base).
+
+        The shard parameters keep a per-shard invocation byte-identical
+        to the corresponding rows of one full-slab call: ``base`` keys
+        the quarantine state machine by absolute host id,
+        ``force_oracle`` routes a clean shard through the masked f64
+        oracle when some OTHER shard saw corruption (a single-slab round
+        with any invalid cell takes the oracle for every host),
+        ``device`` pins the detect dispatch to the shard's mesh device,
+        and ``quar`` substitutes precomputed quarantine decisions so a
+        shard re-visited for oracle forcing does not advance the
+        hysteresis twice."""
+        hosts = host_data.shape[0]
         lat = host_data[:, li, :]
         # telemetry quarantine: invalid fraction of the latency channel
         # over the detection tail drives the hysteresis state machine; the
@@ -380,14 +461,15 @@ class FleetMonitor:
                 lvt = None
         bad_frac = (np.zeros(hosts) if lvt is None
                     else 1.0 - lvt.mean(axis=1))
-        quar = self._update_quarantine(bad_frac)
+        if quar is None:
+            quar = self._update_quarantine(bad_frac, base=base)
         qhosts = np.flatnonzero(quar)
         # persistence gate, the scalar spike.detect rule batched over hosts:
         # a host is a straggler only if `persistence` of its window sits
         # above mu + thr*sigma — bare max-z over 500 correlated ambient
         # samples trips routinely.  The gate also yields each survivor's
         # onset estimate for Layer 3.
-        if self.fast_detect or lvt is not None:
+        if self.fast_detect or lvt is not None or force_oracle:
             # one streaming-detect dispatch over the trailing slab view:
             # score + gate + onset per host, one host->device copy, no
             # candidate re-slice.  A masked round routes through this call
@@ -396,7 +478,8 @@ class FleetMonitor:
             fire, scores, onset_all = detect_ops.detect_hosts_slab(
                 lat[:, T - wn - bn:T], wn, bn,
                 self.cfg.threshold, self.cfg.persistence,
-                use_kernel=self.use_kernels, valid=lvt)
+                use_kernel=self.use_kernels, valid=lvt,
+                force_oracle=force_oracle, device=device)
             if qhosts.size:
                 fire[qhosts] = False
                 scores[qhosts] = 0.0
@@ -416,8 +499,62 @@ class FleetMonitor:
                     latc[:, T - wn:], latc[:, T - wn - bn:T - wn],
                     self.cfg.threshold, self.cfg.persistence)
                 cand, onset_rel = cand[keep], onset_rel[keep]
-        stage = {"detect": time.perf_counter() - t_detect}
-        order = np.argsort(-scores[cand])
+        return scores, cand, onset_rel, qhosts
+
+    def _rca_selection(self, flagged: np.ndarray, onset_rel: np.ndarray,
+                       ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
+        """Which flagged hosts get Layer-3 RCA this round, and which defer.
+
+        ``flagged`` must already be in fleet RCA order (score-descending,
+        host-id tie-break).  Applies the degraded-mode strike priority
+        (detect-only rounds explain only hosts with strike history) and
+        the ``rca_top_k`` storm cap; returns ``(rca_hosts, rca_onsets,
+        deferred)``.  Pure — no monitor state is touched — so the sharded
+        monitor can run the same selection per shard/rack to decide which
+        evidence blocks to ship, guaranteeing every host the fleet level
+        will RCA has its evidence on hand (the fleet's selection over a
+        superset picks a subset of each part's local selection)."""
+        rca_hosts, rca_onsets = flagged, onset_rel
+        deferred: List[int] = []
+        if self._degraded:
+            # detect-only round: RCA only for hosts whose flag is
+            # *persistent* (strike history) — everything else is
+            # deferred, explicitly, instead of silently late
+            pri = np.fromiter(
+                (self._strikes.get(int(h), 0) > 0 for h in flagged),
+                dtype=bool, count=flagged.size)
+            rca_hosts, rca_onsets = flagged[pri], onset_rel[pri]
+            deferred = [int(h) for h in flagged[~pri]]
+        if self.rca_top_k is not None and rca_hosts.size > self.rca_top_k:
+            # incident-storm triage: explain the worst ``rca_top_k``
+            # hosts this round, defer the rest explicitly (they keep
+            # accruing strikes, so persistence still escalates)
+            k = self.rca_top_k
+            deferred += [int(h) for h in rca_hosts[k:]]
+            rca_hosts, rca_onsets = rca_hosts[:k], rca_onsets[:k]
+        return rca_hosts, rca_onsets, deferred
+
+    def _finish_round(self, ts: np.ndarray, channels: Sequence[str],
+                      li: int, T: int, wn: int, bn: int,
+                      scores: np.ndarray, cand: np.ndarray,
+                      onset_rel: np.ndarray, qhosts: np.ndarray,
+                      stage: Dict[str, float], extra_cost_s: float,
+                      evidence_for) -> FleetDiagnosis:
+        """Fleet-level verdict assembly shared by every execution layout.
+
+        Orders the flagged hosts (score-descending, host-id tie-break —
+        deterministic so sharded and single-slab rounds agree), applies
+        the degraded-mode and ``rca_top_k`` RCA deferrals, runs batched
+        Layer-3 RCA through ``evidence_for`` (a callback returning the
+        gathered evidence slab for exactly the RCA'd hosts, in order —
+        the single-slab path slices ``host_data``, the sharded path
+        reassembles blocks shipped from shards), advances the
+        strike/mitigation lifecycle and the deadline-budget hysteresis,
+        and returns the round's :class:`FleetDiagnosis`."""
+        # deterministic flag order: score-descending with ascending host id
+        # on ties (``cand`` is ascending) — a plain argsort would order
+        # tied scores arbitrarily and split the sharded/single-slab paths
+        order = np.argsort(-scores[cand], kind="stable")
         flagged, onset_rel = cand[order], onset_rel[order]
         diagnoses: Dict[int, Diagnosis] = {}
         causes: Dict[int, List[CauseClass]] = {}
@@ -432,22 +569,19 @@ class FleetMonitor:
         degraded = self._degraded
         deferred: List[int] = []
         if flagged.size:
-            rca_hosts, rca_onsets = flagged, onset_rel
-            if degraded:
-                # detect-only round: RCA only for hosts whose flag is
-                # *persistent* (strike history) — everything else is
-                # deferred, explicitly, instead of silently late
-                pri = np.fromiter(
-                    (self._strikes.get(int(h), 0) > 0 for h in flagged),
-                    dtype=bool, count=flagged.size)
-                rca_hosts, rca_onsets = flagged[pri], onset_rel[pri]
-                deferred = [int(h) for h in flagged[~pri]]
-                self.deferred_rca += len(deferred)
+            rca_hosts, rca_onsets, deferred = self._rca_selection(
+                flagged, onset_rel)
+            self.deferred_rca += len(deferred)
             if rca_hosts.size:
-                diagnoses, causes = self._diagnose_hosts(
-                    ts, host_data, channels, li, rca_hosts,
-                    (T - wn) + rca_onsets, scores, wn, bn, stage,
-                    valid=vfull)
+                geom = self._evidence_geometry(channels, li, T, wn, bn)
+                if geom is not None:
+                    t_gather = time.perf_counter()
+                    X = evidence_for(geom, rca_hosts)
+                    stage["gather"] = (stage.get("gather", 0.0)
+                                       + time.perf_counter() - t_gather)
+                    diagnoses, causes = self._rca_from_evidence(
+                        ts, X, geom, rca_hosts, (T - wn) + rca_onsets,
+                        scores, stage)
             deferred_set = set(deferred)
             for h in flagged:
                 h = int(h)
@@ -489,35 +623,21 @@ class FleetMonitor:
             deferred_hosts=deferred)
 
     # ----------------------------------------------------- batched Layer 3+4
-    def _diagnose_hosts(self, ts: np.ndarray, host_data: np.ndarray,
-                        channels: Sequence[str], li: int,
-                        flagged: np.ndarray, onset_idx: np.ndarray,
-                        scores: np.ndarray, wn: int, bn: int,
-                        stage: Dict[str, float],
-                        valid: Optional[np.ndarray] = None,
-                        ) -> "Tuple[Dict[int, Diagnosis], Dict[int, List[CauseClass]]]":
-        """Explain every flagged host with one fused-kernel dispatch.
-
-        Returns ``(diagnoses, causes)``: per host the Diagnosis plus its
-        ordered verdict-cause list (primary first; co-causes appended only
-        with ``cfg.max_hypotheses > 1`` — see :class:`FleetDiagnosis`).
+    def _evidence_geometry(self, channels: Sequence[str], li: int,
+                           T: int, wn: int, bn: int,
+                           ) -> "Optional[EvidenceGeometry]":
+        """Resolve the shared RCA evidence layout for this round.
 
         All flagged hosts share the trailing RCA window [T-rn, T): an onset
         is only ever *observed* inside the trailing detection window, so
         reaching ``pre_onset_s`` before it always saturates at the snapshot
         edge — one contiguous slice covers every host, with a common
-        baseline window preceding it.  ``onset_idx`` (per flagged host,
-        from the detection gate's stats) only timestamps the events; for an
-        anomaly older than the window it clamps to the window start, the
-        best a streaming trailing-window view can report.
-        """
+        baseline window preceding it.  Returns None when the channel set
+        carries no evidence channels (verdict-less rounds)."""
         cfg = self.cfg
-        t_gather = time.perf_counter()
-        hosts, C, T = host_data.shape
         rate = cfg.rate_hz
         pre_n = int(cfg.pre_onset_s * rate)
         rca_n = int(cfg.rca_extra_s * rate)
-
         rn = int(min(T, pre_n + wn + rca_n))
         nb = int(min(bn, T - rn))
         if nb < MIN_BASELINE_N:
@@ -525,23 +645,66 @@ class FleetMonitor:
         names, idx, orient = evidence_layout(
             tuple(channels), cfg.latency_metric)
         if not names:
-            return {}, {}
-        names_pos = {n: m for m, n in enumerate(names)}
-        rows = np.concatenate(([li], idx))
-        # columnar mode gathers straight to f32 (the fused kernel's input
-        # dtype) — no f64 round-trip of the evidence slab; the oracle path
-        # keeps the seed's f64 gather
+            return None
+        return EvidenceGeometry(
+            names=tuple(names), orient=orient,
+            rows=np.concatenate(([li], idx)),
+            cols=np.arange(T - rn - nb, T), rn=rn, nb=nb)
+
+    def _gather_evidence(self, host_data: np.ndarray, flagged: np.ndarray,
+                         geom: "EvidenceGeometry",
+                         valid: Optional[np.ndarray] = None) -> np.ndarray:
+        """Stage the (len(flagged), 1 + M, nb + rn) evidence slab.
+
+        Row 0 is the latency channel, rows 1.. the evidence channels, the
+        column span ``geom.cols`` the shared baseline + RCA window.  This
+        is the per-host-independent half of Layer 3 — the sharded monitor
+        runs it on each shard and ships only these blocks (its top-K
+        candidates' evidence) across the shard boundary, never the raw
+        (hosts, C, T) telemetry.
+
+        The columnar mode gathers straight to f32 (the fused kernel's
+        input dtype) — no f64 round-trip of the evidence slab; the oracle
+        path keeps the seed's f64 gather.  Invalid evidence cells
+        (crashed collector, frozen channel) must not skew orientation
+        means or correlations: they are NaN'd out, then the last valid
+        reading is carried forward — degraded evidence, never fabricated
+        spikes."""
         gather_dtype = np.float32 if self.fast_detect else np.float64
-        cols = np.arange(T - rn - nb, T)
-        X = host_data[np.ix_(flagged, rows, cols)
-                      ].astype(gather_dtype)                    # (H, 1+M, nb+rn)
+        sel = np.ix_(flagged, geom.rows, geom.cols)
+        X = host_data[sel].astype(gather_dtype)     # (H, 1+M, nb+rn)
         if valid is not None:
-            # invalid evidence cells (crashed collector, frozen channel)
-            # must not skew orientation means or correlations: NaN them
-            # out, then carry the last valid reading forward — degraded
-            # evidence, never fabricated spikes
-            X[~valid[np.ix_(flagged, rows, cols)]] = np.nan
-        X = sanitize_mod.forward_fill(X)
+            X[~valid[sel]] = np.nan
+        return sanitize_mod.forward_fill(X)
+
+    def _rca_from_evidence(self, ts: np.ndarray, X: np.ndarray,
+                           geom: "EvidenceGeometry", flagged: np.ndarray,
+                           onset_idx: np.ndarray, scores: np.ndarray,
+                           stage: Dict[str, float],
+                           ) -> "Tuple[Dict[int, Diagnosis], Dict[int, List[CauseClass]]]":
+        """Explain every RCA'd host with one fused-kernel dispatch.
+
+        ``X`` is the gathered evidence slab (:meth:`_gather_evidence`, in
+        ``flagged`` order), ``onset_idx`` each host's absolute onset
+        sample (from the detection gate's stats) — it only timestamps the
+        events; for an anomaly older than the window it clamps to the
+        window start, the best a streaming trailing-window view can
+        report.  Returns ``(diagnoses, causes)``: per host the Diagnosis
+        plus its ordered verdict-cause list (primary first; co-causes
+        appended only with ``cfg.max_hypotheses > 1`` — see
+        :class:`FleetDiagnosis`).
+
+        This half of Layer 3 is deliberately *cross-host coupled* (the
+        orientation baseline slice depends on the minimum onset over all
+        RCA'd hosts) and therefore always runs at fleet level, on the
+        gathered candidates — never per shard."""
+        cfg = self.cfg
+        t_gather = time.perf_counter()
+        rate = cfg.rate_hz
+        nb, rn = geom.nb, geom.rn
+        names = geom.names
+        names_pos = {n: m for m, n in enumerate(names)}
+        T = int(geom.cols[-1]) + 1
         L_win = X[:, 0, nb:]                                    # (H, rn)
         Xm = X[:, 1:, :]                                        # (H, M, nb+rn)
 
@@ -549,7 +712,7 @@ class FleetMonitor:
         # same slice/orientation policy as engine._diagnose (shared helpers)
         head = int(np.min(onset_idx) - (T - rn))
         b_sl = pick_baseline_slice(nb, head, nb + rn)
-        XO = orient_about_baseline(Xm, orient, b_sl)
+        XO = orient_about_baseline(Xm, geom.orient, b_sl)
         W = XO[:, :, nb:]                                       # (H, M, rn)
         Bm = XO[:, :, b_sl]                                     # (H, M, nb')
         # multi-hypothesis co-cause corroboration over the SAME gathered
@@ -575,7 +738,8 @@ class FleetMonitor:
                                     np.maximum(1e-3 * np.abs(mb), 1e-9))
                     ok |= np.abs(Wr.mean(axis=1) - mb) / sd >= floor
                 sym_ok[cause] = ok
-        stage["gather"] = time.perf_counter() - t_gather
+        stage["gather"] = (stage.get("gather", 0.0)
+                           + time.perf_counter() - t_gather)
 
         # one fused dispatch: spike scores + max-|rho| + arg-max lag
         t_kernel = time.perf_counter()
@@ -628,3 +792,25 @@ class FleetMonitor:
             causes[h] = cl
         stage["assemble"] = time.perf_counter() - t_assemble
         return out, causes
+
+
+@dataclasses.dataclass(frozen=True)
+class EvidenceGeometry:
+    """The round-shared RCA evidence layout (:meth:`FleetMonitor.
+    _evidence_geometry`): which slab rows and columns every RCA'd host's
+    evidence block is cut from.  Shipping this to shards instead of
+    recomputing it there keeps the shard-side gather and the single-slab
+    gather trivially identical."""
+
+    #: evidence channel names, fused-kernel metric order
+    names: Tuple[str, ...]
+    #: per-metric orientation signs (``engine.evidence_layout``)
+    orient: np.ndarray
+    #: slab row indices to gather: ``[latency, *evidence_channels]``
+    rows: np.ndarray
+    #: slab column indices: the shared baseline + RCA window, contiguous
+    cols: np.ndarray
+    #: RCA window length in samples
+    rn: int
+    #: baseline samples preceding the RCA window (0 = too thin, skipped)
+    nb: int

@@ -15,8 +15,20 @@ from repro.telemetry.collectors import DeviceMetricSource, ProcCollector
 
 
 class StepTelemetry:
+    """Training-loop telemetry: step timing plus a background host agent.
+
+    ``step_begin``/``step_end`` bracket each training step and push the
+    measured latency (and any phase marks) into the device source;
+    ``start`` runs the host-probe agent at ``rate_hz`` in the background.
+    The agent's ring is what a :class:`~repro.monitor.aggregator.
+    FleetAggregator` later stages for fleet diagnosis.
+    """
+
     def __init__(self, rate_hz: float = 100.0, history_s: float = 300.0,
                  use_proc: bool = True, background: bool = True):
+        """Build the agent; ``background=False`` samples only on
+        ``step_end`` (deterministic tests), ``use_proc=False`` drops the
+        /proc collector for device-only telemetry."""
         self.device_src = DeviceMetricSource()
         collectors = [self.device_src]
         if use_proc:
@@ -28,11 +40,13 @@ class StepTelemetry:
         self._step_t0: Optional[float] = None
 
     def start(self) -> None:
+        """Start the background sampling thread (idempotent)."""
         if self._background and not self._running:
             self.agent.run_background()
             self._running = True
 
     def stop(self):
+        """Stop background sampling; returns the agent's stats."""
         if self._running:
             self.agent.stop()
             self._running = False
@@ -40,6 +54,7 @@ class StepTelemetry:
 
     # -- step instrumentation ------------------------------------------------
     def step_begin(self) -> None:
+        """Stamp the start of a training step."""
         self._step_t0 = time.perf_counter()
 
     def step_end(self, **phase_ms: float) -> float:
@@ -62,6 +77,7 @@ class StepTelemetry:
         return ms
 
     def wrap(self, step_fn: Callable) -> Callable:
+        """Return ``step_fn`` bracketed by ``step_begin``/``step_end``."""
         def wrapped(*a, **kw):
             self.step_begin()
             out = step_fn(*a, **kw)

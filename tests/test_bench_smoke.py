@@ -61,6 +61,20 @@ def test_fleet_family_smoke():
 
 
 @pytest.mark.bench_smoke
+def test_shard_family_smoke():
+    """Sharded fleet rows at tiny sizes: the CI-gated byte-exact parity
+    bit (ragged shards, quarantine, top-K deferral, oracle re-visit all
+    covered) and a bounded cross-shard traffic fraction."""
+    rows = fleetbench.shard_rows(parity_hosts=24, storm_hosts=(64,),
+                                 shard_hosts=16, reps=1)
+    _check(rows, "fleet/shard")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["fleet/shard_parity"] == 1.0
+    assert 0.0 < vals["fleet/shard_xfer_frac/B64"] < 1.0
+    assert vals["fleet/shard_hosts_per_s/B64"] > 0
+
+
+@pytest.mark.bench_smoke
 def test_live_family_smoke():
     """Aggregator staging + writer-storm retry loop at tiny sizes — the
     live fleet path's fail-fast canary."""

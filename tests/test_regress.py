@@ -201,6 +201,7 @@ def test_check_restart_rows():
 
 def test_check_bench_parity_rows():
     good = [("fleet/detect_parity/B8", 1.0, ""),
+            ("fleet/shard_parity", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),
             ("eval/store_pred_parity", 1.0, ""),
             ("eval/sweep_parity", 1.0, "")]
@@ -208,8 +209,23 @@ def test_check_bench_parity_rows():
     bad = regress.check_bench_parity(
         [("fleet/detect_parity/B8", 0.5, "")] + good[1:])
     assert any("detect_parity" in m for m in bad)
-    missing = regress.check_bench_parity(good[:2] + good[3:])
+    missing = regress.check_bench_parity(good[:3] + good[4:])
     assert any("store_pred_parity" in m for m in missing)
+
+
+def test_tampered_shard_parity_fails():
+    """The sharded-vs-single-slab fingerprint bit is gated: a sharded
+    round that drifts from the single-slab verdict must fail CI, and so
+    must a run that silently stops emitting the row."""
+    rows = [("fleet/detect_parity/B8", 1.0, ""),
+            ("fleet/shard_parity", 0.0, ""),
+            ("eval/pred_parity", 1.0, ""),
+            ("eval/store_pred_parity", 1.0, ""),
+            ("eval/sweep_parity", 1.0, "")]
+    bad = regress.check_bench_parity(rows)
+    assert any("fleet/shard_parity" in m for m in bad)
+    gone = regress.check_bench_parity(rows[:1] + rows[2:])
+    assert any("no row matched fleet/shard_parity" in m for m in gone)
 
 
 def test_tampered_sweep_parity_fails():

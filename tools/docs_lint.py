@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Docstring-coverage lint (interrogate-style, stdlib-only).
+
+Walks the given files/directories, parses every ``*.py`` with ``ast``, and
+counts docstrings on the public API surface: the module itself, public
+classes, and public functions/methods (a leading underscore or a dunder
+other than ``__init__`` is private; nested ``def``s are implementation
+detail and are skipped).  An ``__init__`` counts only when it has a
+non-trivial body — a bare dataclass-style pass-through has nothing to say.
+
+Exit status is non-zero when coverage falls below ``--fail-under``, which
+is how CI pins the floor so documentation cannot silently regress:
+
+    python tools/docs_lint.py src/repro/monitor --fail-under 100
+    python tools/docs_lint.py src benchmarks tools --fail-under 90 -v
+
+``-v`` lists every undocumented definition as ``path:line  kind name``.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+#: (path, line, kind, qualname, documented)
+Record = Tuple[str, int, str, str, bool]
+
+
+def _is_public(name: str) -> bool:
+    if name.startswith("__") and name.endswith("__"):
+        return name == "__init__"
+    return not name.startswith("_")
+
+
+def _trivial_init(node: ast.FunctionDef) -> bool:
+    """An ``__init__`` whose body is only pass/docstring/attr-assigns of
+    its own arguments — nothing a docstring would add over the signature."""
+    if node.name != "__init__":
+        return False
+    body = node.body
+    if body and isinstance(body[0], ast.Expr) and isinstance(
+            body[0].value, ast.Constant):
+        body = body[1:]
+    return all(isinstance(s, (ast.Pass, ast.Assign, ast.AnnAssign))
+               for s in body)
+
+
+def _walk_defs(tree: ast.Module, path: str) -> Iterator[Record]:
+    yield (path, 1, "module", os.path.basename(path),
+           ast.get_docstring(tree) is not None)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name):
+                yield (path, node.lineno, "function", node.name,
+                       ast.get_docstring(node) is not None)
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            yield (path, node.lineno, "class", node.name,
+                   ast.get_docstring(node) is not None)
+            for sub in node.body:
+                if not isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    continue
+                if not _is_public(sub.name) or _trivial_init(sub):
+                    continue
+                yield (path, sub.lineno, "method",
+                       f"{node.name}.{sub.name}",
+                       ast.get_docstring(sub) is not None)
+
+
+def collect(paths: List[str]) -> List[Record]:
+    """All public-API docstring records under ``paths`` (files or dirs)."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git"))
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    records: List[Record] = []
+    for f in files:
+        with open(f, "r", encoding="utf-8") as fh:
+            try:
+                tree = ast.parse(fh.read(), filename=f)
+            except SyntaxError as e:
+                raise SystemExit(f"docs_lint: cannot parse {f}: {e}")
+        records.extend(_walk_defs(tree, f))
+    return records
+
+
+def coverage(records: List[Record]) -> float:
+    """Documented fraction in percent (100.0 for an empty surface)."""
+    if not records:
+        return 100.0
+    return 100.0 * sum(1 for r in records if r[4]) / len(records)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when public-API docstring coverage regresses.")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--fail-under", type=float, default=90.0,
+                    help="minimum coverage percent (default 90)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="list undocumented definitions")
+    args = ap.parse_args(argv)
+
+    records = collect(args.paths)
+    missing = [r for r in records if not r[4]]
+    if args.verbose:
+        for path, line, kind, name, _ in missing:
+            print(f"{path}:{line}  {kind} {name}")
+    pct = coverage(records)
+    ok = pct >= args.fail_under
+    status = "ok" if ok else "FAIL"
+    print(f"docs_lint: {len(records) - len(missing)}/{len(records)} "
+          f"documented = {pct:.1f}% (fail-under {args.fail_under:g}) "
+          f"[{status}]")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
