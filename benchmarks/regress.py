@@ -44,6 +44,7 @@ from typing import Dict, List
 PARITY_ROW_PREFIXES = (
     "fleet/detect_parity",
     "fleet/shard_parity",
+    "fleet/incremental_parity",
     "eval/pred_parity",
     "eval/store_pred_parity",
     "eval/sweep_parity",
@@ -272,6 +273,19 @@ def check_bench_parity(rows) -> List[str]:
     return bad
 
 
+def check_committed_bench(doc: Dict[str, object], *,
+                          label: str) -> List[str]:
+    """Parity rows of the committed BENCH_fleet.json artifact.
+
+    The fresh run proves this commit's *code*; this proves the committed
+    *artifact* was produced by it — a stale or hand-edited JSON (parity
+    row perturbed or deleted) fails even when the code is healthy."""
+    rows = [(name, blk.get("value"), blk.get("derived", ""))
+            for name, blk in doc.items() if isinstance(blk, dict)]
+    return [msg.replace("fresh bench", label)
+            for msg in check_bench_parity(rows)]
+
+
 def fresh_failures() -> List[str]:
     """Re-prove the invariants on this commit's code at tiny sizes."""
     from benchmarks import fleetbench, scorecard
@@ -280,6 +294,7 @@ def fresh_failures() -> List[str]:
                                  sequential_baseline=False)
     rows += fleetbench.shard_rows(parity_hosts=24, storm_hosts=(48,),
                                   shard_hosts=16, reps=1)
+    rows += fleetbench.incremental_rows(batch_sizes=(8,), shard_batch=0)
     rows += fleetbench.eval_rows(n_per_class=1, reps=1)
     rows += fleetbench.sweep_slab_rows(n_per_class=1, reps=1,
                                        fleet_hosts=32)
@@ -295,6 +310,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--artifact", default="EVAL_scorecard.json",
                     help="committed scorecard to validate")
+    ap.add_argument("--bench-artifact", default="BENCH_fleet.json",
+                    help="committed fleet bench artifact to validate")
     ap.add_argument("--skip-fresh", action="store_true",
                     help="validate the committed artifact only")
     args = ap.parse_args(argv)
@@ -308,6 +325,15 @@ def main(argv=None) -> int:
         committed = None
     if committed is not None:
         failures += check_scorecard(committed, label=args.artifact)
+    try:
+        with open(args.bench_artifact) as f:
+            bench_doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        failures.append(f"cannot read {args.bench_artifact}: {e}")
+        bench_doc = None
+    if bench_doc is not None:
+        failures += check_committed_bench(bench_doc,
+                                          label=args.bench_artifact)
     if not args.skip_fresh:
         failures += fresh_failures()
 

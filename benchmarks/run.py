@@ -54,6 +54,8 @@ def smoke() -> list:
                                         sequential_baseline=False))
     rows += _emit(fleetbench.shard_rows(parity_hosts=24, storm_hosts=(64,),
                                         shard_hosts=16, reps=1))
+    rows += _emit(fleetbench.incremental_rows(batch_sizes=(8,),
+                                              shard_batch=0))
     rows += _emit(fleetbench.live_rows(n_hosts=4, reps=1, storm_s=0.2))
     rows += _emit(fleetbench.eval_rows(n_per_class=1, reps=1))
     rows += _emit(fleetbench.chaos_rows(reps=1))
@@ -105,6 +107,7 @@ def main() -> None:
         rows += _emit(fleetbench.sweep_slab_rows())
         rows += _emit(fleetbench.fleet_rows())
         rows += _emit(fleetbench.shard_rows())
+        rows += _emit(fleetbench.incremental_rows())
         rows += _emit(fleetbench.live_rows())
         rows += _emit(fleetbench.eval_rows())
         rows += _emit(fleetbench.chaos_rows())

@@ -1,0 +1,279 @@
+"""Incremental O(delta) streaming moments for the live 100 Hz detect path.
+
+The fleet monitor's Layer-2 round needs per-host baseline moments
+(mu, sd) over the trailing ``bn`` ticks every round.  Recomputing them
+directly is O(rows * bn) per round even though the window is mostly
+unchanged — the cost that left quiet-fleet detect at 0.5-0.7x vs the
+oracle at B <= 256 (PR 5's recorded price).  This module replaces that
+pass with persistent per-(host, block) state so a round that appends
+``delta`` ticks pays O(delta) new work plus an O(bn / block) combine.
+
+Design — block-anchored exact moments
+-------------------------------------
+Plain f64 running sums (add the new tick, subtract the evicted one)
+drift in the last ulp and can never be bitwise-compared against a fresh
+recomputation.  Instead, the absolute tick axis is partitioned into
+fixed blocks of ``g = REPRO_MOMENT_BLOCK`` ticks aligned to the absolute
+tick index, and the cache holds one f64 ``(sum, sum_of_squares)`` pair
+per (host, block).  Each entry is a pure function of that block's values
+at fixed absolute positions — independent of the current window bounds,
+the round it was computed in, and every other block.  Baseline moments
+are then a head partial + the cached full blocks + a tail partial,
+combined in a fixed order.  Consequences, all by construction:
+
+* an incrementally-carried cache entry is bitwise-identical to a
+  from-scratch rebuild (same values, same fixed-length reduction);
+* window-bound changes (``wn``/``bn`` growing during warmup) never
+  invalidate the cache — only the combine range moves;
+* shard-local advancement, restore-then-replay, and single-slab vs
+  sharded execution all land on identical moments.
+
+The periodic **re-anchor** (every ``REPRO_REANCHOR_ROUNDS`` rounds)
+recomputes every needed block from scratch and bitwise-compares against
+the carried entries before adopting the rebuild — a cache-coherence
+proof, not a drift tolerance.  Any mismatch (state-machine bug, memory
+corruption, a mutated slab) trips :attr:`IncrementalMoments.parity`,
+which CI gates as ``fleet/incremental_parity == 1.0``.  Chaos/masked
+rounds, ``reset_host``, and checkpoint restore *invalidate* the affected
+rows instead — the next clean round rebuilds them from scratch, which is
+the forced re-anchor.
+
+Decision safety: the moments differ from the direct ``mean``/``std``
+pass by ~1e-12 relative at most; every consumer routes them through the
+sweep's epsilon marginality guard (rows within ``SWEEP_GUARD_EPS`` of
+the threshold are re-decided by the exact f64 oracle), so verdicts stay
+byte-exact against ``detect_rows`` exactly as the direct path's do.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import spike as spike_mod
+from repro.kernels import tuning
+
+__all__ = ["IncrementalMoments"]
+
+
+class IncrementalMoments:
+    """Persistent per-(host, block) baseline-moment state.
+
+    One instance serves a whole fleet: rows are addressed by a global
+    host index (``base + local`` for sharded slabs), the block cache is
+    a circular (rows, ncap) array keyed by absolute block index modulo
+    capacity, and invalidation is per-row.  All methods are pure numpy;
+    nothing here is serialized — checkpoints stay flat and a restored
+    monitor starts cold (see :meth:`invalidate_all`).
+    """
+
+    def __init__(self, block: Optional[int] = None,
+                 reanchor_rounds: Optional[int] = None,
+                 cap_ticks: Optional[int] = None):
+        """``block``/``reanchor_rounds`` override the env knobs
+        (``REPRO_MOMENT_BLOCK`` / ``REPRO_REANCHOR_ROUNDS``);
+        ``cap_ticks`` hints the largest baseline length expected so the
+        circular cache is sized once instead of growing during warmup.
+        """
+        self.block = int(tuning.moment_block(block))
+        self.reanchor_every = int(tuning.reanchor_rounds(reanchor_rounds))
+        self._cap_hint = int(cap_ticks) if cap_ticks else 0
+        self._rows = 0
+        self._ncap = 0
+        self._sum = np.zeros((0, 0), np.float64)
+        self._sumsq = np.zeros((0, 0), np.float64)
+        self._bid = np.full((0, 0), -1, np.int64)
+        # stats (monotonic; snapshot via .stats())
+        self.rounds = 0
+        self.reanchors = 0
+        self.forced_invalidations = 0
+        self.parity_failures = 0
+        self.blocks_computed = 0
+        self.blocks_cached = 0
+        self.last_round_computed = 0
+        self.last_round_rebuilt_rows = 0
+
+    # ------------------------------------------------------------------
+    # state management
+    # ------------------------------------------------------------------
+    @property
+    def parity(self) -> float:
+        """1.0 while every re-anchor bitwise-matched the carried state."""
+        return 1.0 if self.parity_failures == 0 else 0.0
+
+    def invalidate(self, rows) -> None:
+        """Cold-invalidate specific global row indices (chaos/masked
+        rounds, ``reset_host``): their next clean round rebuilds every
+        block from scratch — the forced per-row re-anchor."""
+        rows = np.asarray(rows, np.intp)
+        rows = rows[(rows >= 0) & (rows < self._rows)]
+        if rows.size:
+            self._bid[rows, :] = -1
+            self.forced_invalidations += int(rows.size)
+
+    def invalidate_all(self) -> None:
+        """Drop the whole cache (checkpoint restore, config change).
+
+        Moments are never serialized, so a warm restart lands here: the
+        first post-restore round recomputes from scratch, keeping replay
+        parity trivially intact.
+        """
+        if self._rows:
+            self.forced_invalidations += self._rows
+        self._bid[:, :] = -1
+
+    def _ensure(self, rows: int, bn: int) -> None:
+        """Grow the (rows, ncap) cache to cover ``rows`` hosts and a
+        ``bn``-tick baseline, preserving existing entries when only the
+        row axis grows (shards arriving) and invalidating on capacity
+        growth (rare: baseline outgrew the hint)."""
+        need_cap = max(bn // self.block + 3, 8)
+        if self._cap_hint:
+            need_cap = max(need_cap, self._cap_hint // self.block + 3)
+        if need_cap > self._ncap:
+            self._ncap = need_cap
+            self._sum = np.zeros((max(rows, self._rows), need_cap),
+                                 np.float64)
+            self._sumsq = np.zeros_like(self._sum)
+            self._bid = np.full(self._sum.shape, -1, np.int64)
+            self._rows = self._sum.shape[0]
+            return
+        if rows > self._rows:
+            grow = max(rows, self._rows * 2)
+            for name in ("_sum", "_sumsq", "_bid"):
+                old = getattr(self, name)
+                new = np.full((grow, self._ncap),
+                              -1 if name == "_bid" else 0.0, old.dtype)
+                new[:self._rows] = old
+                setattr(self, name, new)
+            self._rows = grow
+
+    # ------------------------------------------------------------------
+    # the per-round pass
+    # ------------------------------------------------------------------
+    def moments(self, tail: np.ndarray, tick_end: int, wn: int, bn: int,
+                base: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """Advance state through one round and return ``(mu, sd)``.
+
+        ``tail`` is the (n, wn + bn) trailing slab whose last column is
+        absolute tick ``tick_end - 1`` (``tick_end`` = the exclusive
+        end-tick the caller derived from the round's timestamps); rows
+        occupy global indices ``base .. base + n``.  Cached blocks inside
+        the baseline range are reused, missing ones (the round's delta,
+        or everything for invalidated rows) are computed from the slab,
+        and every ``reanchor_every``-th call instead rebuilds all blocks
+        from scratch, bitwise-compares them against the carried entries
+        (recording any mismatch in :attr:`parity_failures`) and adopts
+        the rebuild.  Returns f64 arrays of length n, ``sd`` already
+        sigma-floored exactly as the direct detect path floors it.
+        """
+        tail = np.asarray(tail)
+        n, t = tail.shape
+        if t != wn + bn:
+            raise ValueError(f"tail {tail.shape} vs wn+bn={wn + bn}")
+        e = int(tick_end)
+        g = self.block
+        s, b_end = e - wn - bn, e - wn          # baseline = ticks [s, b_end)
+        c_off = e - t                           # slab col 0 = abs tick c_off
+        self._ensure(base + n, bn)
+        rows = np.arange(base, base + n)
+        self.rounds += 1
+        reanchor = (self.reanchor_every > 0
+                    and self.rounds % self.reanchor_every == 0)
+        if reanchor:
+            self.reanchors += 1
+        # full blocks strictly inside the baseline
+        k0 = -(-s // g)
+        k1 = b_end // g
+        nblk = max(0, k1 - k0)
+        computed = 0
+        ks = np.arange(k0, k1)
+        slots = ks % max(self._ncap, 1)
+        ri = rows[:, None]
+        have = (self._bid[ri, slots[None, :]] == ks[None, :]
+                if nblk else np.zeros((n, 0), bool))
+        rebuilt_rows = (~have).any(axis=1) if nblk else np.zeros(n, bool)
+        missing = np.flatnonzero(~have.all(axis=0))
+        if nblk and (reanchor or missing.size * 4 > nblk):
+            # bulk path: one reshaped reduction over every block — the
+            # re-anchor / cold-rebuild cost, bitwise-identical per block
+            # to the delta path's per-block reduction (same contiguous
+            # 64-element pairwise sum, only batched)
+            off0 = k0 * g - c_off
+            view = tail[:, off0:off0 + nblk * g].astype(np.float64)
+            view = view.reshape(n, nblk, g)
+            bs_all = view.sum(axis=2)
+            bss_all = (view * view).sum(axis=2)
+            if reanchor:
+                bad = have & ((self._sum[ri, slots] != bs_all)
+                              | (self._sumsq[ri, slots] != bss_all))
+                self.parity_failures += int(bad.sum())
+            self._sum[ri, slots] = bs_all
+            self._sumsq[ri, slots] = bss_all
+            self._bid[ri, slots] = ks[None, :]
+            computed = n * nblk
+            blk_parts, blk_parts_sq = bs_all, bss_all
+        else:
+            # delta path: only the round's new / invalidated blocks are
+            # reduced; everything else is one gathered cache read
+            for j in missing:
+                k = k0 + int(j)
+                slot = int(slots[j])
+                need = ~have[:, j]
+                nr = rows[need]
+                c0 = k * g - c_off
+                seg = tail[need, c0:c0 + g].astype(np.float64)
+                bs = seg.sum(axis=1)
+                bss = (seg * seg).sum(axis=1)
+                self._sum[nr, slot] = bs
+                self._sumsq[nr, slot] = bss
+                self._bid[nr, slot] = k
+                computed += int(need.sum())
+            blk_parts = self._sum[ri, slots]
+            blk_parts_sq = self._sumsq[ri, slots]
+            self.blocks_cached += int(have.sum())
+        # head/tail partial blocks, recomputed every round from the slab
+        if nblk:
+            h_lo, h_hi = s, k0 * g
+            t_lo, t_hi = k1 * g, b_end
+        else:
+            h_lo, h_hi = s, b_end
+            t_lo, t_hi = b_end, b_end
+        parts = np.zeros((n, nblk + 2), np.float64)
+        parts_sq = np.zeros((n, nblk + 2), np.float64)
+        if h_hi > h_lo:
+            seg = tail[:, h_lo - c_off:h_hi - c_off].astype(np.float64)
+            parts[:, 0] = seg.sum(axis=1)
+            parts_sq[:, 0] = (seg * seg).sum(axis=1)
+        if t_hi > t_lo:
+            seg = tail[:, t_lo - c_off:t_hi - c_off].astype(np.float64)
+            parts[:, -1] = seg.sum(axis=1)
+            parts_sq[:, -1] = (seg * seg).sum(axis=1)
+        parts[:, 1:nblk + 1] = blk_parts
+        parts_sq[:, 1:nblk + 1] = blk_parts_sq
+        ssum = parts.sum(axis=1)
+        ssq = parts_sq.sum(axis=1)
+        mu = ssum / bn
+        var = np.maximum(ssq / bn - mu * mu, 0.0)
+        sd = np.maximum(np.sqrt(var),
+                        np.maximum(spike_mod.SIGMA_FLOOR_ABS,
+                                   spike_mod.SIGMA_FLOOR_REL * np.abs(mu)))
+        self.blocks_computed += computed
+        self.last_round_computed = computed
+        self.last_round_rebuilt_rows = int(rebuilt_rows.sum())
+        return mu, sd
+
+    def stats(self) -> dict:
+        """Counters snapshot (rounds, re-anchors, parity, cache traffic)
+        for monitor stats surfaces and the bench rows."""
+        return {
+            "rounds": self.rounds,
+            "reanchors": self.reanchors,
+            "forced_invalidations": self.forced_invalidations,
+            "parity_failures": self.parity_failures,
+            "parity": self.parity,
+            "blocks_computed": self.blocks_computed,
+            "blocks_cached": self.blocks_cached,
+            "last_round_computed": self.last_round_computed,
+            "last_round_rebuilt_rows": self.last_round_rebuilt_rows,
+        }

@@ -32,25 +32,44 @@ def _detect_tail(tail32: np.ndarray, patch_win: np.ndarray,
                  patch_base: np.ndarray, wn: int, bn: int,
                  threshold: float, persistence: float,
                  use_kernel: bool, interpret: bool, exact: bool,
-                 device=None,
+                 device=None, moments=None,
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Single-tick sweep over the (H, bn + wn) trailing slab.
 
     ``patch_win``/``patch_base`` are the caller's original (H, Nw)/(H, Nb)
     arrays, any dtype — only epsilon-marginal rows are ever upcast from
     them for the exact ``detect_rows`` re-decision.
+
+    ``moments`` (mu, sd) — each (H,) f64, sd already sigma-floored —
+    skips the O(H * bn) direct moment pass (the incremental streaming
+    state supplies these at O(delta)); marginal rows are still re-decided
+    through the f64 oracle from the raw patch, so epsilon-close moments
+    cannot move a decision.
     """
     H, T = tail32.shape
-    # detect_rows' f64 moments, bit for bit: accumulating the f32 rows in
-    # f64 (dtype=) adds each exactly-representable element in the same
-    # pairwise order as upcasting first, without the (H, Nb) f64 copies
-    mu = patch_base.mean(axis=1, dtype=np.float64)
-    sd = np.maximum(patch_base.std(axis=1, dtype=np.float64),
-                    np.maximum(spike_mod.SIGMA_FLOOR_ABS,
-                               spike_mod.SIGMA_FLOOR_REL * np.abs(mu)))
-    ticks = np.array([T], np.int64)
+    if moments is not None:
+        mu, sd = (np.asarray(m, np.float64).reshape(H) for m in moments)
+    else:
+        # detect_rows' f64 moments, bit for bit: accumulating the f32 rows
+        # in f64 (dtype=) adds each exactly-representable element in the
+        # same pairwise order as upcasting first, without (H, Nb) f64 copies
+        mu = patch_base.mean(axis=1, dtype=np.float64)
+        sd = np.maximum(patch_base.std(axis=1, dtype=np.float64),
+                        np.maximum(spike_mod.SIGMA_FLOOR_ABS,
+                                   spike_mod.SIGMA_FLOOR_REL * np.abs(mu)))
+    if moments is not None:
+        # with moments supplied the sweep never touches the baseline
+        # columns — dispatch on the window slice only, so the staged
+        # copy and the kernel's slab stay O(wn) instead of O(wn + bn)
+        # (onsets are window-relative either way; verified equivalent
+        # for both kernel and reference dispatch)
+        disp, bn_d = np.ascontiguousarray(tail32[:, bn:]), 0
+        ticks = np.array([wn], np.int64)
+    else:
+        disp, bn_d = tail32, bn
+        ticks = np.array([T], np.int64)
     fire, score, onset, marg = sweep_ops.sweep_rows(
-        tail32, wn, bn, ticks, threshold, persistence,
+        disp, wn, bn_d, ticks, threshold, persistence,
         moments=(mu[:, None], sd[:, None]), argmax_fallback=True,
         use_kernel=use_kernel, interpret=interpret, device=device)
     fire, score, onset, marg = (fire[:, 0], score[:, 0], onset[:, 0],
@@ -101,6 +120,7 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
                       interpret: bool = True, exact: bool = True,
                       valid: Optional[np.ndarray] = None,
                       force_oracle: bool = False, device=None,
+                      moments=None,
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """:func:`detect_hosts` over a trailing latency slab.
 
@@ -130,6 +150,12 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
     ``device`` pins the fast path's sweep dispatch to one ``jax.Device``
     (see :func:`repro.kernels.sweep.ops.sweep_rows`); None keeps the
     default placement.
+
+    ``moments`` (mu, sd) f64 arrays of length H pre-empt the direct
+    baseline moment pass on the clean fast path (see
+    :class:`repro.core.rolling.IncrementalMoments`); ignored on the
+    masked/forced oracle path, which always derives exact masked moments
+    itself.
     """
     tail = np.asarray(tail)
     if tail.ndim != 2 or tail.shape[-1] != wn + bn:
@@ -156,5 +182,5 @@ def detect_hosts_slab(tail, wn: int, bn: int, threshold: float = 3.0,
     fire, score, onset = _detect_tail(
         tail32, patch[:, bn:], patch[:, :bn], int(wn), int(bn),
         float(threshold), float(persistence), bool(use_kernel),
-        bool(interpret), bool(exact), device=device)
+        bool(interpret), bool(exact), device=device, moments=moments)
     return fire.astype(bool), score, onset.astype(np.intp)

@@ -25,6 +25,8 @@ DEFAULT_SWEEP_BLOCK_R = 8     # latency rows per sweep-kernel grid cell
 DEFAULT_SHARD_HOSTS = 1024    # hosts per fleet-monitor shard slab
 DEFAULT_RACK_SHARDS = 8       # shards per rack in the two-level reduce
 DEFAULT_SHARD_TOPK = 16       # evidence candidates shipped per shard/rack
+DEFAULT_REANCHOR_ROUNDS = 32  # rounds between exact-f64 moment re-anchors
+DEFAULT_MOMENT_BLOCK = 64     # ticks per cached incremental-moment block
 
 #: candidates the interpret-mode microbench sweeps (hardware starting grid)
 BLOCK_M_CANDIDATES = (4, 8, 16)
@@ -113,6 +115,41 @@ def rack_shards(override: int | None = None) -> int:
     if override is not None:
         return int(override)
     return _env_int("REPRO_RACK_SHARDS", DEFAULT_RACK_SHARDS)
+
+
+def reanchor_rounds(override: int | None = None) -> int:
+    """Rounds between exact-f64 moment re-anchors (``REPRO_REANCHOR_ROUNDS``).
+
+    The incremental streaming-moment state (core/rolling.py) is rebuilt
+    from scratch and bitwise-compared against the incrementally-maintained
+    cache every this-many monitor rounds — the drift guard that turns
+    "incremental must equal from-scratch" from a hope into a continuously
+    re-proven invariant (``fleet/incremental_parity``).  Lower values
+    re-prove more often at O(rows * bn) per re-anchor; the block-anchored
+    design makes equality exact by construction, so the default re-checks
+    sparsely.  Forced re-anchors (chaos rounds, agent restarts, checkpoint
+    restores) ignore this cadence.
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_REANCHOR_ROUNDS", DEFAULT_REANCHOR_ROUNDS)
+
+
+def moment_block(override: int | None = None) -> int:
+    """Ticks per cached incremental-moment block (``REPRO_MOMENT_BLOCK``).
+
+    The incremental moments partition the absolute tick axis into fixed
+    blocks of this many ticks and cache one f64 (sum, sum-of-squares)
+    pair per (host, block).  Each block entry is a pure function of that
+    block's values at fixed absolute positions — which is what makes the
+    incremental state bitwise-identical to a from-scratch rebuild.  A
+    monitor round pays O(delta) new-block work plus O(bn / block)
+    combine; smaller blocks shrink the per-round head/tail partial
+    reductions (<= 2 * block ticks) while growing the combine fan-in.
+    """
+    if override is not None:
+        return int(override)
+    return _env_int("REPRO_MOMENT_BLOCK", DEFAULT_MOMENT_BLOCK)
 
 
 def shard_topk(override: int | None = None) -> int:

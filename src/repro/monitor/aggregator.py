@@ -49,6 +49,9 @@ class AggregatorStats:
     hung_agents: int = 0        # agent threads that outlived stop()'s join
     agent_restarts: int = 0     # agents re-armed or replaced in place
     host_resets: int = 0        # monitor reset_host calls delivered
+    unchanged_skips: int = 0    # rows reused untouched (seqlock watermark)
+    delta_reads: int = 0        # rows advanced by a delta read, not T ticks
+    full_restages: int = 0      # live rows that took the full T-tick copy
 
 
 @dataclasses.dataclass
@@ -107,6 +110,14 @@ class FleetAggregator:
         self._scratch = np.empty((C, T), np.float32)
         self._ts_scratch = np.empty(T, np.float64)
         self._valid = np.ones((H, C, T), bool)
+        # delta-staging bookkeeping: a row whose last stage was a full
+        # clean T-tick window (no trim, no backfill, no masking since)
+        # records the seqlock sequence + newest staged tick; the next
+        # assembly then reuses the row untouched (sequence unchanged) or
+        # left-shifts it and reads only the delta ticks out of the ring
+        self._staged_seq = np.full(H, -1, np.int64)
+        self._staged_last = np.full(H, -np.inf)
+        self._staged_full = np.zeros(H, bool)
         self.stats = AggregatorStats()
         self.last_snapshot: Optional[FleetSnapshot] = None
         self._stopped = False
@@ -164,6 +175,7 @@ class FleetAggregator:
             a.run_background()
         self.stats.agent_restarts += 1
         self._pending_resets.add(int(host))
+        self._staged_full[int(host)] = False  # fresh probe, fresh stage
 
     def replace_agent(self, host: int, agent: TelemetryAgent,
                       timeout: float = 5.0) -> TelemetryAgent:
@@ -188,9 +200,62 @@ class FleetAggregator:
             agent.run_background()
         self.stats.agent_restarts += 1
         self._pending_resets.add(h)
+        self._staged_full[h] = False  # new ring: staged row is orphaned
         return old
 
     # ------------------------------------------------------------- assembly
+    def _stage_delta(self, h: int, agent: TelemetryAgent, skip: int,
+                     count: int, seq: int, t_common: float, period: float,
+                     ) -> tuple:
+        """O(delta) staging attempt for one live host row.
+
+        Preconditions for even trying: the row's previous stage was a
+        full clean T-tick window (``_staged_full``), this round wants the
+        un-skipped steady-state alignment (``skip == 0``), and the ring
+        holds a full window.  Then either the seqlock sequence is
+        unchanged — nothing was pushed, the staged row *is* this round's
+        window, zero ring reads — or the new right edge sits a whole
+        number of ticks ahead: the row (values, timestamps, validity) is
+        left-shifted and only the ``delta`` new columns are read out of
+        the ring.  Both outcomes are bitwise-identical to the full
+        restage they replace (ring history is append-only, so the
+        overlapping columns could not have changed).  Any gap, torn
+        read, or off-grid timestamp voids the attempt — the caller falls
+        back to the full restage.  Returns ``(staged, retries)``.
+        """
+        T = self.window_n
+        if not self._staged_full[h] or skip != 0 or count < T:
+            return False, 0
+        if seq >= 0 and seq == self._staged_seq[h] \
+                and abs(self._staged_last[h] - t_common) <= 0.5 * period:
+            self.stats.unchanged_skips += 1
+            return True, 0
+        gap = t_common - self._staged_last[h]
+        di = int(round(gap / period))
+        if not (0 < di < T and abs(gap - di * period) <= 0.25 * period):
+            return False, 0
+        row, tsr, vrow = self._slab[h], self._ts_rows[h], self._valid[h]
+        # overlapping left-shift: numpy buffers overlapping assignments,
+        # so this is the memmove it looks like
+        row[:, :T - di] = row[:, di:]
+        tsr[:T - di] = tsr[di:]
+        vrow[:, :T - di] = vrow[:, di:]
+        ts_n, _, r = agent.ring.read_window(di, out_ts=tsr[T - di:],
+                                            out=row[:, T - di:])
+        if (ts_n.size != di
+                or abs(float(ts_n[0]) - (self._staged_last[h] + period))
+                > 0.25 * period
+                or abs(float(ts_n[-1]) - t_common) > 0.5 * period):
+            # writer raced past the watermark or ticks were dropped: the
+            # shifted row no longer lines up — void it and restage fully
+            self._staged_full[h] = False
+            return False, r
+        np.isfinite(row[:, T - di:], out=vrow[:, T - di:])
+        self._staged_seq[h] = seq
+        self._staged_last[h] = float(tsr[-1])
+        self.stats.delta_reads += 1
+        return True, r
+
     def assemble(self) -> FleetSnapshot:
         """Stage every host's trailing window into the (hosts, C, T) slab.
 
@@ -204,12 +269,14 @@ class FleetAggregator:
         retries = 0
         giveups0 = sum(a.ring.torn_giveups for a in self.agents)
 
-        # phase 1: consistent (count, newest-ts) probe per host to pick the
-        # common right edge of the fleet window
+        # phase 1: consistent (seq, count, newest-ts) probe per host to
+        # pick the common right edge of the fleet window; the seqlock
+        # sequence doubles as the delta-staging change detector
         counts = np.zeros(H, np.int64)
         lasts = np.full(H, -np.inf)
+        seqs = np.full(H, -1, np.int64)
         for h, a in enumerate(self.agents):
-            counts[h], lasts[h] = a.ring.peek()
+            seqs[h], counts[h], lasts[h] = a.ring.watermark()
         have = counts >= max(self.min_samples, 1)
         if not have.any():
             snap = FleetSnapshot(ts=np.zeros(0), slab=self._slab[:0],
@@ -232,10 +299,24 @@ class FleetAggregator:
                 self._slab[h] = 0.0
                 self._ts_rows[h] = 0.0
                 self._valid[h] = True
+                self._staged_full[h] = False
                 skipped.append(h)
                 self.stats.dead_hosts += int(have[h])
                 continue
             skip = max(0, int(round((lasts[h] - t_common) / period)))
+            # O(delta) staging first: a row whose previous stage was a
+            # full clean window is reused untouched (seqlock sequence
+            # unchanged) or left-shifted + topped up with only the new
+            # ticks — byte-identical to the full restage it replaces,
+            # falling back to it on any raggedness, race, or gap
+            staged, r0 = self._stage_delta(h, a, skip, int(counts[h]),
+                                           int(seqs[h]), t_common, period)
+            retries += r0
+            if staged:
+                valid[h] = T
+                if ref_host < 0 or T > valid[ref_host]:
+                    ref_host = h
+                continue
             # full-window hosts (the steady state) stage straight into
             # their slab row — ONE bounded copy out of the ring; the
             # scratch detour only happens for ragged/trimmed rows
@@ -254,6 +335,7 @@ class FleetAggregator:
             if k < self.min_samples:
                 self._slab[h] = 0.0
                 self._valid[h] = True
+                self._staged_full[h] = False
                 skipped.append(h)
                 continue
             row = self._slab[h]
@@ -278,6 +360,14 @@ class FleetAggregator:
             # per-cell validity: the agent marks failed/backoff-skipped
             # collectors' channels NaN, so finiteness IS the delivery mask
             np.isfinite(row, out=self._valid[h])
+            # only a full clean direct window seeds the next round's
+            # delta path — trimmed/backfilled rows must restage
+            full = bool(direct and k == T)
+            self._staged_full[h] = full
+            if full:
+                self._staged_seq[h] = int(seqs[h])
+                self._staged_last[h] = float(self._ts_rows[h, -1])
+            self.stats.full_restages += 1
             if ref_host < 0 or k > valid[ref_host]:
                 ref_host = h
 
@@ -346,6 +436,9 @@ class FleetAggregator:
             if snap.valid_mask is not None:
                 snap.valid_mask[h] = True   # zeros are deliberate quiet
             snap.masked.append(int(h))
+            # the staged row was just overwritten in place — it can no
+            # longer seed a delta read; force a full restage next round
+            self._staged_full[h] = False
         self.stats.masked_hosts += len(snap.masked)
         T = self.window_n
         vm = snap.valid_mask

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import confidence as conf_mod
+from repro.core import rolling
 from repro.core import sanitize as sanitize_mod
 from repro.core.engine import (
     MIN_BASELINE_N, EngineConfig, evidence_layout,
@@ -132,7 +133,8 @@ class FleetMonitor:
                  budget_s: Optional[float] = None,
                  shed_after: int = 2,
                  rearm_after: int = 3,
-                 rca_top_k: Optional[int] = None):
+                 rca_top_k: Optional[int] = None,
+                 incremental: bool = True):
         self.cfg = config or EngineConfig()
         self.use_kernels = use_kernels
         self.persistent_threshold = persistent_threshold
@@ -149,6 +151,18 @@ class FleetMonitor:
         #: columnar fast path: one streaming-detect dispatch + f32 gather;
         #: False = seed spike-dispatch + f64 detect_rows replay (oracle)
         self.fast_detect = fast_detect
+        # incremental O(delta) streaming moments (core/rolling.py): the
+        # fast path's baseline moments come from persistent per-(host,
+        # block) state instead of an O(rows * bn) direct pass each round.
+        # Only engaged on clean on-grid rounds; masked/chaos rounds,
+        # reset_host, and checkpoint restore cold-invalidate the affected
+        # rows (they rebuild from scratch on the next clean round), and a
+        # periodic exact re-anchor bitwise-proves the carried state
+        # (``fleet/incremental_parity``).  ``incremental=False`` restores
+        # the direct per-round moment pass (the PR 9 behaviour) — the
+        # bench's cold baseline.
+        self._inc = (rolling.IncrementalMoments(cap_ticks=self.cfg.baseline_n)
+                     if (fast_detect and incremental) else None)
         self._strikes: Dict[int, int] = {}
         # telemetry quarantine (hysteresis): a host whose latency-channel
         # invalid fraction exceeds `enter_frac` for `enter_rounds`
@@ -270,6 +284,10 @@ class FleetMonitor:
         self._bad_streak.pop(h, None)
         self._clean_streak.pop(h, None)
         self._quar_backoff.pop(h, None)
+        if self._inc is not None:
+            # the replacement agent's ring shares no history with the old
+            # one — its cached moment blocks are another process's data
+            self._inc.invalidate([h])
 
     def _update_budget(self, round_cost_s: float) -> None:
         """Advance the deadline hysteresis one round."""
@@ -331,6 +349,11 @@ class FleetMonitor:
         self._degraded = degraded
         self.shed_rounds = shed
         self.deferred_rca = deferred
+        if self._inc is not None:
+            # incremental moments are deliberately NOT serialized
+            # (checkpoint bytes stay flat); a restored monitor starts
+            # cold and its first clean round re-anchors from scratch
+            self._inc.invalidate_all()
 
     # ------------------------------------------------------------- fleet RCA
     def diagnose_fleet(self, ts: np.ndarray, host_data: np.ndarray,
@@ -391,9 +414,10 @@ class FleetMonitor:
         bn = min(bn, T - wn)
         if bn < MIN_BASELINE_N:
             return self._quiet_round(hosts, extra_cost_s)
+        tick_end = self._tick_end(ts, T)
         t_detect = time.perf_counter()
         scores, cand, onset_rel, qhosts = self._detect_round(
-            host_data, vfull, li, T, wn, bn)
+            host_data, vfull, li, T, wn, bn, tick_end=tick_end)
         stage = {"detect": time.perf_counter() - t_detect}
 
         def evidence_for(geom: "EvidenceGeometry", rca_hosts: np.ndarray,
@@ -422,12 +446,41 @@ class FleetMonitor:
             stage_seconds={"detect": 0.0, "short_baseline_skip": 0.0},
             degraded=self._degraded)
 
+    def _tick_end(self, ts: np.ndarray, T: int) -> Optional[int]:
+        """Exclusive absolute tick index of the round's newest sample.
+
+        The incremental moment cache is keyed to the absolute 100 Hz tick
+        grid, so the round's timestamps must sit on it: the newest sample
+        must round cleanly to a tick index and the window span must equal
+        ``T - 1`` tick periods (no dropped ticks, no clock jumps).  Any
+        off-grid round returns None — the detect stage then takes the
+        direct moment pass and the cache is left untouched, so irregular
+        wall clocks degrade to PR 9 behaviour instead of mis-anchoring.
+        """
+        if self._inc is None or len(ts) < 2:
+            return None
+        rate = self.cfg.rate_hz
+        e_f = float(ts[-1]) * rate
+        e = round(e_f)
+        span = (float(ts[-1]) - float(ts[0])) * rate
+        if abs(e_f - e) > 0.25 or abs(span - (T - 1)) > 0.25:
+            return None
+        return int(e) + 1
+
+    def incremental_stats(self) -> Optional[dict]:
+        """Counters of the incremental moment state (None when the
+        direct moment pass is in use): rounds, re-anchors, the parity
+        bit, and cache traffic — surfaced for ops dashboards and the
+        ``fleet/incremental_*`` bench rows."""
+        return None if self._inc is None else self._inc.stats()
+
     def _detect_round(self, host_data: np.ndarray,
                       vfull: Optional[np.ndarray], li: int,
                       T: int, wn: int, bn: int,
                       force_oracle: bool = False, device=None,
                       base: int = 0,
                       quar: Optional[np.ndarray] = None,
+                      tick_end: Optional[int] = None,
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                  np.ndarray]:
         """Layer-2 detection + telemetry quarantine over the latency tail.
@@ -448,7 +501,17 @@ class FleetMonitor:
         ``device`` pins the detect dispatch to the shard's mesh device,
         and ``quar`` substitutes precomputed quarantine decisions so a
         shard re-visited for oracle forcing does not advance the
-        hysteresis twice."""
+        hysteresis twice.
+
+        ``tick_end`` (from :meth:`_tick_end`) anchors the incremental
+        moment cache to the absolute tick grid.  On a clean round the
+        baseline moments come from :class:`~repro.core.rolling.
+        IncrementalMoments` at O(delta); a masked/forced-oracle round
+        routes through the masked f64 oracle instead *and invalidates*
+        the visited rows' incremental state (their slab may carry
+        masked/zeroed cells, so carried blocks are no longer trusted) —
+        which also means an oracle re-visit of a shard never advances
+        the moment state twice."""
         hosts = host_data.shape[0]
         lat = host_data[:, li, :]
         # telemetry quarantine: invalid fraction of the latency channel
@@ -475,11 +538,18 @@ class FleetMonitor:
             # candidate re-slice.  A masked round routes through this call
             # on BOTH detect paths — the mask branch IS the f64 oracle, so
             # fast and oracle stay trivially byte-identical under chaos.
+            moments = None
+            if self._inc is not None:
+                if lvt is None and not force_oracle and tick_end is not None:
+                    moments = self._inc.moments(
+                        lat[:, T - wn - bn:T], tick_end, wn, bn, base=base)
+                else:
+                    self._inc.invalidate(np.arange(base, base + hosts))
             fire, scores, onset_all = detect_ops.detect_hosts_slab(
                 lat[:, T - wn - bn:T], wn, bn,
                 self.cfg.threshold, self.cfg.persistence,
                 use_kernel=self.use_kernels, valid=lvt,
-                force_oracle=force_oracle, device=device)
+                force_oracle=force_oracle, device=device, moments=moments)
             if qhosts.size:
                 fire[qhosts] = False
                 scores[qhosts] = 0.0

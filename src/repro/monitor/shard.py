@@ -409,9 +409,10 @@ class ShardedFleetMonitor(FleetMonitor):
         stage: Dict[str, float] = {"detect": 0.0}
         geom = None
         dims: Optional[Tuple[int, int, int]] = None  # (C, T) + wn, bn
+        tick_end: Optional[int] = None  # one grid anchor for every shard
 
         def visit(s: int, force_oracle: bool) -> None:
-            nonlocal geom, dims
+            nonlocal geom, dims, tick_end
             a, b = plan.bounds[s]
             slab, val = provider(s)
             slab = np.asarray(slab)
@@ -426,6 +427,7 @@ class ShardedFleetMonitor(FleetMonitor):
                     raise _ShortBaseline
                 dims = (T, wn, bn)
                 geom = self._evidence_geometry(channels, li, T, wn, bn)
+                tick_end = self._tick_end(ts, T)
             T, wn, bn = dims
             if slab.shape[2] != T:
                 raise ValueError(f"shard {s} T={slab.shape[2]} vs {T}")
@@ -441,10 +443,14 @@ class ShardedFleetMonitor(FleetMonitor):
                 vfull is not None
                 and not vfull[:, li, T - wn - bn:T].all())
             t0 = time.perf_counter()
+            # base=a keys the incremental moment rows (and quarantine
+            # state) by absolute host id; a forced-oracle re-visit
+            # invalidates rather than advances them, so a shard visited
+            # twice in one round cannot double-advance the moment state
             scores, cand, onset_rel, qloc = self._detect_round(
                 slab, vfull, li, T, wn, bn,
                 force_oracle=force_oracle, device=self.devices[s],
-                base=a, quar=quar_saved[s])
+                base=a, quar=quar_saved[s], tick_end=tick_end)
             stage["detect"] += time.perf_counter() - t0
             if quar_saved[s] is None:
                 qmask = np.zeros(b - a, bool)

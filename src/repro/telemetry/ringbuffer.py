@@ -332,6 +332,33 @@ class MultiChannelRing:
                 self.torn_giveups += 1
                 return 0, -np.inf
 
+    def watermark(self, max_retries: int = 1000,
+                  ) -> Tuple[int, int, float]:
+        """Consistent ``(seq, count, newest timestamp)`` — :meth:`peek`
+        plus the seqlock sequence the snapshot was taken under.
+
+        The sequence is the ring's cheapest change detector: it advances
+        by exactly two per completed write, so a reader that stashed
+        ``seq`` can later conclude "nothing was pushed since" from one
+        integer compare — the aggregator's delta-staging uses this to
+        skip re-reading (and re-validating) a host window that cannot
+        have changed.  Gives up like :meth:`peek` with ``(-1, 0, -inf)``
+        after ``max_retries`` torn attempts.
+        """
+        retries = 0
+        while True:
+            s0 = self.read_begin()
+            cnt = self._count
+            last = (float(self._ts[(self._head - 1) % self.capacity])
+                    if cnt else -np.inf)
+            if not self.read_retry(s0):
+                return int(s0), cnt, last
+            self.torn_retries += 1
+            retries += 1
+            if retries >= max_retries:
+                self.torn_giveups += 1
+                return -1, 0, -np.inf
+
     def window(self, n: int, copy: bool = True, with_seq: bool = False,
                ):
         """Newest ``n`` columns, chronological: (ts[n], data[C, n]).

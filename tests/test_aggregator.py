@@ -227,3 +227,65 @@ def test_channel_layout_mismatch_rejected():
     a2 = TelemetryAgent([sim], rate_hz=100.0, history_s=60.0)
     with pytest.raises(ValueError):
         FleetAggregator([a1, a2], window_s=10.0)
+
+
+# --------------------------------------------------- delta-read staging
+
+def _force_full(agg):
+    """Disable the delta fast path for one assemble (bench/test trick)."""
+    agg._staged_full[:] = False
+
+
+def _snap_state(agg):
+    return (agg._slab.copy(), agg._ts_rows.copy(), agg._valid.copy())
+
+
+def test_delta_restage_bitwise_equals_full_restage():
+    """Seqlock-watermark delta reads (including ring wrap-around and
+    unchanged-seq skips) must stage a slab bitwise-identical to a full
+    restage of the same rings — every round, every buffer."""
+    _, agents_a = _fleet(4, bad_host=1, history_s=20.0)
+    _, agents_b = _fleet(4, bad_host=1, history_s=20.0)
+    a = FleetAggregator(agents_a, window_s=15.0)
+    b = FleetAggregator(agents_b, window_s=15.0)
+    t = 0.0
+    # dt=0 -> unchanged-seq skip; tiny dt -> 1-tick delta; 19.99 ->
+    # nearly a full ring of fresh ticks; by t=70 the 20 s rings have
+    # wrapped 3 times over
+    schedule = [18.0, 0.0, 0.37, 1.0, 5.0, 19.99, 0.01, 0.0, 0.5,
+                19.99, 0.25, 5.0]
+    for dt in schedule:
+        t += dt
+        a.run_virtual(t - dt, t)
+        b.run_virtual(t - dt, t)
+        _force_full(b)
+        sa, sb = a.assemble(), b.assemble()
+        np.testing.assert_array_equal(sa.slab, sb.slab)
+        np.testing.assert_array_equal(sa.ts, sb.ts)
+        assert list(sa.valid) == list(sb.valid)
+        for x, y in zip(_snap_state(a), _snap_state(b)):
+            np.testing.assert_array_equal(x, y)
+    assert a.stats.delta_reads > 0
+    assert a.stats.unchanged_skips > 0
+    assert a.stats.full_restages < len(schedule) * 4
+    assert b.stats.delta_reads == 0
+    assert b.stats.full_restages == len(schedule) * 4
+
+
+def test_restart_agent_voids_staged_row():
+    _, agents = _fleet(3, bad_host=0, history_s=30.0)
+    agg = FleetAggregator(agents, window_s=20.0)
+    agg.run_virtual(0.0, 25.0)
+    agg.assemble()
+    agg.run_virtual(25.0, 25.5)
+    agg.assemble()
+    assert agg.stats.delta_reads >= 1
+    assert agg._staged_full[1]
+    agg.restart_agent(1)
+    assert not agg._staged_full[1]
+    # the restarted host's next row is a full restage, others may delta
+    fr = agg.stats.full_restages
+    agg.run_virtual(25.5, 26.0)
+    snap = agg.assemble()
+    assert agg.stats.full_restages > fr
+    assert snap.slab.shape[0] == 3

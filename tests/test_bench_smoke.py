@@ -137,3 +137,21 @@ def test_eval_family_smoke():
     assert vals["eval/pred_parity"] == 1.0
     assert vals["eval/store_pred_parity"] == 1.0
     assert vals["eval/slice_ops_store"] < vals["eval/slice_ops_per_event"]
+
+
+@pytest.mark.bench_smoke
+def test_incremental_family_smoke():
+    """Incremental streaming-moment rows at tiny sizes: the CI-gated
+    bitwise parity bit (re-anchor compare, chaos invalidation, verdict
+    fingerprints vs the from-scratch monitor), plus finite speedup /
+    re-anchor-cost / round-budget rows.  The speedup VALUE is only
+    asserted finite here — at B=8 the python dispatch overhead dominates;
+    the >= 1.5x quiet-fleet claim is recorded by the full bench run at
+    B=256 (BENCH_fleet.json)."""
+    rows = fleetbench.incremental_rows(batch_sizes=(8,), shard_batch=0)
+    _check(rows, "fleet/incremental")
+    vals = dict((n, v) for n, v, _ in rows)
+    assert vals["fleet/incremental_parity"] == 1.0
+    assert vals["fleet/incremental_speedup/B8"] > 0
+    assert vals["fleet/incremental_reanchor_s"] > 0
+    assert 0 < vals["fleet/incremental_round_cpu_frac/B8"] < 1.0

@@ -546,3 +546,48 @@ def test_session_stats_roundtrip_in_checkpoint(tmp_path):
     assert payload["stats"]["rounds"] == 4
     assert payload["stats"]["checkpoints_written"] == 0  # pre-save snapshot
     assert dataclasses.asdict(sess.stats)["checkpoints_written"] == 1
+
+
+def test_restore_cold_invalidates_incremental_moments(tmp_path):
+    """Incremental moments are deliberately NOT serialized: the
+    checkpoint stays flat, a warm restore lands cold, and the first
+    post-restore round is a forced from-scratch re-anchor — while the
+    replayed verdict stream stays byte-identical (replay parity)."""
+    ts, slab, channels, ticks = _fleet_windows()
+    path = os.path.join(tmp_path, "m.ckpt")
+
+    base = _drive(MonitorSession(FleetMonitor(use_kernels=False), channels),
+                  ts, slab, ticks)
+
+    sess = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    got = _drive(sess, ts, slab, ticks[:4])
+    st = sess.monitor.incremental_stats()
+    assert st is not None and st["rounds"] >= 1    # state was warm
+    # flat checkpoint: no moment arrays ride along
+    payload = sess.monitor.state_dict()
+    assert not any("moment" in k or "rolling" in k for k in payload)
+    sess.save(path)
+
+    sess2 = MonitorSession(FleetMonitor(use_kernels=False), channels)
+    assert sess2.restore(path) is True
+    inc2 = sess2.monitor._inc
+    assert inc2 is not None and (inc2._bid == -1).all()  # restored cold
+    got += _drive(sess2, ts, slab, ticks, skip=set(range(4)),
+                  replay_from=4)
+    st2 = sess2.monitor.incremental_stats()
+    assert st2["rounds"] >= 1
+    assert st2["parity"] == 1.0
+    assert [v.sig() for v in got] == [v.sig() for v in base]
+
+
+def test_load_state_dict_invalidates_warm_moments():
+    """Restoring INTO an already-warm monitor must drop its carried
+    moment cache — restored verdict state and stale moment state may
+    not mix."""
+    ts, slab, channels, ticks = _fleet_windows()
+    mon = FleetMonitor(use_kernels=False)
+    for hi in ticks[:3]:
+        mon.diagnose_fleet(ts[:hi], slab[:, :, :hi], channels)
+    assert (mon._inc._bid >= 0).any()              # warm cache
+    mon.load_state_dict(mon.state_dict())
+    assert (mon._inc._bid == -1).all()             # wiped on restore

@@ -202,6 +202,7 @@ def test_check_restart_rows():
 def test_check_bench_parity_rows():
     good = [("fleet/detect_parity/B8", 1.0, ""),
             ("fleet/shard_parity", 1.0, ""),
+            ("fleet/incremental_parity", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),
             ("eval/store_pred_parity", 1.0, ""),
             ("eval/sweep_parity", 1.0, "")]
@@ -209,7 +210,7 @@ def test_check_bench_parity_rows():
     bad = regress.check_bench_parity(
         [("fleet/detect_parity/B8", 0.5, "")] + good[1:])
     assert any("detect_parity" in m for m in bad)
-    missing = regress.check_bench_parity(good[:3] + good[4:])
+    missing = regress.check_bench_parity(good[:4] + good[5:])
     assert any("store_pred_parity" in m for m in missing)
 
 
@@ -219,6 +220,7 @@ def test_tampered_shard_parity_fails():
     must a run that silently stops emitting the row."""
     rows = [("fleet/detect_parity/B8", 1.0, ""),
             ("fleet/shard_parity", 0.0, ""),
+            ("fleet/incremental_parity", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),
             ("eval/store_pred_parity", 1.0, ""),
             ("eval/sweep_parity", 1.0, "")]
@@ -232,13 +234,14 @@ def test_tampered_sweep_parity_fails():
     """The slab detection sweep's byte-exact bit is gated: a drifted
     sweep (events or timestamps off the per-row oracle) must fail CI."""
     rows = [("fleet/detect_parity/B8", 1.0, ""),
+            ("fleet/incremental_parity", 1.0, ""),
             ("eval/pred_parity", 1.0, ""),
             ("eval/store_pred_parity", 1.0, ""),
             ("eval/sweep_parity", 0.5, "")]
     bad = regress.check_bench_parity(rows)
     assert any("eval/sweep_parity" in m for m in bad)
     # and a run that silently stops emitting the row fails too
-    gone = regress.check_bench_parity(rows[:3])
+    gone = regress.check_bench_parity(rows[:4])
     assert any("eval/sweep_parity" in m for m in gone)
 
 
@@ -279,3 +282,42 @@ def test_cooldown_constant_single_definition():
     sess = MonitorSession(FleetMonitor(cfg, use_kernels=False),
                           ["coll_allreduce_ms"])
     assert sess.cooldown_s == cfg.cooldown_s
+
+
+def test_tampered_incremental_parity_fails():
+    """The incremental-vs-from-scratch moment bit is gated: a carried
+    state that drifts from the re-anchor rebuild (or a verdict split
+    against the direct monitor) must fail CI, and so must a run that
+    silently stops emitting the row."""
+    rows = [("fleet/detect_parity/B8", 1.0, ""),
+            ("fleet/shard_parity", 1.0, ""),
+            ("fleet/incremental_parity", 0.0, ""),
+            ("eval/pred_parity", 1.0, ""),
+            ("eval/store_pred_parity", 1.0, ""),
+            ("eval/sweep_parity", 1.0, "")]
+    bad = regress.check_bench_parity(rows)
+    assert any("fleet/incremental_parity" in m and "0.0" in m for m in bad)
+    gone = regress.check_bench_parity(rows[:2] + rows[3:])
+    assert any("no row matched fleet/incremental_parity" in m
+               for m in gone)
+
+
+def test_committed_bench_artifact_gated():
+    """The committed BENCH_fleet.json is validated too: a hand-edited
+    parity value or a deleted parity row fails the gate even when this
+    commit's code is healthy."""
+    with open(os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_fleet.json")) as f:
+        doc = json.load(f)
+    assert regress.check_committed_bench(doc, label="BENCH_fleet.json") \
+        == []
+    tampered = copy.deepcopy(doc)
+    tampered["fleet/incremental_parity"]["value"] = 0.5
+    bad = regress.check_committed_bench(tampered, label="BENCH_fleet.json")
+    assert any("BENCH_fleet.json" in m and "incremental_parity" in m
+               for m in bad)
+    removed = copy.deepcopy(doc)
+    del removed["fleet/incremental_parity"]
+    gone = regress.check_committed_bench(removed, label="BENCH_fleet.json")
+    assert any("no row matched fleet/incremental_parity" in m
+               for m in gone)

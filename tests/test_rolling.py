@@ -89,3 +89,151 @@ def test_diagnose_no_history_uses_preonset_baseline():
     if diags:   # evidence scores must be finite and the verdict sane
         for rc in diags[0].ranked:
             assert np.isfinite(rc.confidence)
+
+
+# ----------------------------------------- incremental streaming moments
+from repro.core.rolling import IncrementalMoments  # noqa: E402
+from repro.core import spike as spike_mod  # noqa: E402
+
+
+def _direct_moments(tail, wn, bn):
+    """The detect path's direct f64 pass over the baseline columns."""
+    base = np.asarray(tail[:, :bn], np.float64)
+    mu = base.mean(axis=1)
+    sd = np.maximum(base.std(axis=1),
+                    np.maximum(spike_mod.SIGMA_FLOOR_ABS,
+                               spike_mod.SIGMA_FLOOR_REL * np.abs(mu)))
+    return mu, sd
+
+
+def test_incremental_bitwise_equals_from_scratch_property():
+    """Seeded random schedules: appends of any delta (0, sub-block,
+    multi-block), window/baseline growth, per-row invalidation, circular
+    slot wrap-around and periodic re-anchors — every round's (mu, sd)
+    must be BITWISE equal to a cold instance fed the same slab, and
+    numerically equal to the direct pass."""
+    rng = np.random.default_rng(4207)
+    n, total = 13, 9000
+    x = (rng.standard_normal((n, total)) * 3.0 + 1.5).astype(np.float32)
+    base_off = 5                      # rows live at global ids 5..18
+    warm = IncrementalMoments(block=64, reanchor_rounds=5, cap_ticks=1400)
+    e = 1800
+    wn, bn = 137, 1100
+    for rnd in range(48):
+        e = min(total, e + int(rng.choice([0, 1, 7, 64, 130, 400])))
+        if rng.random() < 0.15:       # warmup growth: bounds change only
+            wn = int(rng.choice([137, 200]))
+            bn = int(rng.choice([1100, 1300, 1400]))
+        if rng.random() < 0.2:
+            warm.invalidate(base_off
+                            + rng.integers(0, n, size=rng.integers(1, 4)))
+        tail = x[:, e - wn - bn:e]
+        mu_w, sd_w = warm.moments(tail, e, wn, bn, base=base_off)
+        cold = IncrementalMoments(block=64, reanchor_rounds=0)
+        mu_c, sd_c = cold.moments(tail, e, wn, bn)
+        assert np.array_equal(mu_w, mu_c), rnd
+        assert np.array_equal(sd_w, sd_c), rnd
+        mu_d, sd_d = _direct_moments(tail, wn, bn)
+        np.testing.assert_allclose(mu_w, mu_d, rtol=1e-10, atol=1e-9)
+        np.testing.assert_allclose(sd_w, sd_d, rtol=1e-7, atol=1e-9)
+    st = warm.stats()
+    assert st["parity"] == 1.0 and st["parity_failures"] == 0
+    assert st["reanchors"] >= 8                  # cadence actually ran
+    assert st["forced_invalidations"] > 0        # invalidation exercised
+    assert st["blocks_cached"] > st["blocks_computed"] // 4
+
+
+def test_incremental_delta_round_is_o_delta():
+    """A round appending less than one block recomputes at most the two
+    partial-adjacent blocks per row, not the whole baseline."""
+    inc = IncrementalMoments(block=64, reanchor_rounds=0)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((7, 5000)).astype(np.float32)
+    wn, bn = 200, 2000
+    inc.moments(x[:, 2800 - wn - bn:2800], 2800, wn, bn)
+    first = inc.last_round_computed
+    assert first >= 7 * (bn // 64 - 2)           # cold build did the work
+    inc.moments(x[:, 2830 - wn - bn:2830], 2830, wn, bn)
+    assert inc.last_round_computed <= 7 * 2      # delta round did not
+
+
+def test_reanchor_detects_and_repairs_corruption():
+    """Perturbing one cached f64 sum must trip the parity bit on the
+    next re-anchor, and the adopted rebuild must repair the state."""
+    inc = IncrementalMoments(block=64, reanchor_rounds=0)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((5, 4000)).astype(np.float32)
+    wn, bn = 100, 1500
+    inc.moments(x[:, 3000 - wn - bn:3000], 3000, wn, bn)
+    r, slot = 2, int(np.flatnonzero(inc._bid[2] >= 0)[3])
+    inc._sum[r, slot] += 1.0                     # simulated corruption
+    inc.reanchor_every = 1                       # next round re-anchors
+    inc.rounds = 0
+    mu, sd = inc.moments(x[:, 3000 - wn - bn:3000], 3000, wn, bn)
+    assert inc.parity_failures >= 1 and inc.parity == 0.0
+    cold = IncrementalMoments(block=64, reanchor_rounds=0)
+    mu_c, sd_c = cold.moments(x[:, 3000 - wn - bn:3000], 3000, wn, bn)
+    assert np.array_equal(mu, mu_c) and np.array_equal(sd, sd_c)
+
+
+def test_monitor_masked_round_invalidates_then_rebuilds():
+    """Chaos interplay at monitor level: a masked round forces per-host
+    invalidation (oracle verdicts, no incremental advance), the next
+    clean round rebuilds from scratch, and every verdict matches a
+    monitor running the direct pass."""
+    from benchmarks.fleetbench import _make_fleet
+    from repro.monitor.fleet import FleetMonitor
+    from repro.monitor.shard import verdict_fingerprint
+
+    ts, data, channels = _make_fleet(8, bad_host=3, seed=41)
+    li = list(channels).index("coll_allreduce_ms")
+    T = data.shape[2]
+    warm = FleetMonitor(use_kernels=False)
+    cold = FleetMonitor(use_kernels=False, incremental=False)
+    assert warm.incremental_stats() is not None
+    assert cold.incremental_stats() is None
+    for rnd, tk in enumerate((T - 150, T - 75, T)):
+        vmask = None
+        if rnd == 1:
+            vmask = np.ones((8, len(channels), tk), bool)
+            vmask[4, li, -120:] = False
+        a = warm.diagnose_fleet(ts[:tk], data[:, :, :tk], channels,
+                                valid=vmask)
+        b = cold.diagnose_fleet(ts[:tk], data[:, :, :tk], channels,
+                                valid=vmask)
+        assert verdict_fingerprint(a) == verdict_fingerprint(b), rnd
+        st = warm.incremental_stats()
+        if rnd == 1:
+            assert st["forced_invalidations"] == 8    # every host dropped
+        if rnd == 2:
+            assert st["last_round_rebuilt_rows"] == 8  # forced re-anchor
+
+
+def test_monitor_reset_host_invalidates_rows():
+    from benchmarks.fleetbench import _make_fleet
+    from repro.monitor.fleet import FleetMonitor
+
+    ts, data, channels = _make_fleet(6, bad_host=2, seed=9)
+    mon = FleetMonitor(use_kernels=False)
+    mon.diagnose_fleet(ts, data, channels)
+    before = mon._inc.forced_invalidations
+    mon.reset_host(4)
+    assert mon._inc.forced_invalidations == before + 1
+    assert (mon._inc._bid[4] == -1).all()
+
+
+def test_tick_end_grid_guards():
+    """Off-grid timestamps (skew, dropped ticks) must disable the
+    incremental anchor — the round falls back to the direct pass."""
+    from repro.monitor.fleet import FleetMonitor
+
+    mon = FleetMonitor(use_kernels=False)
+    rate = mon.cfg.rate_hz
+    ts = np.arange(4000) / rate
+    assert mon._tick_end(ts, 4000) == 4000
+    assert mon._tick_end(ts + 0.2, 4000) == 4000 + int(0.2 * rate)
+    assert mon._tick_end(ts + 0.003, 4000) is None       # off-grid edge
+    assert mon._tick_end(np.delete(ts, 100), 3999) is None  # dropped tick
+    assert mon._tick_end(ts[:1], 1) is None              # too short
+    direct = FleetMonitor(use_kernels=False, incremental=False)
+    assert direct._tick_end(ts, 4000) is None            # state disabled

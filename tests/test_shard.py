@@ -353,3 +353,64 @@ def test_session_restore_plan_mismatch_is_counted_cold_start(tmp_path):
         assert cold.restore(path) is False
     assert cold.stats.checkpoints_rejected == 1
     assert cold.monitor._strikes == {}
+
+
+# ----------------------------------------- incremental streaming moments
+
+def test_incremental_sharded_parity_growing_rounds():
+    """Per-shard incremental state keyed by absolute host id (base=
+    offsets): fingerprints match the single-slab incremental monitor
+    round for round across appended-delta rounds, a masked chaos round
+    (forced invalidation + oracle), and the rebuild round after it."""
+    ts, data, channels = _make_fleet(48, bad_host=5, seed=3)
+    li = list(channels).index(LAT)
+    T = data.shape[2]
+    mono, shard = _pair()
+    assert shard._inc is not None     # incremental on by default
+    for rnd, tk in enumerate((T - 240, T - 160, T - 80, T)):
+        vmask = None
+        if rnd == 2:
+            vmask = np.ones((48, len(channels), tk), bool)
+            vmask[27, li, -100:] = False     # corruption in shard 1
+        a = mono.diagnose_fleet(ts[:tk], data[:, :, :tk], channels,
+                                valid=vmask)
+        b = shard.diagnose_fleet(ts[:tk], data[:, :, :tk], channels,
+                                 valid=vmask)
+        assert verdict_fingerprint(a) == verdict_fingerprint(b), rnd
+    assert _state_no_plan(shard) == mono.state_dict()
+    st = shard.incremental_stats()
+    assert st["forced_invalidations"] >= 48      # chaos dropped all rows
+    assert st["parity"] == 1.0
+
+
+def test_incremental_sharded_provider_revisit_invalidates():
+    """Provider path with late-surfacing corruption: fast-path shards
+    are re-visited through the oracle, which must invalidate (not
+    advance) their incremental rows — the next clean round rebuilds."""
+    ts, data, channels = _make_fleet(48, bad_host=5, seed=3)
+    li = list(channels).index(LAT)
+    _, shard = _pair()
+
+    def provider_clean(s):
+        a, b = shard.plan.bounds[s]
+        return data[a:b], None
+
+    def provider_corrupt(s):
+        a, b = shard.plan.bounds[s]
+        v = np.ones_like(data[a:b], bool)
+        if s == 2:                    # last shard reports corruption
+            v[1, li, -100:] = False
+        return data[a:b], v
+
+    shard.diagnose_sharded(ts, provider_clean, channels)
+    assert shard._inc.rounds == shard.plan.n_shards
+    shard.diagnose_sharded(ts, provider_corrupt, channels)
+    # shards that ran the fast path before the corruption surfaced may
+    # have advanced, but the oracle re-visit must wipe every row — no
+    # stale state can survive a round whose verdicts came from the oracle
+    assert (shard._inc._bid[:48] == -1).all()
+    assert shard._inc.forced_invalidations >= 48
+    after = shard._inc.rounds
+    shard.diagnose_sharded(ts, provider_clean, channels)
+    assert shard._inc.rounds == after + shard.plan.n_shards
+    assert shard._inc.parity == 1.0
